@@ -1,0 +1,35 @@
+"""Shared benchmark helpers: timing + CSV output."""
+from __future__ import annotations
+
+import csv
+import os
+import time
+
+import jax
+
+OUT_DIR = os.path.join(os.path.dirname(__file__), "out")
+
+
+def timed(fn, *args, repeat: int = 3, **kwargs):
+    """Returns (result, us_per_call) — best of `repeat` wall times."""
+    fn(*args, **kwargs)  # warmup/compile
+    best = float("inf")
+    result = None
+    for _ in range(repeat):
+        t0 = time.perf_counter()
+        result = fn(*args, **kwargs)
+        result = jax.block_until_ready(result) if hasattr(result, "block_until_ready") \
+            else jax.tree.map(lambda x: x.block_until_ready()
+                              if hasattr(x, "block_until_ready") else x, result)
+        best = min(best, time.perf_counter() - t0)
+    return result, best * 1e6
+
+
+def write_csv(name: str, header, rows):
+    os.makedirs(OUT_DIR, exist_ok=True)
+    path = os.path.join(OUT_DIR, f"{name}.csv")
+    with open(path, "w", newline="") as f:
+        w = csv.writer(f)
+        w.writerow(header)
+        w.writerows(rows)
+    return path

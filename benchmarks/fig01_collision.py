@@ -1,0 +1,45 @@
+"""Fig 1: collision probabilities P_w vs P_{w,q} over w for selected rho,
+validated against Monte-Carlo simulation."""
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.core import probabilities as P
+from repro.core import schemes as S
+from benchmarks._util import timed, write_csv
+
+RHOS = [0.0, 0.25, 0.5, 0.75, 0.9, 0.99]
+WS = np.round(np.geomspace(0.1, 10.0, 25), 4)
+
+
+def run(quick: bool = True):
+    rho = jnp.asarray(RHOS)
+    rows = []
+
+    def grid():
+        return [(w, np.asarray(P.collision_prob_uniform(rho, float(w))),
+                 np.asarray(P.collision_prob_offset(rho, float(w))))
+                for w in WS]
+
+    table, us = timed(grid, repeat=1)
+    for w, pw, pwq in table:
+        for r, a, b in zip(RHOS, pw, pwq):
+            rows.append([w, r, float(a), float(b)])
+    write_csv("fig01_collision", ["w", "rho", "P_w", "P_wq"], rows)
+
+    # paper claim: at rho=0, P_w -> 0.5 while P_wq -> 1 as w grows
+    pw_inf = float(P.collision_prob_uniform(jnp.asarray(0.0), 10.0))
+    pwq_inf = float(P.collision_prob_offset(jnp.asarray(0.0), 10.0))
+
+    # Monte-Carlo validation at (rho=0.5, w=1)
+    key = jax.random.PRNGKey(0)
+    n = 200_000 if quick else 2_000_000
+    z1 = jax.random.normal(key, (n,))
+    z2 = jax.random.normal(jax.random.fold_in(key, 1), (n,))
+    x, y = z1, 0.5 * z1 + np.sqrt(0.75) * z2
+    mc = float(jnp.mean((S.encode_uniform(x, 1.0) == S.encode_uniform(y, 1.0))
+                        .astype(jnp.float32)))
+    th = float(P.collision_prob_uniform(jnp.asarray(0.5), 1.0))
+
+    return [("fig01_grid", us, f"Pw(0,10)={pw_inf:.4f};Pwq(0,10)={pwq_inf:.4f}"),
+            ("fig01_mc", 0.0, f"mc={mc:.5f};theory={th:.5f};err={abs(mc-th):.2e}")]

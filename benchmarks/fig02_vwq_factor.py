@@ -1,0 +1,22 @@
+"""Fig 2: the variance factor V_{w,q} x 4/d^2 — paper: min 7.6797 at
+w/sqrt(d) = 1.6476."""
+import numpy as np
+import jax.numpy as jnp
+
+from repro.core import variance as V
+from benchmarks._util import timed, write_csv
+
+
+def run(quick: bool = True):
+    ws = np.linspace(0.5, 8.0, 1500)
+
+    def curve():
+        return np.asarray([float(V.variance_factor_offset(jnp.asarray(0.0), w))
+                           for w in ws])
+
+    vals, us = timed(curve, repeat=1)
+    i = int(np.argmin(vals))
+    write_csv("fig02_vwq_factor", ["w_over_sqrt_d", "V_wq_times_4_over_d2"],
+              [[w / np.sqrt(2.0), v] for w, v in zip(ws, vals)])
+    return [("fig02_min", us,
+             f"min={vals[i]:.4f}@{ws[i]/np.sqrt(2):.4f};paper=7.6797@1.6476")]

@@ -1,0 +1,19 @@
+"""Fig 3: V_w at rho=0 versus w — paper: minimum pi^2/4 attained w->inf."""
+import numpy as np
+import jax.numpy as jnp
+
+from repro.core import variance as V
+from benchmarks._util import timed, write_csv
+
+
+def run(quick: bool = True):
+    ws = np.geomspace(0.2, 20.0, 200)
+
+    def curve():
+        return np.asarray([float(V.variance_factor_uniform(jnp.asarray(0.0), w))
+                           for w in ws])
+
+    vals, us = timed(curve, repeat=1)
+    write_csv("fig03_vw_rho0", ["w", "V_w_rho0"], list(zip(ws, vals)))
+    return [("fig03_limit", us,
+             f"V_w(0,w=20)={vals[-1]:.6f};pi2_4={np.pi**2/4:.6f}")]

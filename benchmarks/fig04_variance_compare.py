@@ -1,0 +1,31 @@
+"""Fig 4: V_w vs V_{w,q} over w at fixed rho — h_w dominates for w > 2."""
+import numpy as np
+import jax.numpy as jnp
+
+from repro.core import variance as V
+from benchmarks._util import timed, write_csv
+
+RHOS = [0.0, 0.25, 0.5, 0.75, 0.9, 0.99]
+
+
+def run(quick: bool = True):
+    ws = np.geomspace(0.1, 10.0, 60)
+    rho = jnp.asarray(RHOS)
+
+    def grid():
+        return [(w, np.asarray(V.variance_factor_uniform(rho, float(w))),
+                 np.asarray(V.variance_factor_offset(rho, float(w))))
+                for w in ws]
+
+    table, us = timed(grid, repeat=1)
+    rows, wins = [], 0
+    total = 0
+    for w, vw, vq in table:
+        for r, a, b in zip(RHOS, vw, vq):
+            rows.append([w, r, float(a), float(b)])
+            if w > 2:
+                total += 1
+                wins += a < b
+    write_csv("fig04_variance_compare", ["w", "rho", "V_w", "V_wq"], rows)
+    return [("fig04_dominance", us,
+             f"h_w_beats_h_wq_for_w>2:{wins}/{total}")]

@@ -1,0 +1,27 @@
+"""Fig 5: optimum-w curves — V at the per-rho optimal w for h_w / h_{w,q},
+and the ~0.56 threshold where h_w's optimal w exceeds 6 (1 bit suffices)."""
+import numpy as np
+import jax.numpy as jnp
+
+from repro.core.optimal import optimal_w
+from benchmarks._util import timed, write_csv
+
+
+def run(quick: bool = True):
+    rhos = np.linspace(0.01, 0.98, 40 if quick else 160)
+
+    def curves():
+        w_u, v_u = optimal_w(jnp.asarray(rhos), "uniform")
+        w_q, v_q = optimal_w(jnp.asarray(rhos), "offset")
+        return (np.asarray(w_u), np.asarray(v_u),
+                np.asarray(w_q), np.asarray(v_q))
+
+    (w_u, v_u, w_q, v_q), us = timed(curves, repeat=1)
+    write_csv("fig05_optimal_w", ["rho", "w_star_hw", "V_star_hw",
+                                  "w_star_hwq", "V_star_hwq"],
+              np.stack([rhos, w_u, v_u, w_q, v_q], 1).tolist())
+    # threshold: largest rho with w*(h_w) > 6
+    thr = rhos[np.where(w_u > 6)[0]].max() if np.any(w_u > 6) else float("nan")
+    return [("fig05_threshold", us,
+             f"rho_thresh={thr:.3f};paper~0.56;"
+             f"Vstar_ratio@rho0.25={v_q[np.argmin(abs(rhos-0.25))]/v_u[np.argmin(abs(rhos-0.25))]:.2f}")]

@@ -1,0 +1,30 @@
+"""Fig 6: P_{w,2} vs P_w — overlap for w>1, non-monotone in w, equal to
+P_1 at w=0 and w->inf."""
+import numpy as np
+import jax.numpy as jnp
+
+from repro.core import probabilities as P
+from benchmarks._util import timed, write_csv
+
+RHOS = [0.0, 0.25, 0.5, 0.75, 0.9, 0.99]
+
+
+def run(quick: bool = True):
+    ws = np.geomspace(0.05, 8.0, 50)
+    rho = jnp.asarray(RHOS)
+
+    def grid():
+        return [(w, np.asarray(P.collision_prob_2bit(rho, float(w))),
+                 np.asarray(P.collision_prob_uniform(rho, float(w))))
+                for w in ws]
+
+    table, us = timed(grid, repeat=1)
+    rows = []
+    for w, p2, pu in table:
+        for r, a, b in zip(RHOS, p2, pu):
+            rows.append([w, r, float(a), float(b)])
+    write_csv("fig06_p2bit", ["w", "rho", "P_w2", "P_w"], rows)
+    p1 = np.asarray(P.collision_prob_sign(rho))
+    d0 = np.max(np.abs(np.asarray(P.collision_prob_2bit(rho, 1e-4)) - p1))
+    dinf = np.max(np.abs(np.asarray(P.collision_prob_2bit(rho, 50.0)) - p1))
+    return [("fig06_limits", us, f"|P_w2-P_1|@w0={d0:.1e};@winf={dinf:.1e}")]

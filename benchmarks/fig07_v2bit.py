@@ -1,0 +1,37 @@
+"""Figs 7+8: V_{w,2} vs V_w over w at fixed rho, and the per-rho optima —
+the 2-bit scheme matches uniform quantization with only 2 bits."""
+import numpy as np
+import jax.numpy as jnp
+
+from repro.core import variance as V
+from repro.core.optimal import optimal_w
+from benchmarks._util import timed, write_csv
+
+RHOS = [0.0, 0.25, 0.5, 0.75, 0.9, 0.99]
+
+
+def run(quick: bool = True):
+    ws = np.geomspace(0.05, 8.0, 50)
+    rho = jnp.asarray(RHOS)
+
+    def grid():
+        return [(w, np.asarray(V.variance_factor_2bit(rho, float(w))),
+                 np.asarray(V.variance_factor_uniform(rho, float(w))))
+                for w in ws]
+
+    table, us = timed(grid, repeat=1)
+    rows = []
+    for w, v2, vu in table:
+        for r, a, b in zip(RHOS, v2, vu):
+            rows.append([w, r, float(a), float(b)])
+    write_csv("fig07_v2bit", ["w", "rho", "V_w2", "V_w"], rows)
+
+    rhos = np.linspace(0.01, 0.98, 30)
+    w2, v2 = optimal_w(jnp.asarray(rhos), "2bit")
+    wu, vu = optimal_w(jnp.asarray(rhos), "uniform")
+    write_csv("fig08_optima", ["rho", "w_star_2bit", "V_star_2bit",
+                               "w_star_hw", "V_star_hw"],
+              np.stack([rhos, np.asarray(w2), np.asarray(v2),
+                        np.asarray(wu), np.asarray(vu)], 1).tolist())
+    ratio = float(np.max(np.asarray(v2) / np.asarray(vu)))
+    return [("fig07_08", us, f"max_Vstar2bit_over_VstarHw={ratio:.3f}")]

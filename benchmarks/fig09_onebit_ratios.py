@@ -1,0 +1,38 @@
+"""Figs 9+10: variance ratios Var(rho_1)/Var(rho_w) and /Var(rho_{w,2}) —
+how much accuracy 1-bit coding loses, at optimal and at fixed w."""
+import numpy as np
+import jax.numpy as jnp
+
+from repro.core import variance as V
+from repro.core.optimal import optimal_w
+from benchmarks._util import timed, write_csv
+
+
+def run(quick: bool = True):
+    rhos = np.concatenate([np.linspace(0.01, 0.9, 20),
+                           1 - np.geomspace(0.1, 0.005, 12)])
+    rho = jnp.asarray(rhos)
+
+    def compute():
+        v1 = np.asarray(V.variance_factor_sign(rho))
+        _, vu = optimal_w(rho, "uniform")
+        _, v2 = optimal_w(rho, "2bit")
+        fixed = {w: (np.asarray(V.variance_factor_uniform(rho, w)),
+                     np.asarray(V.variance_factor_2bit(rho, w)))
+                 for w in (0.5, 0.75, 1.0, 2.0)}
+        return v1, np.asarray(vu), np.asarray(v2), fixed
+
+    (v1, vu, v2, fixed), us = timed(compute, repeat=1)
+    rows = [[r, v1[i] / vu[i], v1[i] / v2[i]] for i, r in enumerate(rhos)]
+    write_csv("fig09_max_ratios", ["rho", "V1_over_Vw_opt", "V1_over_Vw2_opt"],
+              rows)
+    rows10 = []
+    for w, (vw_f, v2_f) in fixed.items():
+        for i, r in enumerate(rhos):
+            rows10.append([w, r, v1[i] / vw_f[i], v1[i] / v2_f[i]])
+    write_csv("fig10_fixed_ratios", ["w", "rho", "V1_over_Vw", "V1_over_Vw2"],
+              rows10)
+    # paper: at w=0.75, high-similarity ratio V1/V_{w,2} is between 2 and 3
+    hi = np.argmin(np.abs(rhos - 0.95))
+    r_hi = v1[hi] / fixed[0.75][1][hi]
+    return [("fig09_10", us, f"V1_over_Vw2@rho0.95_w0.75={r_hi:.2f};paper:2-3")]

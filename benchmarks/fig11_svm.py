@@ -1,0 +1,87 @@
+"""Figs 11-14: linear SVM on coded random projections.
+
+UCI ARCENE/FARM/URL are unavailable offline; synthetic stand-ins match
+their shape statistics (n, D, sparsity scale, normalized rows) with
+planted two-class structure (documented in DESIGN.md section 6). The
+qualitative claims under test:
+  (i)   h_w ~ h_{w,2} ~ Orig accuracy at w ~ 0.75-1;
+  (ii)  h_1 noticeably worse;
+  (iii) h_{w,q} degrades vs h_w as w grows (the offset hurts).
+"""
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.core import schemes as S
+from repro.core.sketch import CodedRandomProjection, SketchConfig
+from repro.core.svm import SVMConfig, expand_codes, svm_accuracy, train_linear_svm
+from benchmarks._util import timed, write_csv
+
+DATASETS = {
+    # name: (n_train, n_test, D, class separation)
+    "arcene_like": (100, 100, 10000, 0.5),
+    "farm_like": (600, 600, 8192, 0.32),
+    "url_like": (1500, 1500, 16384, 0.25),
+}
+
+
+def _make_dataset(name, key):
+    n_tr, n_te, d, sep = DATASETS[name]
+    n = n_tr + n_te
+    k1, k2, k3 = jax.random.split(key, 3)
+    mu = jax.random.normal(k1, (d,)) * sep / np.sqrt(d) * 40
+    y = jnp.where(jax.random.uniform(k2, (n,)) < 0.5, 1.0, -1.0)
+    x = jax.random.normal(k3, (n, d)) * (jax.random.uniform(
+        jax.random.fold_in(k3, 1), (1, d)) < 0.3)  # sparse-ish columns
+    x = x + y[:, None] * mu
+    x = x / (jnp.linalg.norm(x, axis=1, keepdims=True) + 1e-9)
+    return (x[:n_tr], y[:n_tr]), (x[n_tr:], y[n_tr:])
+
+
+def _feats(crp, codes):
+    return expand_codes(codes, crp.spec)
+
+
+def run(quick: bool = True):
+    ks = [16, 64, 256] if not quick else [16, 64, 256]
+    wgrid = [0.5, 0.75, 1.0, 2.0]
+    cgrid = [0.1, 1.0]
+    rows, out = [], []
+    names = list(DATASETS) if not quick else ["arcene_like", "url_like"]
+    for name in names:
+        (xtr, ytr), (xte, yte) = _make_dataset(name, jax.random.PRNGKey(hash(name) % 2**30))
+        d = xtr.shape[1]
+        best = {}
+        for k in ks:
+            # Orig: raw projections as features
+            crp0 = CodedRandomProjection(SketchConfig(k=k, scheme="sign"), d)
+            ztr, zte = crp0.project(xtr), crp0.project(xte)
+            ztr = ztr / (jnp.linalg.norm(ztr, axis=1, keepdims=True) + 1e-9)
+            zte = zte / (jnp.linalg.norm(zte, axis=1, keepdims=True) + 1e-9)
+            accs = {}
+            for c in cgrid:
+                w_, b_ = train_linear_svm(ztr, ytr, SVMConfig(c=c, steps=250))
+                accs[c] = float(svm_accuracy(w_, b_, zte, yte))
+            best[("orig", k)] = max(accs.values())
+            rows += [[name, "orig", k, 0.0, c, a] for c, a in accs.items()]
+
+            for scheme in ("uniform", "offset", "2bit", "sign"):
+                wlist = [0.0] if scheme == "sign" else wgrid
+                for w in wlist:
+                    crp = CodedRandomProjection(
+                        SketchConfig(k=k, scheme=scheme, w=max(w, 1e-3)), d)
+                    ftr = _feats(crp, crp.encode_projected(crp0.project(xtr)))
+                    fte = _feats(crp, crp.encode_projected(crp0.project(xte)))
+                    for c in cgrid:
+                        w_, b_ = train_linear_svm(ftr, ytr, SVMConfig(c=c, steps=250))
+                        acc = float(svm_accuracy(w_, b_, fte, yte))
+                        rows.append([name, scheme, k, w, c, acc])
+                        key = (scheme, k)
+                        best[key] = max(best.get(key, 0.0), acc)
+        k_big = ks[-1]
+        out.append((f"fig11_{name}", 0.0,
+                    ";".join(f"{s}@k{k_big}={best.get((s, k_big), 0):.3f}"
+                             for s in ("orig", "uniform", "2bit", "sign", "offset"))))
+    write_csv("fig11_14_svm", ["dataset", "scheme", "k", "w", "C", "test_acc"],
+              rows)
+    return out

@@ -1,0 +1,40 @@
+"""Beyond-paper table: coded-sketch gradient compression — wire bytes per
+sync and reconstruction error per scheme (the paper's coding economics
+applied to DP gradient synchronization; see EXPERIMENTS.md section Perf).
+"""
+import jax
+import jax.numpy as jnp
+
+from repro.core.gradient_compression import GradCompressionConfig, GradCompressor
+from benchmarks._util import timed, write_csv
+
+
+def run(quick: bool = True):
+    g_dim = 1 << 20 if quick else 1 << 24  # ~1M/16M-param gradient
+    tpl = {"g": jnp.zeros((g_dim,))}
+    g = {"g": jax.random.normal(jax.random.PRNGKey(0), (g_dim,))}
+    rows, out = [], []
+    for scheme, w, bits in (("sign", 0.0, 1), ("2bit", 0.75, 2),
+                            ("uniform", 0.75, 4), ("offset", 0.75, 4)):
+        for rate in (4, 8, 16):
+            cfg = GradCompressionConfig(scheme=scheme, w=max(w, 1e-3),
+                                        rate=rate, chunk=4096)
+            comp = GradCompressor(cfg, tpl)
+
+            def sync():
+                return comp.sync_local(g, comp.init_ef(tpl))[0]
+
+            _, us = timed(sync, repeat=1)
+            flat = comp._flatten(g)
+            codes, scales = comp.encode(flat)
+            err = float(jnp.linalg.norm(comp.decode(codes, scales) - flat)
+                        / jnp.linalg.norm(flat))
+            ratio = comp.fp32_bytes() / comp.wire_bytes()
+            rows.append([scheme, rate, comp.wire_bytes(), ratio, err, us])
+    write_csv("grad_compression", ["scheme", "rate", "wire_bytes",
+                                   "fp32_over_wire", "rel_err", "us"], rows)
+    best = min(rows, key=lambda r: r[4])
+    out.append(("grad_compression", best[5],
+                f"best_relerr={best[4]:.3f}@{best[0]}r{best[1]};"
+                f"wire_ratio_up_to={max(r[3] for r in rows):.0f}x"))
+    return out

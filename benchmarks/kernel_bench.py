@@ -1,0 +1,52 @@
+"""Kernel-level economics (paper section 5 processing-cost claim).
+
+CPU timings are of the jnp reference path (this container has no TPU);
+the derived column reports the structural quantities that transfer:
+HBM write-bytes of fused coded projection vs project-then-code, packed
+storage footprint, and collision-count throughput proxy.
+"""
+import jax
+import jax.numpy as jnp
+
+from repro.core.schemes import CodeSpec
+from repro.kernels import ref
+from repro.core import packing as PK
+from benchmarks._util import timed, write_csv
+
+
+def run(quick: bool = True):
+    m, d, k = (2048, 4096, 256) if quick else (8192, 16384, 512)
+    key = jax.random.PRNGKey(0)
+    x = jax.random.normal(key, (m, d), jnp.float32)
+    r = jax.random.normal(jax.random.fold_in(key, 1), (d, k), jnp.float32)
+    spec = CodeSpec("2bit", 0.75)
+
+    fused = jax.jit(lambda x, r: ref.coded_project_ref(x, r, spec))
+    _, us_f = timed(fused, x, r)
+    unfused_proj = jax.jit(lambda x, r: x @ r)
+    _, us_p = timed(unfused_proj, x, r)
+
+    codes = fused(x, r)
+    packf = jax.jit(lambda c: ref.pack_codes_ref(c, 2))
+    packed, us_pack = timed(packf, codes)
+
+    q = codes[:64]
+    coll = jax.jit(ref.collision_counts_ref)
+    _, us_coll = timed(coll, q, codes)
+
+    # structural bytes (TPU model): fused writes int8-scale codes instead
+    # of f32 projections
+    write_f32 = m * k * 4
+    write_codes = m * k * 1          # int8-scale epilogue write
+    write_packed = m * PK.packed_width(k, 2) * 4
+    rows = [
+        ["coded_project_fused", us_f, write_codes],
+        ["project_only", us_p, write_f32],
+        ["pack_2bit", us_pack, write_packed],
+        ["collision_64xM", us_coll, 64 * m * 4],
+    ]
+    write_csv("kernel_bench", ["kernel", "us_per_call", "hbm_write_bytes"], rows)
+    return [("kernel_fused_project", us_f,
+             f"writeback_bytes {write_f32}->{write_packed} "
+             f"({write_f32/write_packed:.0f}x smaller)"),
+            ("kernel_collision", us_coll, f"pairs={64*m}")]

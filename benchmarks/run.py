@@ -1,0 +1,49 @@
+"""Benchmark harness: one module per paper figure/table + system benches.
+
+Prints ``name,us_per_call,derived`` CSV per row (scaffold contract) and
+writes detailed tables to benchmarks/out/*.csv.
+"""
+import argparse
+import importlib
+import sys
+import traceback
+
+MODULES = [
+    "benchmarks.fig01_collision",
+    "benchmarks.fig02_vwq_factor",
+    "benchmarks.fig03_vw_rho0",
+    "benchmarks.fig04_variance_compare",
+    "benchmarks.fig05_optimal_w",
+    "benchmarks.fig06_p2bit",
+    "benchmarks.fig07_v2bit",
+    "benchmarks.fig09_onebit_ratios",
+    "benchmarks.fig11_svm",
+    "benchmarks.kernel_bench",
+    "benchmarks.grad_compression_bench",
+]
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true", help="bigger sizes")
+    ap.add_argument("--only", default="", help="substring filter")
+    args = ap.parse_args()
+    print("name,us_per_call,derived")
+    failed = 0
+    for modname in MODULES:
+        if args.only and args.only not in modname:
+            continue
+        try:
+            mod = importlib.import_module(modname)
+            for name, us, derived in mod.run(quick=not args.full):
+                print(f"{name},{us:.1f},{derived}", flush=True)
+        except Exception:
+            failed += 1
+            print(f"{modname},NaN,ERROR", flush=True)
+            traceback.print_exc(file=sys.stderr)
+    if failed:
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,58 @@
+"""Quick numeric sanity check of core math vs paper's stated constants."""
+import numpy as np
+import jax
+jax.config.update("jax_enable_x64", True)
+import jax.numpy as jnp
+
+from repro.core import probabilities as P
+from repro.core import variance as V
+from scipy import integrate, stats
+
+rho = jnp.asarray([0.0, 0.25, 0.5, 0.75, 0.9, 0.99])
+
+# 1. P_w at rho=0 vs closed series (Eq. 11)
+for w in (0.5, 1.0, 2.0, 6.0):
+    pw = float(P.collision_prob_uniform(jnp.asarray(0.0), w))
+    i = np.arange(0, 40)
+    series = 2 * np.sum((stats.norm.cdf((i + 1) * w) - stats.norm.cdf(i * w)) ** 2)
+    print(f"P_w(rho=0,w={w}): quad={pw:.10f} series={series:.10f} diff={abs(pw-series):.2e}")
+
+# 2. P_w vs scipy dblquad for rho=0.5, w=1
+def joint(x, y, rho):
+    s = np.sqrt(1 - rho**2)
+    return np.exp(-(x*x - 2*rho*x*y + y*y) / (2*s*s)) / (2*np.pi*s)
+tot = 0.0
+for i in range(9):
+    val, _ = integrate.dblquad(lambda y, x: joint(x, y, 0.5), i, i+1, lambda x: i, lambda x: i+1)
+    tot += val
+print(f"P_w(rho=0.5,w=1): ours={float(P.collision_prob_uniform(jnp.asarray(0.5),1.0)):.10f} scipy={2*tot:.10f}")
+
+# 3. V_{w,q} minimum: 7.6797 at w/sqrt(d)=1.6476 (paper Fig 2)
+d = 2.0  # rho = 0
+ws = np.linspace(0.5, 8.0, 4000)
+vals = np.asarray([float(V.variance_factor_offset(jnp.asarray(0.0), w)) * 4 / d**2 for w in ws])
+i = np.argmin(vals)
+print(f"V_wq factor min={vals[i]:.4f} at w/sqrt(d)={ws[i]/np.sqrt(d):.4f}  (paper: 7.6797 @ 1.6476)")
+
+# 4. V_w|rho=0 -> pi^2/4 as w->inf (paper Thm 3 remark)
+for w in (4.0, 8.0, 20.0):
+    print(f"V_w(rho=0,w={w}) = {float(V.variance_factor_uniform(jnp.asarray(0.0), w)):.6f} (limit {np.pi**2/4:.6f})")
+
+# 5. V_1 at rho=0: pi^2 * 1 * .5 * .5 = pi^2/4
+print(f"V_1(rho=0) = {float(V.variance_factor_sign(jnp.asarray(0.0))):.6f}")
+
+# 6. dP/drho analytic vs numeric for all schemes
+eps = 1e-6
+for scheme, w in (("uniform", 1.0), ("offset", 1.5), ("2bit", 0.75), ("sign", 0.0)):
+    for r in (0.1, 0.5, 0.9):
+        num = (float(P.collision_prob(jnp.asarray(r + eps), w, scheme))
+               - float(P.collision_prob(jnp.asarray(r - eps), w, scheme))) / (2 * eps)
+        ana = float(V.dP_drho(jnp.asarray(r), w, scheme))
+        print(f"dP/drho {scheme:8s} w={w} rho={r}: analytic={ana:.8f} numeric={num:.8f} relerr={abs(ana-num)/max(abs(num),1e-12):.2e}")
+
+# 7. P_{w,2} at w=0 and w->inf equals P_1
+for w in (1e-6, 50.0):
+    p2 = np.asarray(P.collision_prob_2bit(rho, w))
+    p1 = np.asarray(P.collision_prob_sign(rho))
+    print(f"P_w2(w={w}) vs P_1 max diff: {np.max(np.abs(p2-p1)):.2e}")
+print("OK")

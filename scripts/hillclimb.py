@@ -1,0 +1,170 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Perf hillclimbing driver (EXPERIMENTS.md section Perf).
+
+Measures named variants of the three chosen cells with the same
+loop-corrected probe methodology as the dry-run, plus the coded-sketch
+gradient-compression comparison (the paper's technique applied to the
+collective term). Results -> hillclimb_results.json.
+
+    PYTHONPATH=src python scripts/hillclimb.py [variant ...]
+"""
+import gc        # noqa: E402
+import json      # noqa: E402
+import sys       # noqa: E402
+import time      # noqa: E402
+from dataclasses import replace  # noqa: E402
+from functools import partial    # noqa: E402
+
+import jax                      # noqa: E402
+import jax.numpy as jnp         # noqa: E402
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from repro import configs as C                                   # noqa: E402
+from repro.launch import roofline as R                           # noqa: E402
+from repro.launch.dryrun import (_probe_measure, analyze,        # noqa: E402
+                                 lower_cell, probe_config)
+from repro.launch.mesh import make_dp_mesh                       # noqa: E402
+from repro.models import lm as L                                 # noqa: E402
+from repro.models.nn import abstract_params                      # noqa: E402
+from repro.optim import AdamWConfig, init_opt_state              # noqa: E402
+from repro.train import make_compressed_train_step               # noqa: E402
+from repro.core.gradient_compression import (                    # noqa: E402
+    GradCompressionConfig, GradCompressor)
+
+OUT = os.path.join(os.path.dirname(__file__), "..", "hillclimb_results.json")
+
+
+def measure(arch, shape, overrides=None, cfg_tf=None, mesh_devices=256):
+    """Full-compile memory + loop-corrected probe metrics for one variant."""
+    cfg0 = C.get_config(arch)
+    cfg_full = cfg_tf(cfg0) if cfg_tf else cfg0
+    t0 = time.monotonic()
+    lowered, meta = lower_cell(arch, shape, False, rules_overrides=overrides,
+                               cfg=cfg_full)
+    rec, _ = analyze(lowered, meta)
+    del lowered
+    gc.collect()
+    _, n_groups, _ = L.layer_kinds(cfg_full)
+    m1 = _probe_measure(arch, shape, False, overrides,
+                        cfg_tf(probe_config(cfg0, 1)) if cfg_tf else probe_config(cfg0, 1))
+    m2 = _probe_measure(arch, shape, False, overrides,
+                        cfg_tf(probe_config(cfg0, 2)) if cfg_tf else probe_config(cfg0, 2))
+
+    def ex(a, b):
+        return max(0.0, a + (n_groups - 1) * (b - a))
+
+    flops = ex(m1["flops"], m2["flops"])
+    bts = ex(m1["bytes"], m2["bytes"])
+    coll = {k: ex(m1["coll"][k], m2["coll"][k]) for k in m1["coll"]}
+    rec.update({"flops_per_dev": flops, "bytes_per_dev": bts,
+                "collective_bytes_per_dev": coll["total"],
+                "collectives": {k: v for k, v in coll.items() if k != "total"}})
+    rec.update(R.roofline_terms(flops, bts, coll["total"]))
+    rec["useful_flop_ratio"] = rec["model_flops"] / max(flops * 256, 1.0)
+    rec["wall_s"] = round(time.monotonic() - t0, 1)
+    return rec
+
+
+def measure_dp16(arch, compress):
+    """Pure-DP (16-rank node) train step: plain psum vs coded-sketch sync."""
+    cfg = C.get_config(arch)
+    cfg = replace(cfg, n_layers=4)  # one-node study: 4 layers is enough to
+    # expose the gradient-sync collective vs compute balance per layer
+    mesh = make_dp_mesh(16)
+    opt_cfg = AdamWConfig()
+    specs = L.model_param_specs(cfg)
+    aparams = abstract_params(specs)
+    aopt = jax.eval_shape(partial(init_opt_state, cfg=opt_cfg), aparams)
+    gtpl = jax.tree.map(lambda p: jax.ShapeDtypeStruct(p.shape, jnp.float32),
+                        aparams)
+    comp = None
+    ef = None
+    if compress:
+        comp_real = GradCompressor(
+            GradCompressionConfig(scheme="2bit", w=0.75, rate=8, chunk=4096),
+            gtpl)
+        comp = comp_real
+        ef = jax.tree.map(lambda p: jax.ShapeDtypeStruct(p.shape, jnp.float32),
+                          aparams)
+    else:
+        ef = jax.tree.map(lambda p: jax.ShapeDtypeStruct((1,), jnp.float32),
+                          aparams)  # dummy ef (unused by plain path)
+    step = make_compressed_train_step(cfg, opt_cfg, mesh, comp)
+    atok = jax.ShapeDtypeStruct((256, 4096), jnp.int32)
+    lowered = step.lower(aparams, aopt, ef, atok)
+    compiled = lowered.compile()
+    cost = compiled.cost_analysis()
+    if isinstance(cost, (list, tuple)):
+        cost = cost[0]
+    coll = R.collective_bytes(compiled.as_text())
+    rec = {"arch": arch, "variant": "dp16_" + ("2bit" if compress else "psum"),
+           "flops_per_dev": float(cost.get("flops", 0)),
+           "bytes_per_dev": float(cost.get("bytes accessed", 0)),
+           "collective_bytes_per_dev": coll["total"],
+           "collectives": {k: v for k, v in coll.items() if k != "total"}}
+    if compress:
+        rec["wire_bytes_per_rank"] = comp.wire_bytes()
+        rec["fp32_bytes"] = comp.fp32_bytes()
+    del compiled, lowered
+    gc.collect()
+    return rec
+
+
+VARIANTS = {
+    # cell A: qwen2 train — worst roofline fraction (head replication)
+    "A0_qwen2_base": lambda: measure("qwen2-0.5b", "train_4k"),
+    "A1_qwen2_puredp": lambda: measure("qwen2-0.5b", "train_4k",
+                                       overrides={"batch": "dpm"}),
+    "A2_qwen2_dp16_psum": lambda: measure_dp16("qwen2-0.5b", False),
+    "A3_qwen2_dp16_coded": lambda: measure_dp16("qwen2-0.5b", True),
+    # cell B: qwen3-moe train — most collective-bound
+    "B0_qwen3_base": lambda: measure("qwen3-moe-235b-a22b", "train_4k"),
+    "B1_qwen3_seqres": lambda: measure("qwen3-moe-235b-a22b", "train_4k",
+                                       overrides={"seq_res": "model"}),
+    # B2: SP with an explicit post-norm gather point (one AG per layer
+    # instead of GSPMD resharding every elementwise consumer)
+    "B2_qwen3_seqres_gatherpoint": lambda: measure(
+        "qwen3-moe-235b-a22b", "train_4k", overrides={"seq_res": "model"}),
+
+    # cell C: gemma3 train — biggest memory term
+    "C0_gemma3_base": lambda: measure("gemma3-27b", "train_4k"),
+    "C1_gemma3_bf16probs": lambda: measure(
+        "gemma3-27b", "train_4k",
+        cfg_tf=lambda c: replace(c, probs_bf16=True, loss_chunk=1024)),
+    "C2_gemma3_bf16_seqres": lambda: measure(
+        "gemma3-27b", "train_4k", overrides={"seq_res": "model"},
+        cfg_tf=lambda c: replace(c, probs_bf16=True, loss_chunk=1024)),
+}
+
+
+def main():
+    names = [a for a in sys.argv[1:] if not a.startswith("-")] or list(VARIANTS)
+    results = {}
+    if os.path.exists(OUT):
+        results = json.load(open(OUT))
+    for name in names:
+        if name in results and "--force" not in sys.argv:
+            print(f"[hillclimb] cached {name}")
+            continue
+        print(f"[hillclimb] measuring {name} ...", flush=True)
+        try:
+            rec = VARIANTS[name]()
+            rec["status"] = "ok"
+        except Exception as e:
+            import traceback
+            traceback.print_exc()
+            rec = {"status": "FAIL", "error": str(e)[:500]}
+        results[name] = rec
+        json.dump(results, open(OUT, "w"), indent=1)
+        if rec.get("status") == "ok":
+            print(f"[hillclimb] {name}: flops/dev={rec.get('flops_per_dev', 0):.3e} "
+                  f"bytes/dev={rec.get('bytes_per_dev', 0):.3e} "
+                  f"coll/dev={rec.get('collective_bytes_per_dev', 0):.3e}",
+                  flush=True)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,62 @@
+"""Inject rendered dry-run/roofline/hillclimb tables into EXPERIMENTS.md."""
+import io
+import json
+import os
+import sys
+from contextlib import redirect_stdout
+
+sys.path.insert(0, os.path.dirname(__file__))
+import render_experiments  # noqa: E402
+
+ROOT = os.path.join(os.path.dirname(__file__), "..")
+
+
+def render_dryrun():
+    buf = io.StringIO()
+    with redirect_stdout(buf):
+        render_experiments.main(os.path.join(ROOT, "launch_dryrun_results.json"))
+    text = buf.getvalue()
+    dry, _, roof = text.partition("### Roofline table")
+    return dry.strip(), ("### Roofline table" + roof).strip()
+
+
+def render_hillclimb():
+    path = os.path.join(ROOT, "hillclimb_results.json")
+    if not os.path.exists(path):
+        return "(hillclimb results pending)"
+    res = json.load(open(path))
+    lines = ["| variant | flops/dev | bytes/dev | coll bytes/dev | t_compute | "
+             "t_memory | t_collective | dominant | useful |",
+             "|---|---|---|---|---|---|---|---|---|"]
+    for name in sorted(res):
+        r = res[name]
+        if r.get("status") != "ok":
+            lines.append(f"| {name} | FAIL: {r.get('error', '')[:80]} | | | | | | | |")
+            continue
+        def f(k, scale=1.0, fmt="{:.3e}"):
+            v = r.get(k)
+            return fmt.format(v * scale) if v is not None else "-"
+        lines.append(
+            f"| {name} | {f('flops_per_dev')} | {f('bytes_per_dev')} "
+            f"| {f('collective_bytes_per_dev')} "
+            f"| {f('t_compute_s', 1e3, '{:.0f}ms')} "
+            f"| {f('t_memory_s', 1e3, '{:.0f}ms')} "
+            f"| {f('t_collective_s', 1e3, '{:.0f}ms')} "
+            f"| {r.get('dominant', '-')} "
+            f"| {f('useful_flop_ratio', 1.0, '{:.3f}')} |")
+    return "\n".join(lines)
+
+
+def main():
+    path = os.path.join(ROOT, "EXPERIMENTS.md")
+    text = open(path).read()
+    dry, roof = render_dryrun()
+    text = text.replace("<!-- DRYRUN_TABLE -->", dry)
+    text = text.replace("<!-- ROOFLINE_TABLE -->", roof)
+    text = text.replace("<!-- PERF_LOG -->", render_hillclimb())
+    open(path, "w").write(text)
+    print("EXPERIMENTS.md updated")
+
+
+if __name__ == "__main__":
+    main()

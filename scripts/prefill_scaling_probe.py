@@ -1,0 +1,46 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Evidence probe for the zamba2 prefill_32k compile pathology.
+
+zamba2-1.2b train_4k compiles in ~30 s but prefill_32k did not finish in
+45+ min on this 1-core CPU backend. This probe compiles the *identical*
+prefill program at growing sequence lengths to show the lowering/sharding
+is coherent and compile cost is a CPU-backend pass blowup in S, not a
+model/sharding bug. Results land in prefill_probe.json.
+"""
+import json      # noqa: E402
+import time      # noqa: E402
+import sys       # noqa: E402
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax                      # noqa: E402
+import jax.numpy as jnp         # noqa: E402
+
+from repro import configs as C                                   # noqa: E402
+from repro.launch.dryrun import SHAPES, lower_cell               # noqa: E402
+
+ARCH = sys.argv[1] if len(sys.argv) > 1 else "zamba2-1.2b"
+out = {}
+for seq in (4096, 8192, 16384):
+    SHAPES["prefill_32k"] = ("prefill", seq, 32)  # shrink the cell in place
+    t0 = time.monotonic()
+    try:
+        lowered, meta = lower_cell(ARCH, "prefill_32k", False)
+        t_lower = time.monotonic() - t0
+        t0 = time.monotonic()
+        compiled = lowered.compile()
+        t_compile = time.monotonic() - t0
+        cost = compiled.cost_analysis()
+        if isinstance(cost, (list, tuple)):
+            cost = cost[0]
+        out[seq] = {"lower_s": round(t_lower, 1),
+                    "compile_s": round(t_compile, 1),
+                    "flops_per_dev": float(cost.get("flops", 0)),
+                    "status": "ok"}
+        del compiled, lowered
+    except Exception as e:
+        out[seq] = {"status": f"FAIL: {e}"}
+    print(seq, out[seq], flush=True)
+    json.dump(out, open(f"prefill_probe_{ARCH.replace('-', '_').replace('.', '_')}.json", "w"), indent=1)

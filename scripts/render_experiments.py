@@ -1,0 +1,113 @@
+"""Render EXPERIMENTS.md tables from launch_dryrun_results.json."""
+import json
+import sys
+
+
+def fmt_bytes(b):
+    if b is None:
+        return "-"
+    for unit in ("B", "KB", "MB", "GB", "TB"):
+        if abs(b) < 1024:
+            return f"{b:.1f}{unit}"
+        b /= 1024
+    return f"{b:.1f}PB"
+
+
+def fmt_s(x):
+    if x is None:
+        return "-"
+    if x >= 1:
+        return f"{x:.2f}s"
+    if x >= 1e-3:
+        return f"{x * 1e3:.2f}ms"
+    return f"{x * 1e6:.1f}us"
+
+
+def main(path="launch_dryrun_results.json"):
+    with open(path) as f:
+        res = json.load(f)
+    # normalize arch spellings (module names vs canonical dashed ids)
+    norm = {}
+    for k, v in res.items():
+        kk = k.replace("-", "_").replace(".", "_")
+        if kk not in norm or v.get("status") == "ok":
+            norm[kk] = v
+            if isinstance(v, dict) and "arch" in v:
+                v["arch"] = v["arch"].replace("-", "_").replace(".", "_")
+    res = norm
+    ok = {k: v for k, v in res.items() if v.get("status") == "ok"}
+    fails = {k: v for k, v in res.items() if v.get("status") != "ok"}
+
+    print("### Dry-run summary\n")
+    print("| arch | shape | mesh | compile | args/dev | temp/dev | collectives (count) |")
+    print("|---|---|---|---|---|---|---|")
+    for k in sorted(ok):
+        r = ok[k]
+        mem = r.get("memory", {})
+        print(f"| {r['arch']} | {r['shape']} | {r['mesh']} | {r.get('compile_s', '-')}s "
+              f"| {fmt_bytes(mem.get('argument_size_in_bytes'))} "
+              f"| {fmt_bytes(mem.get('temp_size_in_bytes'))} "
+              f"| {r.get('collectives', {}).get('count', '-')} |")
+
+    print("\n### Roofline table (single-pod 16x16, loop-corrected)\n")
+    print("| arch | shape | t_compute | t_memory | t_collective | dominant "
+          "| roofline frac | useful FLOP ratio |")
+    print("|---|---|---|---|---|---|---|---|")
+    for k in sorted(ok):
+        r = ok[k]
+        if r["mesh"] != "single":
+            continue
+        print(f"| {r['arch']} | {r['shape']} | {fmt_s(r.get('t_compute_s'))} "
+              f"| {fmt_s(r.get('t_memory_s'))} | {fmt_s(r.get('t_collective_s'))} "
+              f"| {r.get('dominant', '-')} | {r.get('roofline_fraction', 0):.3f} "
+              f"| {r.get('useful_flop_ratio', 0):.3f} |")
+
+    print("\n### Per-cell bottleneck notes (what moves the dominant term down)\n")
+    notes = {
+        ("qwen2_0_5b", "train_4k"): "14 Q-heads/2 KV-heads are indivisible by model=16 -> attention replicated 16x; remap batch->(data,model) (see Perf A1) or pad heads.",
+        ("qwen2_0_5b", "prefill_32k"): "same head-replication: the 32k flash probs dominate bytes; pure-DP layout divides both compute and bytes by 16.",
+        ("qwen2_0_5b", "decode_32k"): "replicated single-token QKV/FFN; pure-DP decode or head padding removes the 16x.",
+        ("musicgen_medium", "train_4k"): "24 heads % 16 != 0 -> same replication as qwen2; remap batch->(data,model) or shard heads 8-way via a (32,8) mesh.",
+        ("musicgen_medium", "prefill_32k"): "head replication + 4 codebook heads; pure-DP layout.",
+        ("musicgen_medium", "decode_32k"): "replicated decode matmuls dominate; pure-DP decode.",
+        ("gemma2_9b", "train_4k"): "bytes led by f32 flash probs and sandwich-norm traffic; bf16 PV (Perf C1 analog) and fewer post-norm upcasts.",
+        ("gemma2_9b", "prefill_32k"): "banded+flash f32 probs; bf16 PV halves the biggest tensors.",
+        ("gemma2_9b", "decode_32k"): "KV-cache reads dominate (memory-bound by design); 2-bit coded KV (paper technique) would cut cache bytes 8x.",
+        ("gemma3_27b", "train_4k"): "largest absolute memory term; bf16 PV + bigger loss chunks (Perf C1) then sequence parallelism (C2).",
+        ("gemma3_27b", "prefill_32k"): "5:1 local pattern already keeps FLOPs near-roofline (useful 0.88); remaining bytes are banded-attention temps -> bf16 PV.",
+        ("gemma3_27b", "decode_32k"): "global-layer KV reads; ring caches already shrink local layers 32x; quantized KV next.",
+        ("phi3_mini_3_8b", "train_4k"): "MHA kv=32 doubles KV traffic vs GQA; grad-psum f32 master updates dominate collectives -> ZeRO already applied, next is seq-parallel residuals.",
+        ("phi3_mini_3_8b", "prefill_32k"): "flash f32 probs; bf16 PV.",
+        ("phi3_mini_3_8b", "decode_32k"): "6.4 GB/dev MHA KV cache reads; GQA-style cache sharing or coded KV.",
+        ("olmoe_1b_7b", "train_4k"): "dispatch scatter + expert GLU bytes; bigger capacity buckets amortize; all-to-all is minor at 64e.",
+        ("olmoe_1b_7b", "prefill_32k"): "same; routing one-hot cumsum is O(T*E) bytes -> sort-based routing.",
+        ("olmoe_1b_7b", "decode_32k"): "per-token routing duplicated across model ranks (S=1 cannot shard); negligible absolute cost.",
+        ("qwen3_moe_235b_a22b", "train_4k"): "TP activation all-reduces dominate collectives (735 GB/dev) -> sequence parallelism (Perf B1); FSDP gathers are second.",
+        ("qwen3_moe_235b_a22b", "prefill_32k"): "as train minus grad sync; seq-parallel residuals.",
+        ("qwen3_moe_235b_a22b", "decode_32k"): "FSDP param gathers per token step dominate -> keep experts resident (EP over data axis) for serving.",
+        ("zamba2_1_2b", "train_4k"): "SSD pairwise decay tensors (f32 [B,nc,Q,Q,H]) drive bytes; bf16 intra-chunk path or a Pallas SSD kernel.",
+        ("zamba2_1_2b", "decode_32k"): "O(1) state decode is tiny; shared-attn KV read is the only seq-term.",
+        ("zamba2_1_2b", "long_500k"): "KV of 6 shared-attn invocations sharded over data (context parallel); states O(1).",
+        ("rwkv6_7b", "train_4k"): "WKV pairwise [B,nc,Q,Q,H,K] elementwise work is VPU-bound -> Pallas WKV kernel with in-register decay products.",
+        ("rwkv6_7b", "decode_32k"): "pure state update, already near-minimal; memory term is the residual-stream reads.",
+        ("rwkv6_7b", "long_500k"): "O(1) state: length-independent decode (the architecture's point).",
+        ("chameleon_34b", "train_4k"): "d=8192 dense GEMMs near-MXU-shaped; bytes led by f32 flash probs; bf16 PV.",
+        ("chameleon_34b", "prefill_32k"): "same as train minus backward.",
+        ("chameleon_34b", "decode_32k"): "KV reads + FSDP gathers; keep params TP-resident for serving.",
+    }
+    for k in sorted(ok):
+        r = ok[k]
+        if r["mesh"] != "single":
+            continue
+        key = (r["arch"], r["shape"])
+        if key in notes:
+            print(f"- **{r['arch']} x {r['shape']}** ({r.get('dominant')}-bound): {notes[key]}")
+
+    if fails:
+        print("\n### Failures\n")
+        for k, v in fails.items():
+            print(f"- `{k}`: {v.get('error', '?')[:300]}")
+
+
+if __name__ == "__main__":
+    main(*sys.argv[1:])

@@ -1,0 +1,21 @@
+"""Core library: the paper's contribution — coding schemes for random
+projections, their collision probabilities / estimator variances, sketch
+pipeline, LSH, SVM-on-codes, and the coded-sketch gradient compressor.
+"""
+from repro.core.schemes import (  # noqa: F401
+    CodeSpec, spec_for, encode, encode_uniform, encode_offset, encode_2bit,
+    encode_sign, sample_offsets, collision_fraction,
+)
+from repro.core.probabilities import (  # noqa: F401
+    collision_prob, collision_prob_uniform, collision_prob_offset,
+    collision_prob_2bit, collision_prob_sign, q_region, SCHEMES,
+)
+from repro.core.variance import (  # noqa: F401
+    variance_factor, dP_drho,
+)
+from repro.core.estimators import (  # noqa: F401
+    CollisionEstimator, rho_from_sign_collision, mle_rho_2bit,
+)
+from repro.core.optimal import optimal_w  # noqa: F401
+from repro.core.packing import pack_codes, unpack_codes  # noqa: F401
+from repro.core.sketch import SketchConfig, CodedRandomProjection  # noqa: F401

@@ -1,0 +1,38 @@
+"""Fixed-order Gauss-Legendre quadrature helpers (host-side nodes, jnp eval).
+
+The paper's collision probabilities (Thm 1, Thm 4, Lemma 1) are 1-D
+integrals of smooth Gaussian integrands over bin intervals; fixed-order
+Gauss-Legendre per interval converges spectrally and is fully jittable
+(the nodes are compile-time constants).
+"""
+from __future__ import annotations
+
+import functools
+
+import numpy as np
+import jax.numpy as jnp
+
+__all__ = ["leggauss", "interval_nodes"]
+
+
+@functools.lru_cache(maxsize=32)
+def leggauss(order: int):
+    """Cached Gauss-Legendre nodes/weights on [-1, 1] as float64 numpy."""
+    x, w = np.polynomial.legendre.leggauss(order)
+    return x.astype(np.float64), w.astype(np.float64)
+
+
+def interval_nodes(a, b, order: int):
+    """Nodes and weights for integration over [a, b].
+
+    a, b: arrays (broadcastable) of interval endpoints.
+    Returns (z, wz) with shape broadcast(a,b).shape + (order,).
+    """
+    x, w = leggauss(order)
+    a = jnp.asarray(a)
+    b = jnp.asarray(b)
+    half = 0.5 * (b - a)[..., None]
+    mid = 0.5 * (b + a)[..., None]
+    z = mid + half * jnp.asarray(x)
+    wz = half * jnp.asarray(w)
+    return z, wz

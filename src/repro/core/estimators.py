@@ -1,0 +1,114 @@
+"""Similarity estimators from empirical collision fractions (paper §3).
+
+The collision probability P(rho; scheme, w) is strictly increasing in rho
+for every scheme, so rho_hat = P^{-1}(P_hat). Following the paper we
+tabulate P on a dense rho grid and invert by monotone interpolation
+("we can tabulate P_w for each rho, for example at a precision of 1e-3").
+
+Also provides the closed-form inversion for the sign scheme and a
+batched maximum-likelihood refinement (paper §7 'future work' — included
+as a beyond-paper extension) that uses the full contingency table of the
+2-bit scheme rather than only the diagonal collision count.
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass, field
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.core.probabilities import collision_prob, q_region
+from repro.core.variance import variance_factor
+
+__all__ = ["CollisionEstimator", "rho_from_sign_collision", "mle_rho_2bit"]
+
+
+def rho_from_sign_collision(p_hat):
+    """Closed-form inverse of P_1 = 1 - acos(rho)/pi."""
+    p = jnp.clip(p_hat, 0.5, 1.0)
+    return jnp.cos(math.pi * (1.0 - p))
+
+
+@dataclass
+class CollisionEstimator:
+    """rho_hat = P^{-1}(P_hat) by table inversion.
+
+    Builds a (rho, P) table once (host side, float64-safe under x64) and
+    estimates with jnp.interp — fully jittable / vmappable.
+    """
+    scheme: str
+    w: float = 1.0
+    grid_size: int = 4096
+    rho_max: float = 0.99995
+    _rho_grid: np.ndarray = field(init=False, repr=False)
+    _p_grid: np.ndarray = field(init=False, repr=False)
+
+    def __post_init__(self):
+        rho = np.linspace(0.0, self.rho_max, self.grid_size)
+        p = np.asarray(collision_prob(jnp.asarray(rho), self.w, self.scheme))
+        # enforce strict monotonicity for interp (numerics can plateau at tails)
+        p = np.maximum.accumulate(p)
+        eps = 1e-12 * np.arange(self.grid_size)
+        self._rho_grid = rho
+        self._p_grid = p + eps
+
+    def __call__(self, p_hat):
+        """Map empirical collision fraction(s) to rho_hat(s)."""
+        p_hat = jnp.asarray(p_hat)
+        return jnp.interp(p_hat, jnp.asarray(self._p_grid),
+                          jnp.asarray(self._rho_grid))
+
+    def estimate(self, codes_a, codes_b):
+        """Estimate rho from two code arrays [..., k]."""
+        p_hat = jnp.mean((codes_a == codes_b).astype(jnp.float32), axis=-1)
+        return self(p_hat)
+
+    def asymptotic_std(self, rho, k: int):
+        """Predicted std of rho_hat: sqrt(V/k) (Thms 2-4)."""
+        return jnp.sqrt(variance_factor(jnp.asarray(rho), self.w, self.scheme) / k)
+
+
+def _cell_probs_2bit(rho, w: float):
+    """4x4 contingency-cell probabilities of (h_{w,2}(x), h_{w,2}(y)).
+
+    Cells are intersections of the regions R0=(-inf,-w), R1=[-w,0),
+    R2=[0,w), R3=[w,inf). By symmetry of the bivariate normal we compute
+    the upper triangle with Lemma 1-style quadrature over generalized
+    rectangles Pr(x in [a,b], y in [c,d]).
+    """
+    from repro.core.probabilities import ZMAX, Phi, phi
+    from repro.core._quad import interval_nodes
+
+    bounds = [(-ZMAX, -w), (-w, 0.0), (0.0, w), (w, ZMAX)]
+    rho = jnp.clip(jnp.asarray(rho), 0.0, 1.0 - 1e-7)
+    r = rho[..., None]
+    sd = jnp.sqrt(1.0 - r * r)
+    rows = []
+    for (a, b) in bounds:
+        row = []
+        z, wz = interval_nodes(a, b, 64)
+        for (c, d) in bounds:
+            inner = Phi((d - r * z) / sd) - Phi((c - r * z) / sd)
+            row.append(jnp.sum(phi(z) * inner * wz, axis=-1))
+        rows.append(jnp.stack(row, axis=-1))
+    return jnp.stack(rows, axis=-2)  # [..., 4, 4]
+
+
+def mle_rho_2bit(codes_a, codes_b, w: float, grid_size: int = 512):
+    """Beyond-paper MLE (paper §7): maximize the 4x4 contingency-table
+    likelihood of the 2-bit codes over a rho grid.
+
+    codes_a/b: int32 [..., k] in {0,1,2,3}. Returns rho_hat [...].
+    """
+    k = codes_a.shape[-1]
+    # empirical 4x4 counts
+    cell = codes_a * 4 + codes_b  # [..., k] in [0,16)
+    counts = jax.vmap(lambda c: jnp.bincount(c, length=16), in_axes=0)(
+        cell.reshape(-1, k)).reshape(codes_a.shape[:-1] + (16,))
+    rho_grid = jnp.linspace(0.0, 0.99995, grid_size)
+    probs = _cell_probs_2bit(rho_grid, w).reshape(grid_size, 16)  # [G, 16]
+    logp = jnp.log(jnp.maximum(probs, 1e-30))
+    ll = counts @ logp.T  # [..., G]
+    return rho_grid[jnp.argmax(ll, axis=-1)]

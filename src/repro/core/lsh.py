@@ -1,0 +1,78 @@
+"""LSH tables over coded random projections (paper §1.1).
+
+"Using k projections and a bin width w, we can naturally build a hash
+table with (2 ceil(6/w))^k buckets." We band the k codes into L tables of
+m codes each (standard LSH amplification), hash each band to a 64-bit
+bucket id, and re-rank candidates by full collision count.
+
+The index is a host-side structure (serving-layer component); probing and
+re-ranking are batched jnp computations (re-ranking uses the collision
+kernel in ``repro.kernels.collision`` on TPU).
+"""
+from __future__ import annotations
+
+from collections import defaultdict
+from dataclasses import dataclass
+
+import numpy as np
+import jax.numpy as jnp
+
+from repro.core.sketch import CodedRandomProjection
+
+__all__ = ["LSHIndex"]
+
+_MIX = np.uint64(0x9E3779B97F4A7C15)
+
+
+def _band_hash(codes: np.ndarray) -> np.ndarray:
+    """codes [n, m] -> uint64 bucket ids (splitmix-style polynomial hash)."""
+    h = np.zeros(codes.shape[0], dtype=np.uint64)
+    for j in range(codes.shape[1]):
+        h = (h ^ (codes[:, j].astype(np.uint64) + _MIX)) * np.uint64(0xBF58476D1CE4E5B9)
+        h ^= h >> np.uint64(31)
+    return h
+
+
+@dataclass
+class LSHIndex:
+    """L banded hash tables over coded projections."""
+    sketcher: CodedRandomProjection
+    n_tables: int = 8
+    band_width: int = 8
+
+    def __post_init__(self):
+        need = self.n_tables * self.band_width
+        if need > self.sketcher.cfg.k:
+            raise ValueError(f"need n_tables*band_width <= k, {need} > {self.sketcher.cfg.k}")
+        self._tables = [defaultdict(list) for _ in range(self.n_tables)]
+        self._codes = None  # [n, k] corpus codes for re-ranking
+
+    def build(self, x):
+        """Index a corpus x [n, D]."""
+        codes = np.asarray(self.sketcher.encode(x))
+        self._codes = jnp.asarray(codes)
+        for t in range(self.n_tables):
+            band = codes[:, t * self.band_width:(t + 1) * self.band_width]
+            for i, h in enumerate(_band_hash(band)):
+                self._tables[t][int(h)].append(i)
+        return self
+
+    def candidates(self, q_codes: np.ndarray):
+        """Union of bucket members across tables for one query code row."""
+        out = set()
+        for t in range(self.n_tables):
+            band = q_codes[None, t * self.band_width:(t + 1) * self.band_width]
+            out.update(self._tables[t].get(int(_band_hash(band)[0]), ()))
+        return sorted(out)
+
+    def query(self, x_query, top: int = 10):
+        """x_query [D] -> list[(corpus_idx, rho_hat)] sorted by similarity."""
+        q_codes = np.asarray(self.sketcher.encode(x_query[None, :]))[0]
+        cand = self.candidates(q_codes)
+        if not cand:
+            return []
+        cand_idx = jnp.asarray(cand)
+        cand_codes = self._codes[cand_idx]  # [c, k]
+        rho = self.sketcher.estimate_rho(cand_codes, jnp.asarray(q_codes)[None, :])
+        order = jnp.argsort(-rho)[:top]
+        return [(int(cand_idx[i]), float(rho[i])) for i in order]

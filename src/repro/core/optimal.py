@@ -1,0 +1,43 @@
+"""Optimal bin-width selection (paper Figs. 5, 8).
+
+For a fixed similarity rho each scheme has a variance-minimizing bin
+width w*(rho). The paper's headline findings reproduced here:
+
+* h_w: for rho < ~0.56 the optimum w exceeds 6 (so the 1-bit sign code
+  suffices); for high rho the optimum w is small (< 1).
+* h_{w,q}: the optimum w stays ~1-2 everywhere (so it always needs more
+  bits than h_w).
+* h_{w,2}: optimum w is large for rho in ~[0.2, 0.62] (1 bit suffices
+  there) and ~0.75-1 at high rho — the paper's recommended operating
+  point.
+"""
+from __future__ import annotations
+
+import numpy as np
+import jax.numpy as jnp
+
+from repro.core.variance import variance_factor
+
+__all__ = ["optimal_w", "default_w_grid"]
+
+
+def default_w_grid(w_min: float = 0.05, w_max: float = 12.0, n: int = 240):
+    return np.geomspace(w_min, w_max, n)
+
+
+def optimal_w(rho, scheme: str, w_grid=None):
+    """Grid-minimize V(rho, w) over w for each rho.
+
+    rho: array [R]. Returns (w_star [R], v_star [R]).
+    Static-w functions force a Python loop over the grid; each call is
+    vectorized over rho so this is cheap.
+    """
+    if w_grid is None:
+        w_grid = default_w_grid()
+    rho = jnp.asarray(rho)
+    vs = jnp.stack([variance_factor(rho, float(w), scheme) for w in w_grid],
+                   axis=-1)  # [R, W]
+    idx = jnp.argmin(vs, axis=-1)
+    w_star = jnp.asarray(np.asarray(w_grid))[idx]
+    v_star = jnp.take_along_axis(vs, idx[..., None], axis=-1)[..., 0]
+    return w_star, v_star

@@ -1,0 +1,70 @@
+"""Bit-packing of codes into uint32 words (pure-jnp reference layer).
+
+The storage argument of the paper: a b-bit code should occupy b bits.
+``pack_codes``/``unpack_codes`` lay out 32/b codes per uint32 word along
+the last axis. The Pallas kernel in ``repro.kernels.pack_codes`` targets
+the same layout; this module is its oracle and the CPU fallback.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+__all__ = ["codes_per_word", "packed_width", "pack_codes", "unpack_codes",
+           "hamming_packed", "match_count_packed_1bit"]
+
+
+def codes_per_word(bits: int) -> int:
+    if bits not in (1, 2, 4, 8, 16):
+        raise ValueError(f"bits must divide 32 and be <=16, got {bits}")
+    return 32 // bits
+
+
+def packed_width(k: int, bits: int) -> int:
+    cpw = codes_per_word(bits)
+    return (k + cpw - 1) // cpw
+
+
+def pack_codes(codes, bits: int):
+    """Pack int codes in [0, 2^bits) along the last axis into uint32 words.
+
+    codes: int array [..., k]. Returns uint32 [..., ceil(k/(32/bits))].
+    k is zero-padded to a multiple of 32/bits.
+    """
+    cpw = codes_per_word(bits)
+    k = codes.shape[-1]
+    pad = (-k) % cpw
+    if pad:
+        codes = jnp.pad(codes, [(0, 0)] * (codes.ndim - 1) + [(0, pad)])
+    c = codes.astype(jnp.uint32).reshape(codes.shape[:-1] + (-1, cpw))
+    shifts = (jnp.arange(cpw, dtype=jnp.uint32) * jnp.uint32(bits))
+    # fields are disjoint, so an integer sum equals the bitwise-or
+    return jnp.sum(c << shifts, axis=-1, dtype=jnp.uint32)
+
+
+def unpack_codes(words, bits: int, k: int):
+    """Inverse of pack_codes. Returns int32 [..., k]."""
+    cpw = codes_per_word(bits)
+    shifts = (jnp.arange(cpw, dtype=jnp.uint32) * jnp.uint32(bits))
+    mask = jnp.uint32((1 << bits) - 1)
+    c = (words[..., None] >> shifts) & mask
+    c = c.reshape(words.shape[:-1] + (-1,))
+    return c[..., :k].astype(jnp.int32)
+
+
+def _popcount32(x):
+    """Vectorized popcount on uint32."""
+    x = x - ((x >> 1) & jnp.uint32(0x55555555))
+    x = (x & jnp.uint32(0x33333333)) + ((x >> 2) & jnp.uint32(0x33333333))
+    x = (x + (x >> 4)) & jnp.uint32(0x0F0F0F0F)
+    return (x * jnp.uint32(0x01010101)) >> 24
+
+
+def hamming_packed(a, b):
+    """Hamming distance between packed 1-bit code rows: sum popcount(a^b)."""
+    return jnp.sum(_popcount32(jnp.bitwise_xor(a, b)), axis=-1).astype(jnp.int32)
+
+
+def match_count_packed_1bit(a, b, k: int):
+    """Number of colliding 1-bit codes = k - hamming (padding bits cancel
+    in xor since both padded with zeros)."""
+    return k - hamming_packed(a, b)

@@ -1,0 +1,142 @@
+"""Collision probabilities for the four coding schemes (paper §2, §4, §5).
+
+All functions are vectorized over ``rho`` (array) with a static Python
+float ``w`` (bin width), so bin counts are compile-time constants. They
+are jittable and differentiable.
+
+Schemes / notation (paper):
+  h_w     uniform quantization  code = floor(x / w)           -> P_w   (Thm 1)
+  h_{w,q} window + random offset code = floor((x + q) / w)    -> P_wq  (Eq. 7)
+  h_{w,2} 2-bit non-uniform, regions (-inf,-w),[-w,0),[0,w),[w,inf)
+                                                              -> P_w2  (Thm 4)
+  h_1     1-bit sign                                          -> P_1   (Eq. 19)
+"""
+from __future__ import annotations
+
+import math
+
+import jax.numpy as jnp
+from jax.scipy.special import ndtr  # standard normal CDF, accurate tails
+
+from repro.core._quad import interval_nodes
+
+__all__ = [
+    "phi", "Phi", "q_region", "collision_prob_uniform",
+    "collision_prob_offset", "collision_prob_2bit", "collision_prob_sign",
+    "collision_prob", "SCHEMES",
+]
+
+# Beyond |z| = ZMAX the N(0,1) mass is < 1e-18; integrals are truncated here.
+ZMAX = 9.0
+_DEFAULT_ORDER = 48
+
+SCHEMES = ("uniform", "offset", "2bit", "sign")
+
+
+def phi(x):
+    """Standard normal pdf."""
+    x = jnp.asarray(x)
+    return jnp.exp(-0.5 * x * x) / jnp.sqrt(jnp.asarray(2.0 * math.pi, x.dtype))
+
+
+def Phi(x):
+    """Standard normal cdf."""
+    return ndtr(jnp.asarray(x))
+
+
+def _clip_rho(rho):
+    rho = jnp.asarray(rho, jnp.result_type(float))
+    return jnp.clip(rho, 0.0, 1.0 - 1e-9)
+
+
+def q_region(rho, s, t, order: int = _DEFAULT_ORDER):
+    """Lemma 1: Q_{s,t}(rho) = Pr(x in [s,t], y in [s,t]) for bivariate
+    N(0, [[1, rho], [rho, 1]]).
+
+    rho: array; s, t: static floats with s < t.
+    """
+    rho = _clip_rho(rho)[..., None]
+    sd = jnp.sqrt(1.0 - rho * rho)
+    lo = max(s, -ZMAX)
+    hi = min(t, ZMAX)
+    if hi <= lo:
+        return jnp.zeros(rho.shape[:-1], rho.dtype)
+    z, wz = interval_nodes(lo, hi, order)  # [order]
+    inner = Phi((t - rho * z) / sd) - Phi((s - rho * z) / sd)
+    return jnp.sum(phi(z) * inner * wz, axis=-1)
+
+
+def collision_prob_uniform(rho, w: float, order: int = _DEFAULT_ORDER):
+    """P_w (Thm 1): collision probability of h_w(x) = floor(x/w).
+
+    P_w = 2 sum_{i>=0} Q_{iw,(i+1)w}(rho), truncated at ZMAX.
+    """
+    w = float(w)
+    if w <= 0:
+        raise ValueError("bin width w must be positive")
+    n_bins = max(1, int(math.ceil(ZMAX / w)))
+    rho = _clip_rho(rho)
+    r = rho[..., None, None]  # [..., bin, node]
+    sd = jnp.sqrt(1.0 - r * r)
+    lo = jnp.asarray([i * w for i in range(n_bins)])
+    hi = jnp.asarray([min((i + 1) * w, ZMAX + w) for i in range(n_bins)])
+    z, wz = interval_nodes(lo, hi, order)  # [bin, node]
+    upper = jnp.asarray([(i + 1) * w for i in range(n_bins)])[:, None]
+    lower = jnp.asarray([i * w for i in range(n_bins)])[:, None]
+    inner = Phi((upper - r * z) / sd) - Phi((lower - r * z) / sd)
+    return 2.0 * jnp.sum(phi(z) * inner * wz, axis=(-1, -2))
+
+
+def collision_prob_offset(rho, w: float):
+    """P_{w,q} (Eq. 7), the Datar et al. window+offset scheme, closed form.
+
+    P = 2 Phi(r) - 1 + (2 / (sqrt(2 pi) r)) (exp(-r^2/2) - 1),  r = w / sqrt(d),
+    d = 2 (1 - rho).
+    """
+    w = float(w)
+    rho = _clip_rho(rho)
+    d = jnp.maximum(2.0 * (1.0 - rho), 1e-24)
+    r = w / jnp.sqrt(d)
+    return (2.0 * Phi(r) - 1.0
+            + 2.0 / (math.sqrt(2.0 * math.pi) * r) * (jnp.exp(-0.5 * r * r) - 1.0))
+
+
+def collision_prob_2bit(rho, w: float, order: int = _DEFAULT_ORDER):
+    """P_{w,2} (Thm 4) for the non-uniform 2-bit scheme.
+
+    P = 1 - acos(rho)/pi - 4 \\int_0^w phi(z) Phi((-w + rho z)/sqrt(1-rho^2)) dz
+    """
+    w = float(w)
+    rho = _clip_rho(rho)
+    base = 1.0 - jnp.arccos(rho) / math.pi
+    hi = min(w, ZMAX)
+    if hi <= 0.0:
+        return base
+    r = rho[..., None]
+    sd = jnp.sqrt(1.0 - r * r)
+    z, wz = interval_nodes(0.0, hi, order)
+    integral = jnp.sum(phi(z) * Phi((-w + r * z) / sd) * wz, axis=-1)
+    return base - 4.0 * integral
+
+
+def collision_prob_sign(rho, w: float = 0.0):
+    """P_1 (Eq. 19): 1-bit sign scheme, 1 - acos(rho)/pi. ``w`` ignored."""
+    rho = _clip_rho(rho)
+    return 1.0 - jnp.arccos(rho) / math.pi
+
+
+_PROB = {
+    "uniform": collision_prob_uniform,
+    "offset": collision_prob_offset,
+    "2bit": collision_prob_2bit,
+    "sign": collision_prob_sign,
+}
+
+
+def collision_prob(rho, w: float, scheme: str):
+    """Dispatch to the scheme's collision probability P(rho; w)."""
+    try:
+        fn = _PROB[scheme]
+    except KeyError:
+        raise ValueError(f"unknown scheme {scheme!r}; one of {SCHEMES}") from None
+    return fn(rho, w)

@@ -1,0 +1,118 @@
+"""Encoders for the four coding schemes (paper Eq. 4, Eq. 5, §4, §5).
+
+All encoders map projected values x (any shape, last axis = k projections)
+to small integer codes. Codes are *unsigned* int32 in [0, n_codes) so they
+pack directly into b-bit fields (``repro.core.packing``) and index one-hot
+feature expansions (``repro.core.svm``).
+
+The uniform scheme uses the paper's cutoff argument (§1.1): values beyond
+|x| = cutoff (default 6, tail mass 9.9e-10) are clamped, so the code needs
+1 + log2(ceil(cutoff/w)) bits.
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+
+__all__ = [
+    "CodeSpec", "spec_for", "encode", "encode_uniform", "encode_offset",
+    "encode_2bit", "encode_sign", "sample_offsets", "collision_fraction",
+]
+
+
+@dataclass(frozen=True)
+class CodeSpec:
+    """Static description of a coding scheme instance."""
+    scheme: str            # uniform | offset | 2bit | sign
+    w: float               # bin width (ignored for sign)
+    cutoff: float = 6.0    # clamp for uniform/offset schemes
+    # derived
+    @property
+    def n_bins_side(self) -> int:
+        if self.scheme == "uniform":
+            return max(1, int(math.ceil(self.cutoff / self.w)))
+        if self.scheme == "offset":
+            # the random offset can push values one bin past the cutoff
+            return max(1, int(math.ceil(self.cutoff / self.w)) + 1)
+        if self.scheme == "2bit":
+            return 2
+        return 1
+
+    @property
+    def n_codes(self) -> int:
+        return 2 * self.n_bins_side
+
+    @property
+    def bits(self) -> int:
+        """Bits per packed code field: ceil(log2(n_codes)) rounded up to a
+        32-bit-divisible field width (1/2/4/8/16)."""
+        raw = max(1, int(math.ceil(math.log2(self.n_codes))))
+        for b in (1, 2, 4, 8, 16):
+            if raw <= b:
+                return b
+        raise ValueError(f"codes too wide to pack: {self.n_codes}")
+
+
+def spec_for(scheme: str, w: float = 1.0, cutoff: float = 6.0) -> CodeSpec:
+    return CodeSpec(scheme=scheme, w=float(w), cutoff=float(cutoff))
+
+
+def encode_uniform(x, w: float, cutoff: float = 6.0):
+    """h_w (Eq. 4): floor(x/w), clamped to +-cutoff, shifted to unsigned.
+
+    Returns int32 codes in [0, 2*ceil(cutoff/w)).
+    """
+    n_side = max(1, int(math.ceil(cutoff / w)))
+    c = jnp.floor(jnp.asarray(x) / w)
+    c = jnp.clip(c, -n_side, n_side - 1)
+    return (c + n_side).astype(jnp.int32)
+
+
+def encode_offset(x, w: float, q, cutoff: float = 6.0):
+    """h_{w,q} (Eq. 5, Datar et al.): floor((x + q)/w) with q ~ U(0, w)
+    shared per-projection (broadcast on the last axis), clamped."""
+    n_side = max(1, int(math.ceil(cutoff / w)) + 1)  # offset can push one bin over
+    c = jnp.floor((jnp.asarray(x) + q) / w)
+    c = jnp.clip(c, -n_side, n_side - 1)
+    return (c + n_side).astype(jnp.int32)
+
+
+def encode_2bit(x, w: float):
+    """h_{w,2} (§4): regions (-inf,-w) -> 0, [-w,0) -> 1, [0,w) -> 2, [w,inf) -> 3."""
+    x = jnp.asarray(x)
+    return ((x >= -w).astype(jnp.int32)
+            + (x >= 0.0).astype(jnp.int32)
+            + (x >= w).astype(jnp.int32))
+
+
+def encode_sign(x):
+    """h_1 (§5): sign bit, x >= 0 -> 1 else 0."""
+    return (jnp.asarray(x) >= 0.0).astype(jnp.int32)
+
+
+def sample_offsets(key, k: int, w: float, dtype=jnp.float32):
+    """q_j ~ Uniform(0, w), one per projection; shared by all data vectors."""
+    return jax.random.uniform(key, (k,), dtype=dtype, minval=0.0, maxval=w)
+
+
+def encode(x, spec: CodeSpec, q=None):
+    """Dispatch encoder. ``q`` required iff scheme == 'offset'."""
+    if spec.scheme == "uniform":
+        return encode_uniform(x, spec.w, spec.cutoff)
+    if spec.scheme == "offset":
+        if q is None:
+            raise ValueError("offset scheme requires offsets q (sample_offsets)")
+        return encode_offset(x, spec.w, q, spec.cutoff)
+    if spec.scheme == "2bit":
+        return encode_2bit(x, spec.w)
+    if spec.scheme == "sign":
+        return encode_sign(x)
+    raise ValueError(f"unknown scheme {spec.scheme!r}")
+
+
+def collision_fraction(codes_a, codes_b, axis: int = -1):
+    """Empirical collision probability P_hat = mean_j [a_j == b_j]."""
+    return jnp.mean((codes_a == codes_b).astype(jnp.float32), axis=axis)

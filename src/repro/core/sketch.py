@@ -1,0 +1,118 @@
+"""Coded random-projection sketches — the paper's end-to-end pipeline.
+
+    X [n, D]  --(Gaussian projection R in blocks)-->  [n, k]
+              --(b-bit coding scheme)-->              codes [n, k]
+              --(bit packing)-->                      uint32 [n, k*b/32]
+
+The projection matrix is never materialized for large D: it is generated
+block-by-block from a counter-based PRNG key (``fold_in``), so sketching a
+D = 3.2M-dim corpus (the paper's URL dataset) streams R in O(block) memory
+and the sketch is reproducible from the seed alone — on a cluster every
+host regenerates the same R without any broadcast.
+"""
+from __future__ import annotations
+
+import functools
+from dataclasses import dataclass, replace
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import schemes as _schemes
+from repro.core import packing as _packing
+from repro.core.estimators import CollisionEstimator
+from repro.core.schemes import CodeSpec
+
+__all__ = ["SketchConfig", "CodedRandomProjection"]
+
+
+@dataclass(frozen=True)
+class SketchConfig:
+    k: int = 256                    # number of projections
+    scheme: str = "2bit"            # paper-recommended default (§8)
+    w: float = 0.75                 # paper-recommended first bin width (§8)
+    cutoff: float = 6.0
+    seed: int = 0
+    block_d: int = 4096             # streaming block size over input dim
+    dtype: str = "float32"
+
+    @property
+    def code_spec(self) -> CodeSpec:
+        return CodeSpec(scheme=self.scheme, w=self.w, cutoff=self.cutoff)
+
+
+class CodedRandomProjection:
+    """Sketching engine for a fixed input dimensionality D."""
+
+    def __init__(self, cfg: SketchConfig, d: int):
+        self.cfg = cfg
+        self.d = int(d)
+        self.spec = cfg.code_spec
+        self._key = jax.random.PRNGKey(cfg.seed)
+        self._offsets = None
+        if cfg.scheme == "offset":
+            self._offsets = _schemes.sample_offsets(
+                jax.random.fold_in(self._key, 0xFFFF), cfg.k, cfg.w,
+                dtype=jnp.dtype(cfg.dtype))
+        self._estimator = CollisionEstimator(cfg.scheme, cfg.w)
+
+    # -- projection ---------------------------------------------------------
+    def _block_r(self, b: int, width: int):
+        """Regenerable Gaussian block R[b*block : b*block+width, :k]."""
+        key = jax.random.fold_in(self._key, b)
+        return jax.random.normal(key, (width, self.cfg.k),
+                                 dtype=jnp.dtype(self.cfg.dtype))
+
+    @functools.partial(jax.jit, static_argnums=0)
+    def project(self, x):
+        """x [n, D] -> [n, k], streaming over D in blocks."""
+        n = x.shape[0]
+        bd = self.cfg.block_d
+        n_blocks = (self.d + bd - 1) // bd
+        acc = jnp.zeros((n, self.cfg.k), dtype=jnp.dtype(self.cfg.dtype))
+        for b in range(n_blocks):
+            lo = b * bd
+            hi = min(lo + bd, self.d)
+            acc = acc + x[:, lo:hi].astype(acc.dtype) @ self._block_r(b, hi - lo)
+        return acc
+
+    # -- coding -------------------------------------------------------------
+    def encode(self, x):
+        """x [n, D] -> int32 codes [n, k]."""
+        return _schemes.encode(self.project(x), self.spec, self._offsets)
+
+    def encode_projected(self, z):
+        """Pre-projected z [n, k] -> codes."""
+        return _schemes.encode(z, self.spec, self._offsets)
+
+    def pack(self, codes):
+        return _packing.pack_codes(codes, self.spec.bits)
+
+    def sketch(self, x):
+        """x [n, D] -> packed uint32 sketch [n, k*bits/32]."""
+        return self.pack(self.encode(x))
+
+    # -- estimation ---------------------------------------------------------
+    def estimate_rho(self, codes_a, codes_b):
+        """rho_hat from code arrays [..., k] (table inversion, §3)."""
+        return self._estimator.estimate(codes_a, codes_b)
+
+    def estimate_rho_packed(self, words_a, words_b):
+        ca = _packing.unpack_codes(words_a, self.spec.bits, self.cfg.k)
+        cb = _packing.unpack_codes(words_b, self.spec.bits, self.cfg.k)
+        return self.estimate_rho(ca, cb)
+
+    def asymptotic_std(self, rho):
+        return self._estimator.asymptotic_std(rho, self.cfg.k)
+
+    # -- storage accounting (the paper's headline economy) -------------------
+    def bytes_per_vector(self) -> int:
+        return 4 * _packing.packed_width(self.cfg.k, self.spec.bits)
+
+    def fp32_bytes_per_vector(self) -> int:
+        return 4 * self.cfg.k
+
+    def with_scheme(self, scheme: str, w: Optional[float] = None):
+        cfg = replace(self.cfg, scheme=scheme, w=self.cfg.w if w is None else w)
+        return CodedRandomProjection(cfg, self.d)

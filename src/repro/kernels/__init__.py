@@ -1,0 +1,10 @@
+"""Pallas TPU kernels for the paper's compute hot-spots.
+
+proj_code   — fused projection GEMM + in-register coding (MXU + epilogue)
+pack_codes  — b-bit field packing into uint32 words (VPU)
+collision   — all-pairs code-match counting (VPU compare-accumulate)
+
+Each has a pure-jnp oracle in ref.py and a dispatching wrapper in ops.py;
+tests sweep shapes/dtypes in interpret mode against the oracles.
+"""
+from repro.kernels.ops import coded_project, pack_codes, collision_counts  # noqa: F401

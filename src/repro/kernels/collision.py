@@ -1,0 +1,76 @@
+"""Batched collision-count Pallas kernel (similarity-search inner loop).
+
+counts[q, n] = #{ j : codes_q[q, j] == codes_db[n, j] } — the sufficient
+statistic for the paper's rho estimator, computed for all (query, corpus)
+pairs. Equality-compare + accumulate is VPU work; we tile (bq, bn, bk)
+with an int32 VMEM accumulator, streaming the K axis on the minor grid
+dimension exactly like a matmul reduction.
+
+Padded K entries are sentinel-masked by the wrapper (-1 vs -2) so they
+never collide.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+__all__ = ["collision_counts_pallas"]
+
+
+def _kernel(q_ref, db_ref, o_ref, acc_ref):
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q = q_ref[...]          # [bq, bk]
+    db = db_ref[...]        # [bn, bk]
+    eq = (q[:, None, :] == db[None, :, :]).astype(jnp.int32)
+    acc_ref[...] += jnp.sum(eq, axis=-1)
+
+    @pl.when(pl.program_id(2) == pl.num_programs(2) - 1)
+    def _finalize():
+        o_ref[...] = acc_ref[...]
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("block_q", "block_n", "block_k", "interpret"))
+def collision_counts_pallas(codes_q, codes_db, *, block_q: int = 128,
+                            block_n: int = 128, block_k: int = 512,
+                            interpret: bool = False):
+    """codes_q int32 [Q, K], codes_db int32 [N, K] -> int32 [Q, N]."""
+    qn, k = codes_q.shape
+    n, k2 = codes_db.shape
+    assert k == k2, (codes_q.shape, codes_db.shape)
+
+    def pad(x, mult, axis, fill):
+        p = (-x.shape[axis]) % mult
+        if p == 0:
+            return x
+        widths = [(0, 0)] * x.ndim
+        widths[axis] = (0, p)
+        return jnp.pad(x, widths, constant_values=fill)
+
+    # sentinels differ so padded K positions never match
+    qp = pad(pad(codes_q, block_q, 0, -2), block_k, 1, -2)
+    dbp = pad(pad(codes_db, block_n, 0, -1), block_k, 1, -1)
+    qm, kp = qp.shape
+    nm = dbp.shape[0]
+    grid = (qm // block_q, nm // block_n, kp // block_k)
+    out = pl.pallas_call(
+        _kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_q, block_k), lambda i, j, s: (i, s)),
+            pl.BlockSpec((block_n, block_k), lambda i, j, s: (j, s)),
+        ],
+        out_specs=pl.BlockSpec((block_q, block_n), lambda i, j, s: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((qm, nm), jnp.int32),
+        scratch_shapes=[pltpu.VMEM((block_q, block_n), jnp.int32)],
+        interpret=interpret,
+    )(qp, dbp)
+    return out[:qn, :n]

@@ -1,0 +1,57 @@
+"""Public jit'd wrappers for the Pallas kernels.
+
+Dispatch policy: on TPU run the compiled kernels; elsewhere either run the
+kernels in interpret mode (exact semantics, used by tests) or fall back to
+the jnp oracle (fast CPU path, used by benchmarks/examples). ``impl``:
+  'auto'    -> 'pallas' on TPU, 'ref' otherwise
+  'pallas'  -> kernel (interpret=True off-TPU)
+  'ref'     -> jnp oracle
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+
+from repro.core.schemes import CodeSpec
+from repro.kernels import ref as _ref
+from repro.kernels.collision import collision_counts_pallas
+from repro.kernels.pack_codes import pack_codes_pallas
+from repro.kernels.proj_code import coded_project_pallas
+
+__all__ = ["coded_project", "pack_codes", "collision_counts"]
+
+
+def _resolve(impl: str) -> str:
+    if impl == "auto":
+        return "pallas" if jax.default_backend() == "tpu" else "ref"
+    return impl
+
+
+def _interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def coded_project(x, r, spec: CodeSpec, q: Optional[jax.Array] = None,
+                  impl: str = "auto", **block_kwargs):
+    """Fused encode(x @ r): [M, D] x [D, K] -> int32 codes [M, K]."""
+    if _resolve(impl) == "ref":
+        return _ref.coded_project_ref(x, r, spec, q)
+    return coded_project_pallas(x, r, spec, q, interpret=_interpret(),
+                                **block_kwargs)
+
+
+def pack_codes(codes, bits: int, impl: str = "auto", **block_kwargs):
+    """Pack b-bit codes into uint32 words: [M, K] -> [M, K*b/32]."""
+    if _resolve(impl) == "ref":
+        return _ref.pack_codes_ref(codes, bits)
+    return pack_codes_pallas(codes, bits, interpret=_interpret(),
+                             **block_kwargs)
+
+
+def collision_counts(codes_q, codes_db, impl: str = "auto", **block_kwargs):
+    """All-pairs collision counts: [Q, K], [N, K] -> int32 [Q, N]."""
+    if _resolve(impl) == "ref":
+        return _ref.collision_counts_ref(codes_q, codes_db)
+    return collision_counts_pallas(codes_q, codes_db, interpret=_interpret(),
+                                   **block_kwargs)

@@ -1,0 +1,53 @@
+"""Bit-packing Pallas kernel: b-bit codes -> uint32 words.
+
+Row-blocked: each grid step packs (bm, K) int32 codes into (bm, K·b/32)
+uint32 words entirely in VMEM; fields are disjoint so the bitwise-or is an
+integer dot with the shift vector (VPU multiply-accumulate). K is padded
+to a multiple of 32/b by the wrapper (zero codes land in high bits and are
+ignored by unpack).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.core.packing import codes_per_word
+
+__all__ = ["pack_codes_pallas"]
+
+
+def _kernel(c_ref, o_ref, *, bits: int):
+    cpw = codes_per_word(bits)
+    c = c_ref[...].astype(jnp.uint32)
+    bm, kp = c.shape
+    c = c.reshape(bm, kp // cpw, cpw)
+    shifts = (jnp.arange(cpw, dtype=jnp.uint32) * jnp.uint32(bits))
+    o_ref[...] = jnp.sum(c << shifts, axis=-1, dtype=jnp.uint32)
+
+
+@functools.partial(jax.jit, static_argnames=("bits", "block_m", "interpret"))
+def pack_codes_pallas(codes, bits: int, *, block_m: int = 256,
+                      interpret: bool = False):
+    """codes int32 [M, K] -> uint32 [M, ceil(K/(32/bits))]."""
+    cpw = codes_per_word(bits)
+    m, k = codes.shape
+    kpad = (-k) % cpw
+    if kpad:
+        codes = jnp.pad(codes, ((0, 0), (0, kpad)))
+    mpad = (-m) % block_m
+    if mpad:
+        codes = jnp.pad(codes, ((0, mpad), (0, 0)))
+    mp, kp = codes.shape
+    nw = kp // cpw
+    out = pl.pallas_call(
+        functools.partial(_kernel, bits=bits),
+        grid=(mp // block_m,),
+        in_specs=[pl.BlockSpec((block_m, kp), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((block_m, nw), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((mp, nw), jnp.uint32),
+        interpret=interpret,
+    )(codes)
+    return out[:m]

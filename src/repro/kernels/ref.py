@@ -1,0 +1,35 @@
+"""Pure-jnp oracles for every Pallas kernel in this package.
+
+These define the semantics; kernels must match them bit-for-bit (integer
+outputs) across the shape/dtype sweeps in tests/test_kernels.py.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.core import packing as _packing
+from repro.core import schemes as _schemes
+from repro.core.schemes import CodeSpec
+
+__all__ = ["coded_project_ref", "pack_codes_ref", "collision_counts_ref"]
+
+
+def coded_project_ref(x, r, spec: CodeSpec, q=None):
+    """x [M, D] @ r [D, K] -> int32 codes [M, K] under ``spec``.
+
+    The matmul accumulates in float32 regardless of input dtype (matches
+    the kernel's MXU accumulator).
+    """
+    z = jnp.dot(x, r, preferred_element_type=jnp.float32)
+    return _schemes.encode(z, spec, q)
+
+
+def pack_codes_ref(codes, bits: int):
+    """codes int [M, K] -> uint32 words [M, ceil(K/(32/bits))]."""
+    return _packing.pack_codes(codes, bits)
+
+
+def collision_counts_ref(codes_q, codes_db):
+    """codes_q [Q, K], codes_db [N, K] -> int32 [Q, N] match counts."""
+    eq = (codes_q[:, None, :] == codes_db[None, :, :])
+    return jnp.sum(eq, axis=-1).astype(jnp.int32)

@@ -1,0 +1,330 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+# --- multi-pod dry-run: lower + compile every (arch x shape x mesh) cell ---
+# The two lines above MUST precede any jax-importing module: jax locks the
+# device count at first init, and only the dry-run wants 512 host devices.
+
+import argparse   # noqa: E402
+import gc         # noqa: E402
+import json       # noqa: E402
+import time       # noqa: E402
+from functools import partial  # noqa: E402
+
+import jax        # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+
+from repro import configs as C                      # noqa: E402
+from repro.launch.mesh import make_production_mesh  # noqa: E402
+from repro.launch import roofline as R              # noqa: E402
+from repro.models import lm as L                    # noqa: E402
+from repro.models.nn import abstract_params, param_shardings  # noqa: E402
+from repro.optim import AdamWConfig, init_opt_state  # noqa: E402
+from repro.parallel.sharding import ShardingRules   # noqa: E402
+from repro.train import make_train_step, make_state_shardings  # noqa: E402
+
+SHAPES = {
+    # name: (kind, seq_len, global_batch)
+    "train_4k": ("train", 4096, 256),
+    "prefill_32k": ("prefill", 32768, 32),
+    "decode_32k": ("decode", 32768, 128),
+    "long_500k": ("decode", 524288, 1),
+}
+
+# per-shape logical-rule overrides (the long-context decode shards the KV
+# sequence over the data axis: context parallelism)
+SHAPE_RULES = {
+    "long_500k": {"seq_kv": "data", "batch": None},
+}
+
+
+def _sds(shape, dtype, sharding=None):
+    return jax.ShapeDtypeStruct(shape, dtype, sharding=sharding)
+
+
+def _token_shape(cfg, batch, seq):
+    return (batch, seq, cfg.n_codebooks) if cfg.n_codebooks > 1 else (batch, seq)
+
+
+def input_specs(arch: str, shape_name: str = "train_4k", rules=None):
+    """ShapeDtypeStruct stand-ins for every model input of a cell
+    (weak-type-correct, shardable, no device allocation).
+
+    train shapes -> {"tokens"}; decode shapes -> {"tokens", "pos"}
+    (+ caches are built abstractly inside lower_cell). The [audio]/[vlm]
+    modality frontends are stubs per the assignment: tokens already are
+    codebook/VQ ids.
+    """
+    cfg = C.get_config(arch)
+    kind, seq, batch = SHAPES[shape_name]
+    tshape = _token_shape(cfg, batch, seq if kind != "decode" else 1)
+    names = ("batch", "seq", "codebooks")[:len(tshape)]
+    sh = rules.sharding_for(tshape, names) if rules is not None else None
+    specs = {"tokens": _sds(tshape, jnp.int32, sh)}
+    if kind == "decode":
+        specs["pos"] = _sds((), jnp.int32)
+    return specs
+
+
+def lower_cell(arch: str, shape_name: str, multi_pod: bool,
+               rules_overrides=None, opt_cfg=None, cfg=None):
+    """Returns (lowered, meta) for one dry-run cell."""
+    cfg = cfg or C.get_config(arch)
+    kind, seq, batch = SHAPES[shape_name]
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    overrides = dict(SHAPE_RULES.get(shape_name, {}))
+    overrides.update(rules_overrides or {})
+    rules = ShardingRules(mesh).with_overrides(**overrides)
+    specs = L.model_param_specs(cfg)
+    p_shard = param_shardings(specs, rules)
+    aparams = jax.tree.map(
+        lambda s, sh: _sds(s.shape, jnp.dtype(s.dtype), sh),
+        specs, p_shard,
+        is_leaf=lambda x: hasattr(x, "axes") and hasattr(x, "init"))
+    meta = {"arch": arch, "shape": shape_name, "kind": kind,
+            "mesh": "multi" if multi_pod else "single",
+            "devices": mesh.size, "seq": seq, "batch": batch}
+
+    if kind == "train":
+        opt_cfg = opt_cfg or AdamWConfig()
+        _, opt_shard = make_state_shardings(cfg, rules, opt_cfg.master_fp32)
+        aopt = jax.eval_shape(partial(init_opt_state, cfg=opt_cfg), aparams)
+        aopt = jax.tree.map(lambda s, sh: _sds(s.shape, s.dtype, sh),
+                            aopt, opt_shard)
+        tok_sh = rules.sharding_for(_token_shape(cfg, batch, seq),
+                                    ("batch", "seq", "codebooks")[
+                                        :len(_token_shape(cfg, batch, seq))])
+        atok = _sds(_token_shape(cfg, batch, seq), jnp.int32, tok_sh)
+        step = make_train_step(cfg, opt_cfg, rules, donate=True)
+        lowered = step.lower(aparams, aopt, atok)
+        return lowered, meta
+
+    if kind == "prefill":
+        tshape = _token_shape(cfg, batch, seq)
+        tok_sh = rules.sharding_for(tshape, ("batch", "seq", "codebooks")[:len(tshape)])
+        atok = _sds(tshape, jnp.int32, tok_sh)
+        fn = jax.jit(lambda p, t: L.prefill(p, t, cfg, rules, max_len=seq))
+        lowered = fn.lower(aparams, atok)
+        return lowered, meta
+
+    # decode: one new token against a seq-long cache
+    cache_builder = jax.jit(partial(L.init_caches, cfg, batch, seq, rules))
+    cache_sh = cache_builder.lower().compile().output_shardings
+    acache = jax.eval_shape(cache_builder)
+    acache = jax.tree.map(lambda s, sh: _sds(s.shape, s.dtype, sh),
+                          acache, cache_sh)
+    tshape = _token_shape(cfg, batch, 1)
+    tok_sh = rules.sharding_for(tshape, ("batch", "seq", "codebooks")[:len(tshape)])
+    atok = _sds(tshape, jnp.int32, tok_sh)
+    apos = _sds((), jnp.int32)
+    fn = jax.jit(lambda p, c, t, pos: L.decode_step(p, c, t, pos, cfg, rules),
+                 donate_argnums=(1,))
+    lowered = fn.lower(aparams, acache, atok, apos)
+    return lowered, meta
+
+
+def analyze(lowered, meta, keep_hlo: bool = False):
+    t0 = time.monotonic()
+    compiled = lowered.compile()
+    compile_s = time.monotonic() - t0
+
+    cost = compiled.cost_analysis()
+    if isinstance(cost, (list, tuple)):
+        cost = cost[0]
+    flops = float(cost.get("flops", 0.0))
+    bytes_acc = float(cost.get("bytes accessed", 0.0))
+
+    mem = {}
+    try:
+        ma = compiled.memory_analysis()
+        for k in ("argument_size_in_bytes", "output_size_in_bytes",
+                  "temp_size_in_bytes", "generated_code_size_in_bytes",
+                  "alias_size_in_bytes"):
+            if hasattr(ma, k):
+                mem[k] = int(getattr(ma, k))
+        print(f"[dryrun] memory_analysis: {mem}")
+    except Exception as e:  # pragma: no cover
+        mem = {"error": str(e)}
+
+    hlo = compiled.as_text()
+    coll = R.collective_bytes(hlo)
+
+    cfg = C.get_config(meta["arch"])
+    mf = R.model_flops(cfg, meta["kind"], meta["batch"], meta["seq"])
+    n_dev = meta["devices"]
+    terms = R.roofline_terms(flops, bytes_acc, coll["total"])
+    useful = mf / max(flops * n_dev, 1.0)
+
+    rec = dict(meta)
+    rec.update({
+        "compile_s": round(compile_s, 2),
+        "flops_per_dev": flops, "bytes_per_dev": bytes_acc,
+        "collective_bytes_per_dev": coll["total"],
+        "collectives": {k: v for k, v in coll.items() if k != "total"},
+        "model_flops": mf, "useful_flop_ratio": useful,
+        "memory": mem,
+        **terms,
+    })
+    out = (rec, hlo) if keep_hlo else (rec, None)
+    del compiled
+    gc.collect()
+    return out
+
+
+def probe_config(cfg, groups: int):
+    """Same arch with `groups` pattern-groups of layers (tail preserved)."""
+    from dataclasses import replace
+    pat, _, tail = L.layer_kinds(cfg)
+    if cfg.family == "hybrid":
+        return replace(cfg, n_layers=groups * cfg.shared_attn_every + len(tail))
+    return replace(cfg, n_layers=groups * len(pat) + len(tail))
+
+
+def _probe_measure(arch, shape_name, multi_pod, overrides, cfg):
+    from repro.models import unroll as UN
+    with UN.force_unroll():
+        lowered, _ = lower_cell(arch, shape_name, multi_pod,
+                                rules_overrides=overrides, cfg=cfg)
+        compiled = lowered.compile()
+    cost = compiled.cost_analysis()
+    if isinstance(cost, (list, tuple)):
+        cost = cost[0]
+    coll = R.collective_bytes(compiled.as_text())
+    out = {"flops": float(cost.get("flops", 0.0)),
+           "bytes": float(cost.get("bytes accessed", 0.0)),
+           "coll": coll}
+    del compiled, lowered
+    gc.collect()
+    return out
+
+
+def loop_corrected_metrics(arch, shape_name, multi_pod=False, overrides=None,
+                           cfg_sets=None):
+    """XLA counts while bodies once; measure 1- and 2-group probes with all
+    scans unrolled, then total = M1 + (G-1) * (M2 - M1)."""
+    cfg = C.get_config(arch)
+    if cfg_sets:
+        from dataclasses import replace as _rep
+        cfg = _rep(cfg, **cfg_sets)
+    _, n_groups, _ = L.layer_kinds(cfg)
+    m1 = _probe_measure(arch, shape_name, multi_pod, overrides, probe_config(cfg, 1))
+    m2 = _probe_measure(arch, shape_name, multi_pod, overrides, probe_config(cfg, 2))
+
+    def extrap(a, b):
+        return a + (n_groups - 1) * (b - a)
+
+    coll = {k: max(0.0, extrap(m1["coll"][k], m2["coll"][k]))
+            for k in m1["coll"]}
+    return {
+        "flops_per_dev": max(0.0, extrap(m1["flops"], m2["flops"])),
+        "bytes_per_dev": max(0.0, extrap(m1["bytes"], m2["bytes"])),
+        "coll": coll,
+        "probe": {"g1": m1, "g2": m2, "n_groups": n_groups},
+    }
+
+
+def run_cells(archs, shapes, meshes, json_path, overrides=None, force=False,
+              probes=True, cfg_sets=None):
+    results = {}
+    if json_path and os.path.exists(json_path):
+        with open(json_path) as f:
+            results = json.load(f)
+    for arch in archs:
+        applicable = C.shapes_for(arch)
+        for shape in shapes:
+            if shape not in applicable:
+                print(f"[dryrun] SKIP {arch} x {shape} (see DESIGN.md)")
+                continue
+            for mesh_kind in meshes:
+                key = f"{arch}|{shape}|{mesh_kind}"
+                if key in results and not force:
+                    print(f"[dryrun] cached {key}")
+                    continue
+                print(f"[dryrun] lowering {key} ...", flush=True)
+                t0 = time.monotonic()
+                cfg_cell = None
+                if cfg_sets:
+                    from dataclasses import replace as _rep
+                    cfg_cell = _rep(C.get_config(arch), **cfg_sets)
+                try:
+                    lowered, meta = lower_cell(arch, shape,
+                                               mesh_kind == "multi",
+                                               rules_overrides=overrides,
+                                               cfg=cfg_cell)
+                    rec, _ = analyze(lowered, meta)
+                    rec["lower_s"] = round(time.monotonic() - t0 - rec["compile_s"], 2)
+                    if probes and mesh_kind == "single":
+                        corr = loop_corrected_metrics(arch, shape,
+                                                      overrides=overrides,
+                                                      cfg_sets=cfg_sets)
+                        rec["raw_flops_per_dev"] = rec["flops_per_dev"]
+                        rec["raw_bytes_per_dev"] = rec["bytes_per_dev"]
+                        rec["raw_collective_bytes_per_dev"] = rec["collective_bytes_per_dev"]
+                        rec["flops_per_dev"] = corr["flops_per_dev"]
+                        rec["bytes_per_dev"] = corr["bytes_per_dev"]
+                        rec["collective_bytes_per_dev"] = corr["coll"]["total"]
+                        rec["collectives"] = {k: v for k, v in corr["coll"].items()
+                                              if k != "total"}
+                        rec["probe"] = corr["probe"]
+                        rec.update(R.roofline_terms(rec["flops_per_dev"],
+                                                    rec["bytes_per_dev"],
+                                                    rec["collective_bytes_per_dev"]))
+                        cfg2 = C.get_config(arch)
+                        rec["useful_flop_ratio"] = (
+                            rec["model_flops"] / max(rec["flops_per_dev"]
+                                                     * rec["devices"], 1.0))
+                    rec["status"] = "ok"
+                except Exception as e:
+                    rec = {"arch": arch, "shape": shape, "mesh": mesh_kind,
+                           "status": "FAIL", "error": f"{type(e).__name__}: {e}"}
+                    print(f"[dryrun] FAIL {key}: {rec['error'][:500]}")
+                results[key] = rec
+                lowered = None
+                if json_path:
+                    with open(json_path, "w") as f:
+                        json.dump(results, f, indent=1)
+                if rec.get("status") == "ok":
+                    print(f"[dryrun] OK {key}: compile={rec['compile_s']}s "
+                          f"flops/dev={rec['flops_per_dev']:.3e} "
+                          f"coll/dev={rec['collective_bytes_per_dev']:.3e} "
+                          f"dominant={rec['dominant']}", flush=True)
+                gc.collect()
+    return results
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--archs", default=",".join(C.ARCHS))
+    ap.add_argument("--shapes", default="train_4k,prefill_32k,decode_32k,long_500k")
+    ap.add_argument("--meshes", default="single,multi")
+    ap.add_argument("--json", default="launch_dryrun_results.json")
+    ap.add_argument("--force", action="store_true")
+    ap.add_argument("--no-probes", action="store_true")
+    ap.add_argument("--set", action="append", default=[],
+                    help="ModelConfig field override, e.g. rwkv_chunk=32")
+    ap.add_argument("--override", action="append", default=[],
+                    help="logical=physical rule override (hillclimb knob)")
+    args = ap.parse_args()
+    overrides = {}
+    for ov in args.override:
+        k, _, v = ov.partition("=")
+        overrides[k] = None if v in ("", "None") else v
+    cfg_sets = {}
+    for sv in args.set:
+        k, _, v = sv.partition("=")
+        cfg_sets[k] = int(v) if v.lstrip("-").isdigit() else (
+            float(v) if v.replace(".", "", 1).lstrip("-").isdigit() else v)
+    results = run_cells([a.strip() for a in args.archs.split(",") if a.strip()],
+                        [s.strip() for s in args.shapes.split(",") if s.strip()],
+                        [m.strip() for m in args.meshes.split(",") if m.strip()],
+                        args.json, overrides=overrides or None,
+                        force=args.force, probes=not args.no_probes,
+                        cfg_sets=cfg_sets or None)
+    ok = sum(1 for r in results.values() if r.get("status") == "ok")
+    fail = sum(1 for r in results.values() if r.get("status") == "FAIL")
+    print(f"[dryrun] done: {ok} ok, {fail} failed")
+    return 0 if fail == 0 else 1
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,76 @@
+"""Production training launcher.
+
+    PYTHONPATH=src python -m repro.launch.train --arch qwen2-0.5b \
+        --steps 1000 --ckpt-dir /ckpts/qwen2 [--mesh single|multi|host]
+
+On a real cluster this process runs per host under the cluster scheduler
+(jax.distributed.initialize picks up coordinator env vars); SIGTERM
+triggers checkpoint-and-exit so preemptions are lossless, and --resume
+auto restarts from the newest complete checkpoint (any mesh: checkpoints
+store logical arrays). In this container --mesh host uses the single CPU
+device and a reduced config smoke-sizes the run.
+"""
+from __future__ import annotations
+
+import argparse
+
+import jax
+
+from repro import configs as C
+from repro.data import DataConfig, TokenPipeline
+from repro.launch.mesh import make_production_mesh
+from repro.models import lm as L
+from repro.models.nn import count_params, init_params
+from repro.optim import AdamWConfig, init_opt_state
+from repro.parallel.sharding import ShardingRules
+from repro.train import Trainer, TrainState, make_train_step
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--seq", type=int, default=None)
+    ap.add_argument("--batch", type=int, default=None)
+    ap.add_argument("--mesh", default="host", choices=["host", "single", "multi"])
+    ap.add_argument("--smoke", action="store_true",
+                    help="use the reduced same-family config")
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--ckpt-every", type=int, default=100)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    args = ap.parse_args()
+
+    try:  # multi-host: no-op in single-process environments
+        jax.distributed.initialize()
+    except Exception:
+        pass
+
+    cfg = C.get_smoke_config(args.arch) if args.smoke else C.get_config(args.arch)
+    if args.mesh == "host":
+        rules = ShardingRules(None)
+    else:
+        rules = ShardingRules(make_production_mesh(multi_pod=args.mesh == "multi"))
+
+    seq = args.seq or (64 if args.smoke else 4096)
+    batch = args.batch or (8 if args.smoke else 256)
+    specs = L.model_param_specs(cfg)
+    print(f"[train] {cfg.name}: {count_params(specs) / 1e6:.1f}M params, "
+          f"seq={seq} batch={batch} mesh={args.mesh}")
+
+    opt_cfg = AdamWConfig(lr_peak=args.lr, decay_steps=max(args.steps, 1000))
+    pipe = TokenPipeline(DataConfig(
+        vocab_size=cfg.vocab_size, seq_len=seq, global_batch=batch,
+        n_codebooks=cfg.n_codebooks))
+    params = init_params(specs, seed=0)
+    opt = init_opt_state(params, opt_cfg)
+    step_fn = make_train_step(cfg, opt_cfg, rules)
+    trainer = Trainer(step_fn, TrainState(params, opt), pipe,
+                      ckpt_dir=args.ckpt_dir, ckpt_every=args.ckpt_every)
+    trainer.maybe_resume()
+    hist = trainer.run(args.steps)
+    if hist:
+        print(f"[train] final loss {float(hist[-1]['loss']):.4f}")
+
+
+if __name__ == "__main__":
+    main()

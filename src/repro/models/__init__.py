@@ -1,0 +1,5 @@
+from repro.models.lm import (  # noqa: F401
+    ModelConfig, model_param_specs, forward, lm_loss, init_caches,
+    decode_step, prefill,
+)
+from repro.models.nn import init_params, abstract_params, param_shardings  # noqa: F401

@@ -1,0 +1,297 @@
+"""Attention: GQA + RoPE + sliding-window + softcap, memory-bounded.
+
+Three execution paths, all pure jnp (so the dry-run's cost analysis sees
+real FLOPs; a Pallas flash kernel would hide them from cost_analysis):
+
+* ``flash``  — blockwise online-softmax scan over KV chunks for full
+  causal attention. O(S·chunk) live memory instead of O(S^2).
+* ``banded`` — sliding-window layers attend over a fixed-width KV band
+  gathered per query chunk: FLOPs O(S·(window+chunk)), not O(S^2).
+* ``decode`` — single-position query against a (possibly ring-buffered)
+  KV cache.
+
+GQA is expressed by reshaping queries to [B, S, KV, G, D] so the HLO
+never materializes repeated KV heads.
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.nn import ParamSpec, rms_norm
+from repro.models import unroll as U
+
+__all__ = ["AttnConfig", "attn_param_specs", "apply_rope", "attention",
+           "init_kv_cache", "flash_attention", "banded_attention"]
+
+_NEG_INF = -2.0e38
+
+
+@dataclass(frozen=True)
+class AttnConfig:
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    head_dim: int
+    rope_theta: float = 10000.0
+    window: Optional[int] = None        # sliding window (None = global)
+    attn_softcap: Optional[float] = None
+    qk_norm: bool = False
+    qkv_bias: bool = False
+    query_scale: Optional[float] = None  # default head_dim**-0.5
+    norm_eps: float = 1e-6
+    chunk_kv: int = 1024                # flash KV chunk
+    chunk_q: int = 512                  # banded query chunk
+    probs_bf16: bool = False            # PV matmul in bf16 (memory diet)
+    dtype: str = "bfloat16"
+
+    @property
+    def groups(self) -> int:
+        return self.n_heads // self.n_kv_heads
+
+    @property
+    def scale(self) -> float:
+        return self.query_scale if self.query_scale is not None else self.head_dim ** -0.5
+
+
+def attn_param_specs(c: AttnConfig) -> dict:
+    d, h, k, hd = c.d_model, c.n_heads, c.n_kv_heads, c.head_dim
+    specs = {
+        "wq": ParamSpec((d, h, hd), ("embed", "heads", "head_dim"), c.dtype),
+        "wk": ParamSpec((d, k, hd), ("embed", "kv_heads", "head_dim"), c.dtype),
+        "wv": ParamSpec((d, k, hd), ("embed", "kv_heads", "head_dim"), c.dtype),
+        "wo": ParamSpec((h, hd, d), ("heads", "head_dim", "embed"), c.dtype),
+    }
+    if c.qkv_bias:
+        specs["bq"] = ParamSpec((h, hd), ("heads", "head_dim"), c.dtype, init="zeros")
+        specs["bk"] = ParamSpec((k, hd), ("kv_heads", "head_dim"), c.dtype, init="zeros")
+        specs["bv"] = ParamSpec((k, hd), ("kv_heads", "head_dim"), c.dtype, init="zeros")
+    if c.qk_norm:
+        specs["q_norm"] = ParamSpec((hd,), ("head_dim",), c.dtype, init="ones")
+        specs["k_norm"] = ParamSpec((hd,), ("head_dim",), c.dtype, init="ones")
+    return specs
+
+
+def apply_rope(x, positions, theta: float):
+    """x [..., S, H, D] with positions [S] (or [B, S] broadcast)."""
+    d = x.shape[-1]
+    half = d // 2
+    freq = jnp.exp(-math.log(theta) * jnp.arange(half, dtype=jnp.float32) / half)
+    ang = positions.astype(jnp.float32)[..., None] * freq  # [S, half]
+    # broadcast over head axis: [..., S, 1, half]
+    cos = jnp.cos(ang)[..., None, :]
+    sin = jnp.sin(ang)[..., None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    xf1, xf2 = x1.astype(jnp.float32), x2.astype(jnp.float32)
+    return jnp.concatenate([xf1 * cos - xf2 * sin,
+                            xf2 * cos + xf1 * sin], axis=-1).astype(x.dtype)
+
+
+def _softcap(s, cap: Optional[float]):
+    if cap is None:
+        return s
+    return cap * jnp.tanh(s / cap)
+
+
+def _project_qkv(params, x, c: AttnConfig, positions):
+    q = jnp.einsum("bsd,dhk->bshk", x, params["wq"])
+    k = jnp.einsum("bsd,dhk->bshk", x, params["wk"])
+    v = jnp.einsum("bsd,dhk->bshk", x, params["wv"])
+    if c.qkv_bias:
+        q = q + params["bq"]
+        k = k + params["bk"]
+        v = v + params["bv"]
+    if c.qk_norm:
+        q = rms_norm(q, params["q_norm"], c.norm_eps)
+        k = rms_norm(k, params["k_norm"], c.norm_eps)
+    q = apply_rope(q, positions, c.rope_theta)
+    k = apply_rope(k, positions, c.rope_theta)
+    return q, k, v
+
+
+def flash_attention(q, k, v, c: AttnConfig, q_positions, kv_positions):
+    """Blockwise causal attention. q [B,S,H,D]; k/v [B,T,KV,D]."""
+    b, s, h, d = q.shape
+    t = k.shape[1]
+    kv = c.n_kv_heads
+    g = c.groups
+    ck = min(c.chunk_kv, t)
+    pad = (-t) % ck
+    if pad:  # padded KV positions get -1e9 -> masked out everywhere
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        kv_positions = jnp.pad(kv_positions, (0, pad), constant_values=-10 ** 9)
+        t += pad
+    nck = t // ck
+    qg = q.reshape(b, s, kv, g, d).astype(jnp.float32) * c.scale
+    kc = jnp.moveaxis(k.reshape(b, nck, ck, kv, d), 1, 0)
+    vc = jnp.moveaxis(v.reshape(b, nck, ck, kv, d), 1, 0)
+    pc = kv_positions.reshape(nck, ck)
+
+    m0 = jnp.full((b, kv, g, s), _NEG_INF, jnp.float32)
+    l0 = jnp.zeros((b, kv, g, s), jnp.float32)
+    a0 = jnp.zeros((b, kv, g, s, d), jnp.float32)
+
+    @jax.checkpoint  # recompute per-chunk probs in backward: without this
+    def step(carry, xs):  # scan-of-grad stacks [nck,B,KV,G,S,ck] f32 probs
+        m, l, acc = carry
+        kb, vb, pb = xs
+        sc = jnp.einsum("bskgd,btkd->bkgst", qg, kb.astype(jnp.float32))
+        sc = _softcap(sc, c.attn_softcap)
+        mask = q_positions[:, None] >= pb[None, :]
+        if c.window is not None:
+            mask &= (q_positions[:, None] - pb[None, :]) < c.window
+        sc = jnp.where(mask[None, None, None], sc, _NEG_INF)
+        m_new = jnp.maximum(m, jnp.max(sc, axis=-1))
+        p = jnp.exp(sc - m_new[..., None])
+        corr = jnp.exp(m - m_new)
+        l = l * corr + jnp.sum(p, axis=-1)
+        pv = p.astype(jnp.bfloat16) if c.probs_bf16 else p
+        acc = acc * corr[..., None] + jnp.einsum(
+            "bkgst,btkd->bkgsd", pv, vb.astype(pv.dtype)).astype(jnp.float32)
+        return (m_new, l, acc), None
+
+    (m, l, acc), _ = U.scan(step, (m0, l0, a0), (kc, vc, pc))
+    out = acc / jnp.maximum(l, 1e-30)[..., None]
+    out = jnp.moveaxis(out, 3, 1).reshape(b, s, h, d)
+    return out.astype(q.dtype)
+
+
+def banded_attention(q, k, v, c: AttnConfig, positions):
+    """Sliding-window attention with O(S*(window+chunk)) FLOPs.
+
+    Pads KV left by `window` (rounded to chunk) and, per query chunk i,
+    attends to the fixed-width slab covering [i*cq - window, i*cq + cq).
+    """
+    b, s, h, d = q.shape
+    kv, g = c.n_kv_heads, c.groups
+    win = c.window
+    cq = min(c.chunk_q, s)
+    s_orig = s
+    qpad = (-s) % cq
+    if qpad:  # padded queries are garbage rows, sliced off at the end
+        q = jnp.pad(q, ((0, 0), (0, qpad), (0, 0), (0, 0)))
+        positions = jnp.pad(positions, (0, qpad))
+        s += qpad
+    nq = s // cq
+    pad = win  # left pad; right pad matches any query padding
+    kp = jnp.pad(k, ((0, 0), (pad, qpad), (0, 0), (0, 0)))
+    vp = jnp.pad(v, ((0, 0), (pad, qpad), (0, 0), (0, 0)))
+    pos_p = jnp.pad(positions[:s - qpad] if qpad else positions, (pad, qpad),
+                    constant_values=-10 ** 9)
+    width = win + cq
+    qg = q.reshape(b, nq, cq, kv, g, d).astype(jnp.float32) * c.scale
+    qpos = positions.reshape(nq, cq)
+
+    @jax.checkpoint  # see flash_attention: keep per-chunk probs transient
+    def one_chunk(i):
+        start = i * cq  # in padded coords this covers [i*cq - win, i*cq + cq)
+        kb = jax.lax.dynamic_slice_in_dim(kp, start, width, axis=1)
+        vb = jax.lax.dynamic_slice_in_dim(vp, start, width, axis=1)
+        pb = jax.lax.dynamic_slice_in_dim(pos_p, start, width, axis=0)
+        qb = qg[:, i]
+        pq = qpos[i]
+        sc = jnp.einsum("bskgd,btkd->bkgst", qb, kb.astype(jnp.float32))
+        sc = _softcap(sc, c.attn_softcap)
+        mask = (pq[:, None] >= pb[None, :]) & ((pq[:, None] - pb[None, :]) < win)
+        sc = jnp.where(mask[None, None, None], sc, _NEG_INF)
+        p = jax.nn.softmax(sc, axis=-1)
+        pv = p.astype(jnp.bfloat16) if c.probs_bf16 else p
+        ob = jnp.einsum("bkgst,btkd->bskgd", pv, vb.astype(pv.dtype))
+        return ob  # [b, cq, kv, g, d]
+
+    out = U.map_(one_chunk, jnp.arange(nq))            # [nq, b, cq, kv, g, d]
+    out = jnp.moveaxis(out, 0, 1).reshape(b, s, h, d)[:, :s_orig]
+    return out.astype(q.dtype)
+
+
+def init_kv_cache(batch: int, length: int, c: AttnConfig, rules=None):
+    """KV cache [B, L, KV, D]; local layers pass length=window (ring)."""
+    shape = (batch, length, c.n_kv_heads, c.head_dim)
+    k = jnp.zeros(shape, jnp.dtype(c.dtype))
+    v = jnp.zeros(shape, jnp.dtype(c.dtype))
+    if rules is not None:
+        k = rules.shard(k, "batch", "seq_kv", "kv_heads", "head_dim")
+        v = rules.shard(v, "batch", "seq_kv", "kv_heads", "head_dim")
+    return {"k": k, "v": v}
+
+
+def _cache_write(cache, k_new, v_new, pos, ring: Optional[int]):
+    """Insert [B, S_new, KV, D] at position pos (scalar). Ring-buffer if
+    ``ring`` is the cache length for a windowed layer."""
+    length = cache["k"].shape[1]
+    idx = pos % ring if ring else pos
+    k = jax.lax.dynamic_update_slice_in_dim(cache["k"], k_new, idx, axis=1)
+    v = jax.lax.dynamic_update_slice_in_dim(cache["v"], v_new, idx, axis=1)
+    del length
+    return {"k": k, "v": v}
+
+
+def decode_attention(q, cache, c: AttnConfig, pos, ring: Optional[int]):
+    """q [B,1,H,D] against cache [B,L,KV,D]; pos = current position."""
+    b, _, h, d = q.shape
+    kv, g = c.n_kv_heads, c.groups
+    length = cache["k"].shape[1]
+    qg = q.reshape(b, 1, kv, g, d).astype(jnp.float32) * c.scale
+    sc = jnp.einsum("bskgd,btkd->bkgst", qg, cache["k"].astype(jnp.float32))
+    sc = _softcap(sc, c.attn_softcap)
+    slots = jnp.arange(length)
+    if ring:
+        # slot holds absolute position p iff p = pos - ((idx_now - slot) mod ring)
+        idx_now = pos % ring
+        age = (idx_now - slots) % ring
+        abs_pos = pos - age
+        mask = (abs_pos >= 0) & (abs_pos <= pos) & ((pos - abs_pos) < c.window)
+    else:
+        mask = slots <= pos
+    sc = jnp.where(mask[None, None, None, None, :], sc, _NEG_INF)
+    p = jax.nn.softmax(sc, axis=-1)
+    out = jnp.einsum("bkgst,btkd->bskgd", p, cache["v"].astype(jnp.float32))
+    return out.reshape(b, 1, h, d).astype(q.dtype)
+
+
+def attention(params, x, c: AttnConfig, positions, rules=None,
+              cache=None, pos=None, mode: str = "train"):
+    """Full attention block: qkv proj -> core -> out proj.
+
+    mode: 'train' (no cache) | 'prefill' (write cache) | 'decode' (1 tok).
+    Returns (out [B,S,d], new_cache_or_None).
+    """
+    q, k, v = _project_qkv(params, x, c, positions)
+    if rules is not None:
+        q = rules.shard(q, "batch", "seq", "heads", "head_dim")
+        k = rules.shard(k, "batch", "seq", "kv_heads", "head_dim")
+        v = rules.shard(v, "batch", "seq", "kv_heads", "head_dim")
+    new_cache = None
+    ring = c.window if (c.window is not None and cache is not None
+                        and cache["k"].shape[1] == c.window) else None
+    if mode == "decode":
+        new_cache = _cache_write(cache, k, v, pos, ring)
+        ctx = decode_attention(q, new_cache, c, pos, ring)
+    else:
+        if mode == "prefill":
+            # positions start at 0. Ring layers keep only the last `window`
+            # tokens at slots p % window: roll so slot j holds position
+            # S - window + ((j - S) mod window).
+            if ring:
+                s_len = k.shape[1]
+                if s_len >= ring:
+                    kk = jnp.roll(k[:, -ring:], s_len % ring, axis=1)
+                    vv = jnp.roll(v[:, -ring:], s_len % ring, axis=1)
+                else:
+                    kk, vv = k, v
+                new_cache = _cache_write(cache, kk, vv, 0, None)
+            else:
+                new_cache = _cache_write(cache, k, v, 0, None)
+        if c.window is not None and x.shape[1] > c.window:
+            ctx = banded_attention(q, k, v, c, positions)
+        else:
+            ctx = flash_attention(q, k, v, c, positions, positions)
+    out = jnp.einsum("bshk,hkd->bsd", ctx, params["wo"])
+    if rules is not None:
+        out = rules.shard(out, "batch", "seq_res", "embed")
+    return out, new_cache

@@ -1,0 +1,47 @@
+"""Gated-linear-unit FFNs (SwiGLU / GeGLU)."""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.nn import ParamSpec
+
+__all__ = ["FFNConfig", "ffn_param_specs", "ffn"]
+
+
+@dataclass(frozen=True)
+class FFNConfig:
+    d_model: int
+    d_ff: int
+    activation: str = "silu"   # silu (SwiGLU) | gelu (GeGLU, gemma)
+    dtype: str = "bfloat16"
+
+
+def ffn_param_specs(c: FFNConfig) -> dict:
+    return {
+        "w_gate": ParamSpec((c.d_model, c.d_ff), ("embed", "mlp"), c.dtype),
+        "w_up": ParamSpec((c.d_model, c.d_ff), ("embed", "mlp"), c.dtype),
+        "w_down": ParamSpec((c.d_ff, c.d_model), ("mlp", "embed"), c.dtype),
+    }
+
+
+def _act(x, name: str):
+    if name == "silu":
+        return jax.nn.silu(x)
+    if name == "gelu":
+        return jax.nn.gelu(x, approximate=True)
+    raise ValueError(name)
+
+
+def ffn(params, x, c: FFNConfig, rules=None):
+    g = jnp.einsum("bsd,df->bsf", x, params["w_gate"])
+    u = jnp.einsum("bsd,df->bsf", x, params["w_up"])
+    h = _act(g, c.activation) * u
+    if rules is not None:
+        h = rules.shard(h, "batch", "seq", "mlp")
+    out = jnp.einsum("bsf,fd->bsd", h, params["w_down"])
+    if rules is not None:
+        out = rules.shard(out, "batch", "seq_res", "embed")
+    return out

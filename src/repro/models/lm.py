@@ -1,0 +1,501 @@
+"""Unified LM assembly for all assigned architectures.
+
+One ``ModelConfig`` drives dense / MoE / hybrid(Mamba2+shared-attn) /
+SSM(RWKV6) / VLM / audio decoders. Layers execute as a lax.scan over
+repeating *pattern groups* (stacked params passed as scan xs, so FSDP
+gathers one group per step and the HLO stays small), with any
+non-divisible tail applied unscanned.
+
+Pattern characters: 'G' global attention block, 'L' sliding-window block,
+'M' Mamba2 block, 'R' RWKV6 block, 'A' shared attention block (zamba2 —
+single weight copy + per-invocation LoRA on W_q).
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass, field
+from functools import partial
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import attention as A
+from repro.models import ffn as F
+from repro.models import mamba2 as M
+from repro.models import moe as MOE
+from repro.models import rwkv6 as R
+from repro.models.nn import ParamSpec, rms_norm
+from repro.models import unroll as U
+
+__all__ = ["ModelConfig", "model_param_specs", "forward", "lm_loss",
+           "init_caches", "decode_step", "layer_kinds"]
+
+
+@dataclass(frozen=True)
+class ModelConfig:
+    name: str = "model"
+    family: str = "dense"        # dense | moe | hybrid | ssm | vlm | audio
+    n_layers: int = 4
+    d_model: int = 256
+    n_heads: int = 4
+    n_kv_heads: int = 4
+    d_ff: int = 1024
+    vocab_size: int = 1024
+    head_dim: Optional[int] = None
+    # attention
+    qkv_bias: bool = False
+    qk_norm: bool = False
+    logit_softcap: Optional[float] = None
+    attn_softcap: Optional[float] = None
+    rope_theta: float = 10000.0
+    rope_theta_local: Optional[float] = None
+    window: Optional[int] = None
+    layer_pattern: str = "G"     # cycled over layers; tail unscanned
+    query_scale: Optional[float] = None
+    # ffn
+    activation: str = "silu"
+    # moe
+    n_experts: int = 0
+    n_experts_per_token: int = 0
+    moe_d_ff: int = 0
+    capacity_factor: float = 1.25
+    renorm_gates: bool = True
+    aux_loss_coef: float = 0.01
+    # ssm / hybrid
+    ssm_state: int = 64
+    ssm_chunk: int = 64
+    shared_attn_every: int = 6   # zamba2: shared block every N mamba layers
+    lora_rank: int = 64
+    rwkv_chunk: int = 16
+    # embeddings / output
+    n_codebooks: int = 1
+    tie_embeddings: bool = True
+    embed_scale: bool = False    # gemma: x *= sqrt(d)
+    post_norms: bool = False     # gemma2/3 sandwich norms
+    norm_eps: float = 1e-6
+    # execution
+    dtype: str = "bfloat16"
+    remat: bool = True
+    probs_bf16: bool = False
+    chunk_kv: int = 1024
+    chunk_q: int = 512
+    loss_chunk: int = 512
+
+    @property
+    def hd(self) -> int:
+        return self.head_dim if self.head_dim else self.d_model // self.n_heads
+
+    def attn_cfg(self, local: bool) -> A.AttnConfig:
+        return A.AttnConfig(
+            d_model=self.d_model, n_heads=self.n_heads,
+            n_kv_heads=self.n_kv_heads, head_dim=self.hd,
+            rope_theta=(self.rope_theta_local if (local and self.rope_theta_local)
+                        else self.rope_theta),
+            window=self.window if local else None,
+            attn_softcap=self.attn_softcap, qk_norm=self.qk_norm,
+            qkv_bias=self.qkv_bias, query_scale=self.query_scale,
+            norm_eps=self.norm_eps, chunk_kv=self.chunk_kv,
+            chunk_q=self.chunk_q, probs_bf16=self.probs_bf16,
+            dtype=self.dtype)
+
+    def mamba_cfg(self) -> M.Mamba2Config:
+        return M.Mamba2Config(d_model=self.d_model, d_state=self.ssm_state,
+                              chunk=self.ssm_chunk, norm_eps=self.norm_eps,
+                              dtype=self.dtype)
+
+    def rwkv_cfg(self) -> R.RWKV6Config:
+        return R.RWKV6Config(d_model=self.d_model, d_ff=self.d_ff,
+                             chunk=self.rwkv_chunk, norm_eps=self.norm_eps,
+                             dtype=self.dtype)
+
+    def moe_cfg(self) -> MOE.MoEConfig:
+        return MOE.MoEConfig(d_model=self.d_model, n_experts=self.n_experts,
+                             n_per_token=self.n_experts_per_token,
+                             d_ff=self.moe_d_ff,
+                             capacity_factor=self.capacity_factor,
+                             renorm_gates=self.renorm_gates,
+                             activation=self.activation, dtype=self.dtype)
+
+    def ffn_cfg(self) -> F.FFNConfig:
+        return F.FFNConfig(d_model=self.d_model, d_ff=self.d_ff,
+                           activation=self.activation, dtype=self.dtype)
+
+
+# ---------------------------------------------------------------------------
+# layer layout
+
+
+def layer_kinds(cfg: ModelConfig):
+    """Per-layer kind chars, full length (pattern cycled)."""
+    if cfg.family == "hybrid":
+        # groups of (A + every*M); 'A' is an *insertion*, not a counted layer
+        pat = "A" + "M" * cfg.shared_attn_every
+        n_groups = cfg.n_layers // cfg.shared_attn_every
+        tail = cfg.n_layers - n_groups * cfg.shared_attn_every
+        return pat, n_groups, "M" * tail
+    if cfg.family == "ssm":
+        return "R", cfg.n_layers, ""
+    pat = cfg.layer_pattern
+    n_groups = cfg.n_layers // len(pat)
+    tail = pat[:cfg.n_layers - n_groups * len(pat)]
+    return pat, n_groups, tail
+
+
+def _norm_spec(cfg):
+    return ParamSpec((cfg.d_model,), ("embed",), cfg.dtype,
+                     init="zeros" if cfg.post_norms else "ones")
+
+
+def _block_param_specs(cfg: ModelConfig, kind: str) -> dict:
+    if kind in ("G", "L"):
+        specs = {
+            "ln1": _norm_spec(cfg),
+            "attn": A.attn_param_specs(cfg.attn_cfg(kind == "L")),
+            "ln2": _norm_spec(cfg),
+        }
+        if cfg.post_norms:
+            specs["ln1_post"] = _norm_spec(cfg)
+            specs["ln2_post"] = _norm_spec(cfg)
+        if cfg.family == "moe" or (cfg.n_experts > 0):
+            specs["moe"] = MOE.moe_param_specs(cfg.moe_cfg())
+        else:
+            specs["ffn"] = F.ffn_param_specs(cfg.ffn_cfg())
+        return specs
+    if kind == "M":
+        return {"ln": _norm_spec(cfg), "mamba": M.mamba2_param_specs(cfg.mamba_cfg())}
+    if kind == "R":
+        rs = R.rwkv6_param_specs(cfg.rwkv_cfg())
+        return {"ln1": _norm_spec(cfg), "time": rs["time"],
+                "ln2": _norm_spec(cfg), "channel": rs["channel"]}
+    if kind == "A":
+        # per-invocation LoRA on W_q only; shared weights live outside scan
+        h, hd, r = cfg.n_heads, cfg.hd, cfg.lora_rank
+        return {
+            "lora_a": ParamSpec((cfg.d_model, r), ("embed", None), cfg.dtype),
+            "lora_b": ParamSpec((r, h * hd), (None, "heads"), cfg.dtype,
+                                init="zeros"),
+        }
+    raise ValueError(kind)
+
+
+def _stack_specs(specs, n: int):
+    return jax.tree.map(
+        lambda s: ParamSpec((n,) + s.shape, ("layers",) + s.axes, s.dtype,
+                            s.init, s.scale),
+        specs, is_leaf=lambda x: isinstance(x, ParamSpec))
+
+
+def model_param_specs(cfg: ModelConfig) -> dict:
+    pat, n_groups, tail = layer_kinds(cfg)
+    group = {f"p{i}": _block_param_specs(cfg, k) for i, k in enumerate(pat)}
+    specs = {
+        "embed": ParamSpec(
+            ((cfg.n_codebooks,) if cfg.n_codebooks > 1 else ())
+            + (cfg.vocab_size, cfg.d_model),
+            (("codebooks",) if cfg.n_codebooks > 1 else ())
+            + ("vocab", "embed"),
+            cfg.dtype, init="embed", scale=cfg.d_model ** -0.5),
+        "blocks": _stack_specs(group, n_groups),
+        "ln_f": _norm_spec(cfg),
+    }
+    if tail:
+        specs["tail"] = {f"t{i}": _block_param_specs(cfg, k)
+                         for i, k in enumerate(tail)}
+    if cfg.family == "hybrid":
+        specs["shared_attn"] = {
+            "ln": _norm_spec(cfg),
+            "attn": A.attn_param_specs(cfg.attn_cfg(False)),
+        }
+    if not cfg.tie_embeddings:
+        head_shape = ((cfg.n_codebooks,) if cfg.n_codebooks > 1 else ()) + \
+            (cfg.d_model, cfg.vocab_size)
+        head_axes = (("codebooks",) if cfg.n_codebooks > 1 else ()) + \
+            ("embed", "vocab")
+        specs["head"] = ParamSpec(head_shape, head_axes, cfg.dtype)
+    return specs
+
+
+# ---------------------------------------------------------------------------
+# block application
+
+
+def _apply_block(kind: str, bp, x, cfg: ModelConfig, rules, positions,
+                 mode: str, cache, pos, shared=None):
+    """Returns (x, new_cache, aux)."""
+    aux = jnp.zeros((), jnp.float32)
+    if kind in ("G", "L"):
+        ac = cfg.attn_cfg(kind == "L")
+        h = rms_norm(x, bp["ln1"], cfg.norm_eps, plus_one=cfg.post_norms)
+        attn_out, new_kv = A.attention(bp["attn"], h, ac, positions, rules,
+                                       cache=None if cache is None else cache["kv"],
+                                       pos=pos, mode=mode)
+        if cfg.post_norms:
+            attn_out = rms_norm(attn_out, bp["ln1_post"], cfg.norm_eps, plus_one=True)
+        x = x + attn_out
+        h = rms_norm(x, bp["ln2"], cfg.norm_eps, plus_one=cfg.post_norms)
+        if "moe" in bp:
+            f_out, aux = MOE.moe(bp["moe"], h, cfg.moe_cfg(), rules)
+        else:
+            f_out = F.ffn(bp["ffn"], h, cfg.ffn_cfg(), rules)
+        if cfg.post_norms:
+            f_out = rms_norm(f_out, bp["ln2_post"], cfg.norm_eps, plus_one=True)
+        x = x + f_out
+        new_cache = None if cache is None else {"kv": new_kv}
+        return x, new_cache, aux
+    if kind == "M":
+        h = rms_norm(x, bp["ln"], cfg.norm_eps)
+        if mode == "train":
+            out, _ = M.mamba2(bp["mamba"], h, cfg.mamba_cfg(), rules)
+            return x + out, None, aux
+        out, new = M.mamba2(bp["mamba"], h, cfg.mamba_cfg(), rules,
+                            state=cache["ssm"], conv_state=cache["conv"],
+                            mode=mode)
+        return x + out, new, aux
+    if kind == "R":
+        rc = cfg.rwkv_cfg()
+        h = rms_norm(x, bp["ln1"], cfg.norm_eps)
+        if mode == "train":
+            out, _ = R.rwkv6_timemix(bp["time"], h, rc, rules)
+            x = x + out
+            h = rms_norm(x, bp["ln2"], cfg.norm_eps)
+            out, _ = R.rwkv6_channelmix(bp["channel"], h, rc, rules)
+            return x + out, None, aux
+        out, tnew = R.rwkv6_timemix(bp["time"], h, rc, rules,
+                                    state=cache["state"],
+                                    shift=cache["shift_t"], mode=mode)
+        x = x + out
+        h = rms_norm(x, bp["ln2"], cfg.norm_eps)
+        out, cnew = R.rwkv6_channelmix(bp["channel"], h, rc, rules,
+                                       shift=cache["shift_c"], mode=mode)
+        new = {"state": tnew["state"], "shift_t": tnew["shift"],
+               "shift_c": cnew["shift"]}
+        return x + out, new, aux
+    if kind == "A":
+        # zamba2 shared attention: shared weights + this invocation's LoRA
+        ac = cfg.attn_cfg(False)
+        sp = dict(shared["attn"])
+        delta = (bp["lora_a"] @ bp["lora_b"]).reshape(
+            cfg.d_model, cfg.n_heads, cfg.hd)
+        sp["wq"] = sp["wq"] + delta
+        h = rms_norm(x, shared["ln"], cfg.norm_eps)
+        out, new_kv = A.attention(sp, h, ac, positions, rules,
+                                  cache=None if cache is None else cache["kv"],
+                                  pos=pos, mode=mode)
+        new_cache = None if cache is None else {"kv": new_kv}
+        return x + out, new_cache, aux
+    raise ValueError(kind)
+
+
+def _group_body(cfg: ModelConfig, rules, pat: str, mode: str):
+    """Scan body over pattern groups: carry (x, aux), xs (params, caches)."""
+    def body(carry, xs):
+        x, aux = carry
+        gp, gc, positions, pos = xs
+        new_caches = {}
+        for i, kind in enumerate(pat):
+            cache_i = None if gc is None else gc.get(f"p{i}")
+            x, nc, a = _apply_block(kind, gp[f"p{i}"], x, cfg, rules,
+                                    positions, mode, cache_i, pos,
+                                    shared=gp.get("__shared__"))
+            if nc is not None:
+                new_caches[f"p{i}"] = nc
+            aux = aux + a
+        return (x, aux), (new_caches if new_caches else None)
+    return body
+
+
+def forward(params, tokens, cfg: ModelConfig, rules=None, mode: str = "train",
+            caches=None, pos=None):
+    """tokens [B,S] (or [B,S,C] multi-codebook) -> (hidden [B,S,d],
+    new_caches, aux). Call lm_head/lm_loss on the hidden states."""
+    pat, n_groups, tail = layer_kinds(cfg)
+    s = tokens.shape[1]
+    if pos is None:
+        positions = jnp.arange(s)
+    else:
+        pos = jnp.asarray(pos)
+        positions = jnp.reshape(pos, (1,)) if pos.ndim == 0 else pos
+
+    emb = params["embed"]
+    if cfg.n_codebooks > 1:
+        x = jnp.zeros(tokens.shape[:2] + (cfg.d_model,), jnp.dtype(cfg.dtype))
+        for cb in range(cfg.n_codebooks):
+            x = x + jnp.take(emb[cb], tokens[..., cb], axis=0)
+    else:
+        x = jnp.take(emb, tokens, axis=0)
+    if cfg.embed_scale:
+        x = x * jnp.asarray(math.sqrt(cfg.d_model), x.dtype)
+    if rules is not None:
+        x = rules.shard(x, "batch", "seq_res", "embed")
+
+    blocks = params["blocks"]
+    if cfg.family == "hybrid":
+        blocks = dict(blocks)
+        blocks["__shared__"] = jax.tree.map(
+            lambda p: jnp.broadcast_to(p, (n_groups,) + p.shape),
+            params["shared_attn"])
+
+    group_caches = None if caches is None else caches["groups"]
+    pos_b = jnp.broadcast_to(positions, (n_groups,) + positions.shape)
+    pos_s = (jnp.broadcast_to(pos, (n_groups,))
+             if pos is not None else jnp.zeros((n_groups,), jnp.int32))
+
+    body = _group_body(cfg, rules, pat, mode)
+    if cfg.remat:
+        body = jax.checkpoint(body)
+    (x, aux), new_group_caches = U.scan(
+        body, (x, jnp.zeros((), jnp.float32)),
+        (blocks, group_caches, pos_b, pos_s))
+
+    new_caches = None
+    if caches is not None:
+        new_caches = {"groups": new_group_caches}
+
+    if tail:
+        new_tail = {}
+        for i, kind in enumerate(tail):
+            cache_i = None if caches is None else caches["tail"].get(f"t{i}")
+            x, nc, a = _apply_block(kind, params["tail"][f"t{i}"], x, cfg,
+                                    rules, positions, mode, cache_i, pos,
+                                    shared=params.get("shared_attn"))
+            if nc is not None:
+                new_tail[f"t{i}"] = nc
+            aux = aux + a
+        if new_caches is not None:
+            new_caches["tail"] = new_tail
+
+    x = rms_norm(x, params["ln_f"], cfg.norm_eps, plus_one=cfg.post_norms)
+    return x, new_caches, aux
+
+
+# ---------------------------------------------------------------------------
+# heads & loss
+
+
+def _head_weight(params, cfg: ModelConfig):
+    if not cfg.tie_embeddings:
+        return params["head"]
+    emb = params["embed"]
+    if cfg.n_codebooks > 1:
+        return jnp.swapaxes(emb, -1, -2)
+    return emb.T
+
+
+def lm_logits(x, params, cfg: ModelConfig, rules=None):
+    """x [B,S,d] -> logits [B,S,(C,)V] (decode-sized inputs only)."""
+    w = _head_weight(params, cfg)
+    if cfg.n_codebooks > 1:
+        logits = jnp.einsum("bsd,cdv->bscv", x, w)
+    else:
+        logits = jnp.einsum("bsd,dv->bsv", x, w)
+    logits = logits.astype(jnp.float32)
+    if cfg.logit_softcap:
+        logits = cfg.logit_softcap * jnp.tanh(logits / cfg.logit_softcap)
+    return logits
+
+
+def lm_loss(params, tokens, cfg: ModelConfig, rules=None):
+    """Causal LM loss with seq-chunked, rematerialized CE (never holds the
+    full [B,S,V] logits). Returns (loss, metrics)."""
+    x, _, aux = forward(params, tokens, cfg, rules, mode="train")
+    b, s = tokens.shape[:2]
+    # shift: predict token t+1 from position t
+    x_in = x[:, :-1]
+    labels = tokens[:, 1:]
+    w = _head_weight(params, cfg)
+
+    chunk = min(cfg.loss_chunk, s - 1)
+    n_full = (s - 1) // chunk
+
+    def chunk_loss(args):
+        xc, lc = args
+        if cfg.n_codebooks > 1:
+            logits = jnp.einsum("bsd,cdv->bscv", xc, w).astype(jnp.float32)
+        else:
+            logits = jnp.einsum("bsd,dv->bsv", xc, w).astype(jnp.float32)
+        if cfg.logit_softcap:
+            logits = cfg.logit_softcap * jnp.tanh(logits / cfg.logit_softcap)
+        if rules is not None:
+            spec = (("batch", "seq", "codebooks", "vocab")
+                    if cfg.n_codebooks > 1 else ("batch", "seq", "vocab"))
+            logits = rules.shard(logits, *spec)
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        # gold logit via masked sum (SPMD-friendly on the sharded vocab dim:
+        # take_along_axis would all-gather the logits chunk)
+        vocab_ids = jnp.arange(logits.shape[-1])
+        onehot = (lc[..., None] == vocab_ids)
+        gold = jnp.sum(jnp.where(onehot, logits, 0.0), axis=-1)
+        return jnp.sum(lse - gold)
+
+    chunk_loss = jax.checkpoint(chunk_loss)
+    xc = x_in[:, :n_full * chunk].reshape(b, n_full, chunk, cfg.d_model)
+    lc = labels[:, :n_full * chunk].reshape((b, n_full, chunk)
+                                            + labels.shape[2:])
+    total = jnp.zeros((), jnp.float32)
+
+    def scan_body(tot, args):
+        return tot + chunk_loss(args), None
+    total, _ = U.scan(scan_body, total,
+                      (jnp.moveaxis(xc, 1, 0), jnp.moveaxis(lc, 1, 0)))
+    rem = (s - 1) - n_full * chunk
+    if rem:
+        total = total + chunk_loss((x_in[:, -rem:], labels[:, -rem:]))
+
+    n_tok = b * (s - 1) * (cfg.n_codebooks if cfg.n_codebooks > 1 else 1)
+    loss = total / n_tok
+    metrics = {"ce": loss}
+    if cfg.n_experts:
+        loss = loss + cfg.aux_loss_coef * aux / max(cfg.n_layers, 1)
+        metrics["aux"] = aux
+    return loss, metrics
+
+
+# ---------------------------------------------------------------------------
+# caches / decode
+
+
+def _block_cache(kind: str, cfg: ModelConfig, batch: int, max_len: int, rules):
+    if kind in ("G", "L", "A"):
+        ac = cfg.attn_cfg(kind == "L")
+        length = min(cfg.window, max_len) if kind == "L" else max_len
+        return {"kv": A.init_kv_cache(batch, length, ac, rules)}
+    if kind == "M":
+        return M.init_mamba_cache(batch, cfg.mamba_cfg(), rules)
+    if kind == "R":
+        return R.init_rwkv_cache(batch, cfg.rwkv_cfg(), rules)
+    raise ValueError(kind)
+
+
+def init_caches(cfg: ModelConfig, batch: int, max_len: int, rules=None):
+    pat, n_groups, tail = layer_kinds(cfg)
+
+    def stack(tree):
+        return jax.tree.map(
+            lambda c: jnp.broadcast_to(c, (n_groups,) + c.shape).copy()
+            if n_groups else c, tree)
+
+    groups = {f"p{i}": stack(_block_cache(k, cfg, batch, max_len, rules))
+              for i, k in enumerate(pat)}
+    caches = {"groups": groups}
+    if tail:
+        caches["tail"] = {f"t{i}": _block_cache(k, cfg, batch, max_len, rules)
+                          for i, k in enumerate(tail)}
+    return caches
+
+
+def decode_step(params, caches, tokens, pos, cfg: ModelConfig, rules=None):
+    """One decode step: tokens [B,1(,C)], pos scalar int32 (current position).
+    Returns (logits [B,1,(C,)V], new_caches)."""
+    x, new_caches, _ = forward(params, tokens, cfg, rules, mode="decode",
+                               caches=caches, pos=pos)
+    return lm_logits(x, params, cfg, rules), new_caches
+
+
+def prefill(params, tokens, cfg: ModelConfig, rules=None, max_len=None):
+    """Prefill: run the full prompt, returning (last_logits, caches)."""
+    b, s = tokens.shape[:2]
+    caches = init_caches(cfg, b, max_len or s, rules)
+    x, new_caches, _ = forward(params, tokens, cfg, rules, mode="prefill",
+                               caches=caches)
+    return lm_logits(x[:, -1:], params, cfg, rules), new_caches

@@ -1,0 +1,198 @@
+"""Mamba2 (SSD) block: chunked parallel scan for train/prefill, O(1)
+recurrent state for decode.
+
+State-space recurrence per head (head_dim P, state N, scalar A per head):
+    S_t = exp(dt_t * A) * S_t-1 + dt_t * B_t x_t^T     (S in R^{N x P})
+    y_t = C_t^T S_t + D * x_t
+
+Chunked form (chunk Q): intra-chunk pairwise decays are exp(cum_t - cum_s)
+<= 1 (numerically safe), inter-chunk states carried by a lax.scan. Heads
+are sharded over 'model' (the grouped gated-RMSNorm is per-head, so TP
+needs no cross-device norm reduction — this mirrors the reference Mamba2
+TP layout). B/C are group-shared (G=1) and replicated.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.nn import ParamSpec, rms_norm
+from repro.models import unroll as U
+
+__all__ = ["Mamba2Config", "mamba2_param_specs", "mamba2", "init_mamba_cache",
+           "mamba2_decode"]
+
+
+@dataclass(frozen=True)
+class Mamba2Config:
+    d_model: int
+    d_state: int = 64           # N
+    head_dim: int = 64          # P
+    expand: int = 2
+    conv_width: int = 4
+    chunk: int = 64
+    norm_eps: float = 1e-6
+    dtype: str = "bfloat16"
+
+    @property
+    def d_inner(self) -> int:
+        return self.expand * self.d_model
+
+    @property
+    def n_heads(self) -> int:
+        return self.d_inner // self.head_dim
+
+
+def mamba2_param_specs(c: Mamba2Config) -> dict:
+    d, h, p, n, cw = c.d_model, c.n_heads, c.head_dim, c.d_state, c.conv_width
+    return {
+        "w_z": ParamSpec((d, h, p), ("embed", "heads", "head_dim"), c.dtype),
+        "w_x": ParamSpec((d, h, p), ("embed", "heads", "head_dim"), c.dtype),
+        "w_b": ParamSpec((d, n), ("embed", "state"), c.dtype),
+        "w_c": ParamSpec((d, n), ("embed", "state"), c.dtype),
+        "w_dt": ParamSpec((d, h), ("embed", "heads"), c.dtype),
+        "dt_bias": ParamSpec((h,), ("heads",), "float32", init="zeros"),
+        "a_log": ParamSpec((h,), ("heads",), "float32", init="zeros"),
+        "d_skip": ParamSpec((h,), ("heads",), "float32", init="ones"),
+        "conv_x": ParamSpec((cw, h, p), ("conv", "heads", "head_dim"), c.dtype,
+                            init="normal", scale=0.5),
+        "conv_b": ParamSpec((cw, n), ("conv", "state"), c.dtype,
+                            init="normal", scale=0.5),
+        "conv_c": ParamSpec((cw, n), ("conv", "state"), c.dtype,
+                            init="normal", scale=0.5),
+        "norm_w": ParamSpec((h, p), ("heads", "head_dim"), c.dtype, init="ones"),
+        "w_out": ParamSpec((h, p, d), ("heads", "head_dim", "embed"), c.dtype),
+    }
+
+
+def _causal_conv(x, w, state=None):
+    """Depthwise causal conv along axis 1. x [B,S,...]; w [CW, ...].
+
+    state: [B, CW-1, ...] tail of the previous segment (decode/prefill
+    carry); returns (y, new_state)."""
+    cw = w.shape[0]
+    if state is None:
+        state = jnp.zeros((x.shape[0], cw - 1) + x.shape[2:], x.dtype)
+    xp = jnp.concatenate([state, x], axis=1)
+    y = sum(xp[:, i:i + x.shape[1]] * w[i] for i in range(cw))
+    new_state = xp[:, x.shape[1]:]
+    return jax.nn.silu(y), new_state
+
+
+def _ssd_chunked(xdt, a, b, cmat, s0, chunk):
+    """Chunked SSD core.
+
+    xdt [B,S,H,P] (x * dt), a [B,S,H] (dt*A, negative), b/cmat [B,S,N],
+    s0 [B,H,N,P] initial state. Returns (y [B,S,H,P], s_final).
+    """
+    bsz, s, h, p = xdt.shape
+    n = b.shape[-1]
+    q = min(chunk, s)
+    s_orig = s
+    pad = (-s) % q
+    if pad:  # padded steps: decay a=0 (identity) and zero inputs -> no-op
+        xdt = jnp.pad(xdt, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        a = jnp.pad(a, ((0, 0), (0, pad), (0, 0)))
+        b = jnp.pad(b, ((0, 0), (0, pad), (0, 0)))
+        cmat = jnp.pad(cmat, ((0, 0), (0, pad), (0, 0)))
+        s += pad
+    nc = s // q
+    xdt = xdt.astype(jnp.float32).reshape(bsz, nc, q, h, p)
+    a = a.astype(jnp.float32).reshape(bsz, nc, q, h)
+    b = b.astype(jnp.float32).reshape(bsz, nc, q, n)
+    cmat = cmat.astype(jnp.float32).reshape(bsz, nc, q, n)
+
+    cum = jnp.cumsum(a, axis=2)                       # [B,nc,Q,H] inclusive
+    # intra-chunk: scores[t,s] = (C_t . B_s) * exp(cum_t - cum_s), s <= t
+    cb = jnp.einsum("bctn,bcsn->bcts", cmat, b)       # [B,nc,Q,Q]
+    decay = jnp.exp(cum[:, :, :, None, :] - cum[:, :, None, :, :])  # [B,nc,t,s,H]
+    tri = jnp.tril(jnp.ones((q, q), bool))
+    scores = jnp.where(tri[None, None, :, :, None], cb[..., None] * decay, 0.0)
+    y_intra = jnp.einsum("bctsh,bcshp->bcthp", scores, xdt)
+
+    # chunk summaries: state contribution of chunk c (before inter decay)
+    dec_end = jnp.exp(cum[:, :, -1:, :] - cum)        # [B,nc,Q,H]
+    s_loc = jnp.einsum("bcqn,bcqh,bcqhp->bchnp", b, dec_end, xdt)
+    dec_chunk = jnp.exp(cum[:, :, -1, :])             # [B,nc,H]
+
+    def step(s_prev, xs):
+        sl, dc = xs                                    # [B,H,N,P], [B,H]
+        s_new = dc[:, :, None, None] * s_prev + sl
+        return s_new, s_prev
+
+    dec_t = jnp.moveaxis(dec_chunk, 1, 0)
+    sl_t = jnp.moveaxis(s_loc, 1, 0)
+    s_final, s_prevs = U.scan(step, s0.astype(jnp.float32), (sl_t, dec_t))
+    s_prevs = jnp.moveaxis(s_prevs, 0, 1)              # [B,nc,H,N,P]
+
+    # inter-chunk: y_t += exp(cum_t) * C_t . S_prev
+    dec_in = jnp.exp(cum)                              # [B,nc,Q,H]
+    y_inter = jnp.einsum("bcqn,bcqh,bchnp->bcqhp", cmat, dec_in, s_prevs)
+    y = (y_intra + y_inter).reshape(bsz, s, h, p)[:, :s_orig]
+    return y, s_final
+
+
+def mamba2(params, x, c: Mamba2Config, rules=None, state=None,
+           conv_state=None, mode: str = "train"):
+    """x [B,S,d] -> (y [B,S,d], (ssm_state, conv_states) if caching)."""
+    bsz, s, _ = x.shape
+    h, p, n = c.n_heads, c.head_dim, c.d_state
+
+    z = jnp.einsum("bsd,dhp->bshp", x, params["w_z"])
+    xs = jnp.einsum("bsd,dhp->bshp", x, params["w_x"])
+    bmat = jnp.einsum("bsd,dn->bsn", x, params["w_b"])
+    cmat = jnp.einsum("bsd,dn->bsn", x, params["w_c"])
+    dt = jnp.einsum("bsd,dh->bsh", x, params["w_dt"]).astype(jnp.float32)
+    if rules is not None:
+        xs = rules.shard(xs, "batch", "seq", "heads", "head_dim")
+        z = rules.shard(z, "batch", "seq", "heads", "head_dim")
+
+    cs = conv_state or {}
+    xs, cs_x = _causal_conv(xs, params["conv_x"], cs.get("x"))
+    bmat, cs_b = _causal_conv(bmat, params["conv_b"], cs.get("b"))
+    cmat, cs_c = _causal_conv(cmat, params["conv_c"], cs.get("c"))
+
+    dt = jax.nn.softplus(dt + params["dt_bias"])
+    a = -jnp.exp(params["a_log"]) * dt                  # [B,S,H]
+    xdt = xs.astype(jnp.float32) * dt[..., None]
+
+    if state is None:
+        state = jnp.zeros((bsz, h, n, p), jnp.float32)
+    y, s_final = _ssd_chunked(xdt, a, bmat, cmat, state, c.chunk)
+    y = y + params["d_skip"][None, None, :, None] * xs.astype(jnp.float32)
+
+    # gated per-head RMSNorm (TP-local)
+    y = y * jax.nn.silu(z.astype(jnp.float32))
+    y = rms_norm(y.astype(jnp.dtype(c.dtype)), params["norm_w"], c.norm_eps)
+    out = jnp.einsum("bshp,hpd->bsd", y, params["w_out"])
+    if rules is not None:
+        out = rules.shard(out, "batch", "seq_res", "embed")
+    if mode == "train":
+        return out, None
+    return out, {"ssm": s_final, "conv": {"x": cs_x, "b": cs_b, "c": cs_c}}
+
+
+def init_mamba_cache(batch: int, c: Mamba2Config, rules=None):
+    h, p, n, cw = c.n_heads, c.head_dim, c.d_state, c.conv_width
+    dt = jnp.dtype(c.dtype)
+    cache = {
+        "ssm": jnp.zeros((batch, h, n, p), jnp.float32),
+        "conv": {
+            "x": jnp.zeros((batch, cw - 1, h, p), dt),
+            "b": jnp.zeros((batch, cw - 1, n), dt),
+            "c": jnp.zeros((batch, cw - 1, n), dt),
+        },
+    }
+    if rules is not None:
+        cache["ssm"] = rules.shard(cache["ssm"], "batch", "heads", "state", "head_dim")
+        cache["conv"]["x"] = rules.shard(cache["conv"]["x"], "batch", "conv", "heads", "head_dim")
+    return cache
+
+
+def mamba2_decode(params, x, c: Mamba2Config, cache, rules=None):
+    """Single-token decode. x [B,1,d]. Returns (y [B,1,d], new_cache)."""
+    out, new = mamba2(params, x, c, rules=rules, state=cache["ssm"],
+                      conv_state=cache["conv"], mode="decode")
+    return out, new

@@ -1,0 +1,138 @@
+"""Minimal functional parameter system (no flax in this container).
+
+Parameters are plain pytrees of jnp arrays. A parallel pytree of
+``ParamSpec`` declares shape/dtype/init and *logical* sharding axes; specs
+drive initialization (deterministic per-path keys), abstract
+ShapeDtypeStructs for the dry-run, and NamedShardings via
+``repro.parallel.ShardingRules``.
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["ParamSpec", "init_params", "abstract_params", "param_shardings",
+           "rms_norm", "count_params"]
+
+
+@dataclass(frozen=True)
+class ParamSpec:
+    shape: Tuple[int, ...]
+    axes: Tuple[Optional[str], ...]          # logical axis names, len == rank
+    dtype: str = "bfloat16"
+    init: str = "fan_in"                      # fan_in | normal | zeros | ones | embed
+    scale: float = 1.0
+
+    def __post_init__(self):
+        assert len(self.shape) == len(self.axes), (self.shape, self.axes)
+
+    def initialize(self, key):
+        dt = jnp.dtype(self.dtype)
+        if self.init == "zeros":
+            return jnp.zeros(self.shape, dt)
+        if self.init == "ones":
+            return jnp.ones(self.shape, dt)
+        if self.init == "embed":
+            std = self.scale
+            return (jax.random.normal(key, self.shape, jnp.float32) * std).astype(dt)
+        if self.init == "normal":
+            return (jax.random.normal(key, self.shape, jnp.float32)
+                    * self.scale).astype(dt)
+        if self.init == "fan_in":
+            # truncated-normal fan-in (dim -2 is input for [in, out] matrices;
+            # for stacked [L, ..., in, out] the -2 convention still holds)
+            fan_in = self.shape[-2] if len(self.shape) >= 2 else self.shape[-1]
+            std = self.scale / math.sqrt(max(fan_in, 1))
+            return (jax.random.truncated_normal(key, -2.0, 2.0, self.shape,
+                                                jnp.float32) * std).astype(dt)
+        raise ValueError(self.init)
+
+
+def _is_spec(x):
+    return isinstance(x, ParamSpec)
+
+
+def init_params(specs, seed: int = 0):
+    """Deterministic init: every leaf key is fold_in(root, hash(path))."""
+    root = jax.random.PRNGKey(seed)
+    leaves, treedef = jax.tree.flatten_with_path(specs, is_leaf=_is_spec)
+    out = []
+    for path, spec in leaves:
+        h = hash(jax.tree_util.keystr(path)) & 0x7FFFFFFF
+        out.append(spec.initialize(jax.random.fold_in(root, h)))
+    return jax.tree.unflatten(treedef, out)
+
+
+def abstract_params(specs):
+    """ShapeDtypeStruct pytree for dry-run lowering (no allocation)."""
+    return jax.tree.map(
+        lambda s: jax.ShapeDtypeStruct(s.shape, jnp.dtype(s.dtype)),
+        specs, is_leaf=_is_spec)
+
+
+def param_shardings(specs, rules, fsdp_threshold_bytes: float = 4e9):
+    """NamedSharding pytree from logical axes via rules (ragged dims fall
+    back to replication).
+
+    If the TP-only layout leaves more than ``fsdp_threshold_bytes`` of
+    parameters per device, parameters are additionally sharded over the
+    data axes (FSDP): with stacked layer params as scan xs, GSPMD gathers
+    one layer per scan step. Set threshold to inf to disable.
+    """
+    if rules is None or rules.mesh is None:
+        return jax.tree.map(lambda s: None, specs, is_leaf=_is_spec)
+    leaves = jax.tree.leaves(specs, is_leaf=_is_spec)
+    per_dev = 0.0
+    for s in leaves:
+        pspec = rules.pspec_for(s.shape, s.axes)
+        shard = 1
+        for entry in pspec:
+            flat = entry if isinstance(entry, tuple) else ((entry,) if entry else ())
+            for a in flat:
+                shard *= rules.mesh.shape[a]
+        per_dev += np_prod(s.shape) * jnp.dtype(s.dtype).itemsize / max(shard, 1)
+    if per_dev <= fsdp_threshold_bytes:
+        return jax.tree.map(lambda s: rules.sharding_for(s.shape, s.axes),
+                            specs, is_leaf=_is_spec)
+
+    from jax.sharding import NamedSharding
+    from repro.parallel.sharding import zero_shard_spec
+
+    def fsdp(s):
+        ps = rules.pspec_for(s.shape, s.axes)
+        start = 1 if (s.axes and s.axes[0] == "layers") else 0
+        return NamedSharding(rules.mesh,
+                             zero_shard_spec(rules, ps, s.shape, start=start))
+
+    return jax.tree.map(fsdp, specs, is_leaf=_is_spec)
+
+
+def param_pspecs(specs, rules):
+    return jax.tree.map(lambda s: rules.pspec_for(s.shape, s.axes), specs,
+                        is_leaf=_is_spec)
+
+
+def count_params(specs) -> int:
+    return sum(int(np_prod(s.shape)) for s in jax.tree.leaves(specs, is_leaf=_is_spec))
+
+
+def np_prod(shape):
+    out = 1
+    for s in shape:
+        out *= s
+    return out
+
+
+def rms_norm(x, weight, eps: float = 1e-6, plus_one: bool = False):
+    """RMSNorm in f32 accumulation; gemma uses (1 + w) scaling."""
+    dt = x.dtype
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    xf = xf * jax.lax.rsqrt(var + eps)
+    w = weight.astype(jnp.float32)
+    w = 1.0 + w if plus_one else w
+    return (xf * w).astype(dt)

@@ -1,0 +1,214 @@
+"""RWKV6 ("Finch"): attention-free time-mix with data-dependent decay.
+
+Recurrence per head (key dim K, value dim V), per channel k:
+    S_t = diag(w_t) S_{t-1} + k_t v_t^T          w_t = exp(-exp(w0 + lora(x)))
+    o_t = r_t^T (S_{t-1} + diag(u) k_t v_t^T)
+Data-dependent decay w_t is the RWKV6 novelty and is kept faithful (LoRA
+on the token-shifted input). Token-shift mixing for r/k/v/g uses static
+lerp weights (the paper's per-projection ddlerp LoRA is simplified to the
+decay path only; documented in DESIGN.md).
+
+Train/prefill use a chunked form: intra-chunk pairwise decays
+exp(cum_{t-1} - cum_s) <= 1 are numerically safe; inter-chunk state is a
+lax.scan. Chunk kept small (16) because the pairwise tensor is
+[B,H,Q,Q,K] elementwise (VPU) work.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.nn import ParamSpec, rms_norm
+from repro.models import unroll as U
+
+__all__ = ["RWKV6Config", "rwkv6_param_specs", "rwkv6_timemix",
+           "rwkv6_channelmix", "init_rwkv_cache"]
+
+
+@dataclass(frozen=True)
+class RWKV6Config:
+    d_model: int
+    head_dim: int = 64           # K = V = head_dim
+    d_ff: int = 0                # channel-mix hidden (3.5x d_model)
+    decay_lora: int = 64
+    chunk: int = 16
+    norm_eps: float = 1e-6
+    dtype: str = "bfloat16"
+
+    @property
+    def n_heads(self) -> int:
+        return self.d_model // self.head_dim
+
+
+def rwkv6_param_specs(c: RWKV6Config) -> dict:
+    d, h, k, r = c.d_model, c.n_heads, c.head_dim, c.decay_lora
+    f = c.d_ff
+    return {
+        "time": {
+            "mu_r": ParamSpec((d,), ("embed",), c.dtype, init="zeros"),
+            "mu_k": ParamSpec((d,), ("embed",), c.dtype, init="zeros"),
+            "mu_v": ParamSpec((d,), ("embed",), c.dtype, init="zeros"),
+            "mu_g": ParamSpec((d,), ("embed",), c.dtype, init="zeros"),
+            "mu_w": ParamSpec((d,), ("embed",), c.dtype, init="zeros"),
+            "w_r": ParamSpec((d, h, k), ("embed", "heads", "head_dim"), c.dtype),
+            "w_k": ParamSpec((d, h, k), ("embed", "heads", "head_dim"), c.dtype),
+            "w_v": ParamSpec((d, h, k), ("embed", "heads", "head_dim"), c.dtype),
+            "w_g": ParamSpec((d, h, k), ("embed", "heads", "head_dim"), c.dtype),
+            "w0": ParamSpec((h, k), ("heads", "head_dim"), "float32",
+                            init="normal", scale=0.5),
+            "w_lora_a": ParamSpec((d, r), ("embed", None), c.dtype),
+            "w_lora_b": ParamSpec((r, h, k), (None, "heads", "head_dim"),
+                                  c.dtype, init="zeros"),
+            "u": ParamSpec((h, k), ("heads", "head_dim"), "float32",
+                           init="normal", scale=0.5),
+            "ln_w": ParamSpec((h, k), ("heads", "head_dim"), c.dtype, init="ones"),
+            "w_out": ParamSpec((h, k, d), ("heads", "head_dim", "embed"), c.dtype),
+        },
+        "channel": {
+            "mu_k": ParamSpec((d,), ("embed",), c.dtype, init="zeros"),
+            "mu_r": ParamSpec((d,), ("embed",), c.dtype, init="zeros"),
+            "w_k": ParamSpec((d, f), ("embed", "mlp"), c.dtype),
+            "w_v": ParamSpec((f, d), ("mlp", "embed"), c.dtype),
+            "w_r": ParamSpec((d, d), ("embed", None), c.dtype),
+        },
+    }
+
+
+def _token_shift(x, last):
+    """x [B,S,d]; last [B,1,d] previous token (zeros at start).
+    Returns (shifted x, new last)."""
+    xs = jnp.concatenate([last, x[:, :-1]], axis=1)
+    return xs, x[:, -1:]
+
+
+def _lerp(x, xs, mu):
+    return x + (xs - x) * mu
+
+
+def _wkv_chunked(r, k, v, lw, u, s0, chunk):
+    """r,k,v [B,S,H,K] f32; lw [B,S,H,K] (log decay, negative); u [H,K];
+    s0 [B,H,K,K]. Returns (o [B,S,H,K], s_final)."""
+    bsz, s, h, kk = r.shape
+    q = min(chunk, s)
+    s_orig = s
+    pad = (-s) % q
+    if pad:  # padded steps: decay lw=0 (identity), zero r/k/v -> no-op
+        z4 = ((0, 0), (0, pad), (0, 0), (0, 0))
+        r, k, v, lw = (jnp.pad(t, z4) for t in (r, k, v, lw))
+        s += pad
+    nc = s // q
+    rs = r.reshape(bsz, nc, q, h, kk)
+    ks = k.reshape(bsz, nc, q, h, kk)
+    vs = v.reshape(bsz, nc, q, h, kk)
+    lws = lw.reshape(bsz, nc, q, h, kk)
+    cum = jnp.cumsum(lws, axis=2)                    # inclusive [B,nc,Q,H,K]
+    cum_ex = cum - lws                               # exclusive = cum_{t-1}
+
+    # intra-chunk attention matrix A[t,s] = sum_k r_t k_s exp(cumex_t - cum_s)
+    dec = jnp.exp(cum_ex[:, :, :, None] - cum[:, :, None, :, :])  # [B,nc,t,s,H,K]
+    strict = jnp.tril(jnp.ones((q, q), bool), k=-1)
+    amat = jnp.einsum("btshk,bthk,bshk->btsh",
+                      jnp.where(strict[None, :, :, None, None], dec, 0.0)
+                      .reshape(bsz * nc, q, q, h, kk),
+                      rs.reshape(bsz * nc, q, h, kk),
+                      ks.reshape(bsz * nc, q, h, kk))
+    diag = jnp.einsum("bthk,hk,bthk->bth", rs.reshape(bsz * nc, q, h, kk), u,
+                      ks.reshape(bsz * nc, q, h, kk))
+    o_intra = (jnp.einsum("btsh,bshk->bthk", amat,
+                          vs.reshape(bsz * nc, q, h, kk))
+               + diag[..., None] * vs.reshape(bsz * nc, q, h, kk))
+    o_intra = o_intra.reshape(bsz, nc, q, h, kk)
+
+    # inter-chunk: o_t += (r_t * exp(cumex_t))^T S_prev
+    dec_end = jnp.exp(cum[:, :, -1:] - cum)          # decay s -> chunk end
+    s_locs = jnp.einsum("bcqhk,bcqhv->bchkv", ks * dec_end, vs)
+    dec_tot = jnp.exp(cum[:, :, -1])                 # [B,nc,H,K]
+
+    def step(s_prev, xs):
+        sl, dc = xs                                   # [B,H,K,V], [B,H,K]
+        return dc[..., None] * s_prev + sl, s_prev
+
+    s_final, s_prevs = U.scan(
+        step, s0, (jnp.moveaxis(s_locs, 1, 0), jnp.moveaxis(dec_tot, 1, 0)))
+    s_prevs = jnp.moveaxis(s_prevs, 0, 1)             # [B,nc,H,K,V]
+    o_inter = jnp.einsum("bcqhk,bchkv->bcqhv", rs * jnp.exp(cum_ex), s_prevs)
+    o = (o_intra + o_inter).reshape(bsz, s, h, kk)[:, :s_orig]
+    return o, s_final
+
+
+def rwkv6_timemix(params, x, c: RWKV6Config, rules=None, state=None,
+                  shift=None, mode: str = "train"):
+    """x [B,S,d] -> (out, cache) where cache = (state [B,H,K,V], shift)."""
+    p = params
+    bsz, s, d = x.shape
+    h, kk = c.n_heads, c.head_dim
+    if shift is None:
+        shift = jnp.zeros((bsz, 1, d), x.dtype)
+    xs, new_shift = _token_shift(x, shift)
+
+    r = jnp.einsum("bsd,dhk->bshk", _lerp(x, xs, p["mu_r"]), p["w_r"])
+    k = jnp.einsum("bsd,dhk->bshk", _lerp(x, xs, p["mu_k"]), p["w_k"])
+    v = jnp.einsum("bsd,dhk->bshk", _lerp(x, xs, p["mu_v"]), p["w_v"])
+    g = jnp.einsum("bsd,dhk->bshk", _lerp(x, xs, p["mu_g"]), p["w_g"])
+    if rules is not None:
+        r = rules.shard(r, "batch", "seq", "heads", "head_dim")
+        k = rules.shard(k, "batch", "seq", "heads", "head_dim")
+        v = rules.shard(v, "batch", "seq", "heads", "head_dim")
+        g = rules.shard(g, "batch", "seq", "heads", "head_dim")
+
+    # data-dependent decay (the RWKV6 contribution)
+    wx = _lerp(x, xs, p["mu_w"])
+    lora = jnp.einsum("bsr,rhk->bshk",
+                      jnp.tanh(jnp.einsum("bsd,dr->bsr", wx, p["w_lora_a"])),
+                      p["w_lora_b"])
+    lw = -jnp.exp(jnp.clip(p["w0"] + lora.astype(jnp.float32), -8.0, 4.0))
+
+    if state is None:
+        state = jnp.zeros((bsz, h, kk, kk), jnp.float32)
+    o, s_final = _wkv_chunked(r.astype(jnp.float32), k.astype(jnp.float32),
+                              v.astype(jnp.float32), lw,
+                              p["u"], state, c.chunk)
+    o = rms_norm(o.astype(x.dtype), p["ln_w"], c.norm_eps)
+    o = o * jax.nn.silu(g)
+    out = jnp.einsum("bshk,hkd->bsd", o, p["w_out"])
+    if rules is not None:
+        out = rules.shard(out, "batch", "seq_res", "embed")
+    if mode == "train":
+        return out, None
+    return out, {"state": s_final, "shift": new_shift}
+
+
+def rwkv6_channelmix(params, x, c: RWKV6Config, rules=None, shift=None,
+                     mode: str = "train"):
+    p = params
+    if shift is None:
+        shift = jnp.zeros((x.shape[0], 1, x.shape[-1]), x.dtype)
+    xs, new_shift = _token_shift(x, shift)
+    k = jnp.einsum("bsd,df->bsf", _lerp(x, xs, p["mu_k"]), p["w_k"])
+    k = jnp.square(jax.nn.relu(k))
+    if rules is not None:
+        k = rules.shard(k, "batch", "seq", "mlp")
+    kv = jnp.einsum("bsf,fd->bsd", k, p["w_v"])
+    rgate = jax.nn.sigmoid(jnp.einsum("bsd,de->bse", _lerp(x, xs, p["mu_r"]),
+                                      p["w_r"]))
+    out = rgate * kv
+    if rules is not None:
+        out = rules.shard(out, "batch", "seq_res", "embed")
+    if mode == "train":
+        return out, None
+    return out, {"shift": new_shift}
+
+
+def init_rwkv_cache(batch: int, c: RWKV6Config, rules=None):
+    h, kk, d = c.n_heads, c.head_dim, c.d_model
+    cache = {
+        "state": jnp.zeros((batch, h, kk, kk), jnp.float32),
+        "shift_t": jnp.zeros((batch, 1, d), jnp.dtype(c.dtype)),
+        "shift_c": jnp.zeros((batch, 1, d), jnp.dtype(c.dtype)),
+    }
+    if rules is not None:
+        cache["state"] = rules.shard(cache["state"], "batch", "heads",
+                                     "head_dim", None)
+    return cache

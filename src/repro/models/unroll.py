@@ -1,0 +1,43 @@
+"""Global unroll switch for analysis probes.
+
+XLA's HloCostAnalysis counts while-loop bodies ONCE (not x trip count),
+so the dry-run derives loop-corrected FLOPs/bytes/collectives from two
+small probe configs (1 and 2 layer-groups) compiled with every internal
+scan fully unrolled. ``force_unroll()`` flips all model scans to
+``unroll=True``; production lowering never uses it.
+"""
+from __future__ import annotations
+
+import contextlib
+
+import jax
+
+_FORCE = False
+
+
+@contextlib.contextmanager
+def force_unroll():
+    global _FORCE
+    prev = _FORCE
+    _FORCE = True
+    try:
+        yield
+    finally:
+        _FORCE = prev
+
+
+def unroll_flag():
+    return True if _FORCE else 1
+
+
+def scan(body, init, xs, length=None):
+    """lax.scan honoring the analysis unroll flag."""
+    return jax.lax.scan(body, init, xs, length=length, unroll=unroll_flag())
+
+
+def map_(fn, xs):
+    """lax.map equivalent honoring the unroll flag."""
+    def body(_, x):
+        return None, fn(x)
+    _, ys = jax.lax.scan(body, None, xs, unroll=unroll_flag())
+    return ys

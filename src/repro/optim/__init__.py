@@ -1,0 +1,3 @@
+from repro.optim.adamw import (  # noqa: F401
+    AdamWConfig, init_opt_state, adamw_update, global_norm, schedule,
+)

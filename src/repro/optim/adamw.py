@@ -1,0 +1,90 @@
+"""AdamW with decoupled weight decay, global-norm clipping, and ZeRO-1
+sharded moments (the sharding lives in the train-step's out_shardings —
+this module is pure math on pytrees).
+
+Moments are fp32 regardless of param dtype; an optional fp32 master copy
+is kept when params are bf16 (configurable, default on).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["AdamWConfig", "init_opt_state", "adamw_update", "global_norm"]
+
+
+@dataclass(frozen=True)
+class AdamWConfig:
+    lr_peak: float = 3e-4
+    lr_min: float = 3e-5
+    warmup_steps: int = 100
+    decay_steps: int = 10_000
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: Optional[float] = 1.0
+    master_fp32: bool = True
+
+
+def schedule(cfg: AdamWConfig, step):
+    """Linear warmup + cosine decay to lr_min."""
+    step = step.astype(jnp.float32)
+    warm = cfg.lr_peak * step / jnp.maximum(cfg.warmup_steps, 1)
+    t = jnp.clip((step - cfg.warmup_steps)
+                 / jnp.maximum(cfg.decay_steps - cfg.warmup_steps, 1), 0.0, 1.0)
+    cos = cfg.lr_min + 0.5 * (cfg.lr_peak - cfg.lr_min) * (1 + jnp.cos(jnp.pi * t))
+    return jnp.where(step < cfg.warmup_steps, warm, cos)
+
+
+def global_norm(tree):
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32)))
+                        for x in jax.tree.leaves(tree)))
+
+
+def init_opt_state(params, cfg: AdamWConfig):
+    zeros32 = lambda p: jnp.zeros(p.shape, jnp.float32)
+    state = {
+        "step": jnp.zeros((), jnp.int32),
+        "m": jax.tree.map(zeros32, params),
+        "v": jax.tree.map(zeros32, params),
+    }
+    if cfg.master_fp32:
+        state["master"] = jax.tree.map(lambda p: p.astype(jnp.float32), params)
+    return state
+
+
+def adamw_update(params, grads, state, cfg: AdamWConfig):
+    """Returns (new_params, new_state, metrics)."""
+    step = state["step"] + 1
+    lr = schedule(cfg, step)
+    gnorm = global_norm(grads)
+    if cfg.clip_norm:
+        scale = jnp.minimum(1.0, cfg.clip_norm / jnp.maximum(gnorm, 1e-9))
+        grads = jax.tree.map(lambda g: g * scale, grads)
+
+    b1, b2 = cfg.b1, cfg.b2
+    m = jax.tree.map(lambda mm, g: b1 * mm + (1 - b1) * g.astype(jnp.float32),
+                     state["m"], grads)
+    v = jax.tree.map(lambda vv, g: b2 * vv + (1 - b2)
+                     * jnp.square(g.astype(jnp.float32)), state["v"], grads)
+    bc1 = 1 - b1 ** step.astype(jnp.float32)
+    bc2 = 1 - b2 ** step.astype(jnp.float32)
+
+    base = state.get("master", params)
+
+    def upd(p, mm, vv):
+        pf = p.astype(jnp.float32)
+        u = (mm / bc1) / (jnp.sqrt(vv / bc2) + cfg.eps)
+        return pf - lr * (u + cfg.weight_decay * pf)
+
+    new_master = jax.tree.map(upd, base, m, v)
+    new_params = jax.tree.map(
+        lambda nm, p: nm.astype(p.dtype), new_master, params)
+    new_state = {"step": step, "m": m, "v": v}
+    if cfg.master_fp32:
+        new_state["master"] = new_master
+    return new_params, new_state, {"lr": lr, "grad_norm": gnorm}

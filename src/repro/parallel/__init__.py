@@ -1,0 +1,1 @@
+from repro.parallel.sharding import ShardingRules, DEFAULT_RULES, zero_shard_spec  # noqa: F401

@@ -1,0 +1,1 @@
+from repro.serve.serving import make_serve_step, generate  # noqa: F401

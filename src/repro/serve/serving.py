@@ -1,0 +1,59 @@
+"""Batched serving: prefill + greedy/temperature decode loop.
+
+``make_serve_step`` builds the jit'd one-token step used by the dry-run's
+decode cells; ``generate`` is the host-side loop (examples + tests).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import lm as L
+
+__all__ = ["make_serve_step", "generate"]
+
+
+def make_serve_step(cfg, rules=None):
+    """jit'd (params, caches, tokens [B,1(,C)], pos) -> (logits, caches)."""
+
+    def step(params, caches, tokens, pos):
+        if rules is not None:
+            tokens = rules.shard(tokens, *("batch", "seq", "codebooks")
+                                 [:tokens.ndim])
+        return L.decode_step(params, caches, tokens, pos, cfg, rules)
+
+    return jax.jit(step, donate_argnums=(1,))
+
+
+def generate(params, prompt, cfg, n_tokens: int, rules=None,
+             temperature: float = 0.0, seed: int = 0, max_len: int = 0):
+    """prompt [B, S(,C)] -> tokens [B, S + n_tokens(, C)] (greedy if
+    temperature == 0)."""
+    b, s = prompt.shape[:2]
+    max_len = max_len or (s + n_tokens)
+    last_logits, caches = jax.jit(
+        lambda p, t: L.prefill(p, t, cfg, rules, max_len=max_len)
+    )(params, prompt)
+    serve_step = make_serve_step(cfg, rules)
+    key = jax.random.PRNGKey(seed)
+    out = [prompt]
+    logits = last_logits
+
+    def pick(logits, key):
+        if temperature <= 0.0:
+            return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        return jax.random.categorical(key, logits / temperature).astype(jnp.int32)
+
+    for i in range(n_tokens):
+        key, k = jax.random.split(key)
+        nxt = pick(logits[:, -1] if logits.ndim == 3 else logits[:, -1], k)
+        nxt = nxt.reshape((b, 1) + ((cfg.n_codebooks,) if cfg.n_codebooks > 1
+                                    else ()))
+        out.append(nxt)
+        if i + 1 < n_tokens:
+            logits, caches = serve_step(params, caches, nxt,
+                                        jnp.int32(s + i))
+    return jnp.concatenate(out, axis=1)

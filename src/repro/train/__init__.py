@@ -1,0 +1,4 @@
+from repro.train.train_loop import (  # noqa: F401
+    make_train_step, make_compressed_train_step, TrainState, Trainer,
+    make_state_shardings,
+)

@@ -1,0 +1,230 @@
+"""Train-step factory + preemption-safe trainer loop.
+
+Two train-step flavors:
+
+* ``make_train_step``   — GSPMD path: params TP-sharded (logical rules),
+  optimizer state additionally ZeRO-1 sharded over DP; jit with explicit
+  in/out shardings so reduce-scatter/all-gather placement is GSPMD's.
+* ``make_compressed_train_step`` — shard_map pure-DP path where gradient
+  synchronization goes through the paper's coded-sketch compressor
+  (repro.core.gradient_compression) instead of a psum. Used for the
+  collective-term study in EXPERIMENTS.md §Perf and by examples.
+
+The Trainer handles: resume-from-latest, SIGTERM checkpoint-and-exit
+(preemption), one transient-failure retry per step, step-time EMA
+straggler monitor, periodic + final checkpoints.
+"""
+from __future__ import annotations
+
+import signal
+import time
+from dataclasses import dataclass
+from functools import partial
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+try:
+    from jax import shard_map as _shard_map
+except ImportError:  # pragma: no cover
+    from jax.experimental.shard_map import shard_map as _shard_map
+
+from repro.checkpoint import latest_step, restore_checkpoint, save_checkpoint
+from repro.models import lm as L
+from repro.models.nn import abstract_params, param_shardings, init_params
+from repro.optim import AdamWConfig, adamw_update, init_opt_state
+from repro.parallel.sharding import ShardingRules, zero_shard_spec
+
+__all__ = ["make_train_step", "make_compressed_train_step", "TrainState",
+           "Trainer", "make_state_shardings"]
+
+
+def make_state_shardings(cfg, rules: ShardingRules, master_fp32: bool = True):
+    """(param_shardings, opt_shardings) — opt state gets ZeRO-1 over DP."""
+    specs = L.model_param_specs(cfg)
+    p_shard = param_shardings(specs, rules)
+    if rules.mesh is None:
+        return p_shard, None
+
+    def zero(s):
+        ps = rules.pspec_for(s.shape, s.axes)
+        start = 1 if (s.axes and s.axes[0] == "layers") else 0
+        return NamedSharding(rules.mesh,
+                             zero_shard_spec(rules, ps, s.shape, start=start))
+
+    from repro.models.nn import ParamSpec  # local import to avoid cycle
+    z_shard = jax.tree.map(zero, specs, is_leaf=lambda x: isinstance(x, ParamSpec))
+    opt_shard = {
+        "step": NamedSharding(rules.mesh, P()),
+        "m": z_shard, "v": z_shard,
+    }
+    if master_fp32:
+        opt_shard["master"] = z_shard
+    return p_shard, opt_shard
+
+
+def make_train_step(cfg, opt_cfg: AdamWConfig, rules: ShardingRules,
+                    donate: bool = True):
+    """jit'd (params, opt_state, tokens) -> (params, opt_state, metrics)."""
+
+    def step(params, opt_state, tokens):
+        if rules.mesh is not None:
+            tokens = rules.shard(tokens, *(("batch", "seq", "codebooks")
+                                           [:tokens.ndim]))
+        (loss, metrics), grads = jax.value_and_grad(
+            lambda p: L.lm_loss(p, tokens, cfg, rules), has_aux=True)(params)
+        new_params, new_opt, om = adamw_update(params, grads, opt_state, opt_cfg)
+        metrics = dict(metrics, loss=loss, **om)
+        return new_params, new_opt, metrics
+
+    if rules.mesh is None:
+        return jax.jit(step, donate_argnums=(0, 1) if donate else ())
+
+    p_shard, opt_shard = make_state_shardings(cfg, rules, opt_cfg.master_fp32)
+    tok_shard = rules.sharding("batch", "seq")
+    return jax.jit(
+        step,
+        in_shardings=(p_shard, opt_shard, tok_shard),
+        out_shardings=(p_shard, opt_shard, None),
+        donate_argnums=(0, 1) if donate else (),
+    )
+
+
+def make_compressed_train_step(cfg, opt_cfg: AdamWConfig, mesh, compressor,
+                               axis: str = "data"):
+    """Pure-DP shard_map step with coded-sketch gradient sync.
+
+    params/opt replicated; tokens sharded over ``axis``; per-rank grads
+    synced via compressor.sync (all-gather of codes) instead of psum.
+    """
+
+    def step(params, opt_state, ef, tokens):
+        def local_loss(p, t):
+            loss, _ = L.lm_loss(p, t, cfg, None)
+            return loss
+
+        loss, grads = jax.value_and_grad(local_loss)(params, tokens)
+        loss = jax.lax.pmean(loss, axis)
+        if compressor is None:  # plain-psum DP baseline (same code path)
+            grads = jax.lax.pmean(grads, axis)
+            new_ef = ef
+        else:
+            grads, new_ef = compressor.sync(grads, ef, axis,
+                                            step=opt_state["step"])
+        new_params, new_opt, om = adamw_update(params, grads, opt_state, opt_cfg)
+        return new_params, new_opt, new_ef, dict(om, loss=loss)
+
+    def wrapped(params, opt_state, ef, tokens):
+        return _shard_map(
+            step, mesh=mesh,
+            in_specs=(P(), P(), P(), P(axis)),   # prefix specs: replicated
+            out_specs=(P(), P(), P(), P()),
+            check_vma=False,
+        )(params, opt_state, ef, tokens)
+
+    return jax.jit(wrapped, donate_argnums=(0, 1, 2))
+
+
+@dataclass
+class TrainState:
+    params: object
+    opt_state: object
+    step: int = 0
+    ef: object = None     # error-feedback state (compressed path)
+
+
+class Trainer:
+    """Preemption-safe loop around a train step."""
+
+    def __init__(self, step_fn: Callable, state: TrainState, pipeline,
+                 ckpt_dir: Optional[str] = None, ckpt_every: int = 100,
+                 keep: int = 3, log_every: int = 10, log_fn=print):
+        self.step_fn = step_fn
+        self.state = state
+        self.pipeline = pipeline
+        self.ckpt_dir = ckpt_dir
+        self.ckpt_every = ckpt_every
+        self.keep = keep
+        self.log_every = log_every
+        self.log = log_fn
+        self._preempted = False
+        self._ema = None
+        self.history = []
+
+    def _install_sigterm(self):
+        def handler(signum, frame):
+            self._preempted = True
+        try:
+            signal.signal(signal.SIGTERM, handler)
+        except ValueError:  # not main thread
+            pass
+
+    def maybe_resume(self):
+        if not self.ckpt_dir:
+            return
+        step = latest_step(self.ckpt_dir)
+        if step is None:
+            return
+        tree = {"params": self.state.params, "opt": self.state.opt_state}
+        if self.state.ef is not None:
+            tree["ef"] = self.state.ef
+        restored = restore_checkpoint(self.ckpt_dir, step, tree)
+        self.state.params = restored["params"]
+        self.state.opt_state = restored["opt"]
+        if self.state.ef is not None:
+            self.state.ef = restored["ef"]
+        self.state.step = step
+        self.log(f"[trainer] resumed from step {step}")
+
+    def checkpoint(self):
+        if not self.ckpt_dir:
+            return
+        tree = {"params": self.state.params, "opt": self.state.opt_state}
+        if self.state.ef is not None:
+            tree["ef"] = self.state.ef
+        save_checkpoint(self.ckpt_dir, self.state.step, tree, keep=self.keep)
+
+    def run(self, n_steps: int):
+        self._install_sigterm()
+        s = self.state
+        while s.step < n_steps and not self._preempted:
+            tokens = self.pipeline.batch_at(s.step)
+            t0 = time.monotonic()
+            try:
+                out = self._apply(tokens)
+            except Exception as e:  # one retry for transient failures
+                self.log(f"[trainer] step {s.step} failed ({e!r}); retrying once")
+                out = self._apply(tokens)
+            self._absorb(out)
+            dt = time.monotonic() - t0
+            self._ema = dt if self._ema is None else 0.9 * self._ema + 0.1 * dt
+            if dt > 3.0 * self._ema and s.step > 5:
+                self.log(f"[trainer] straggler: step {s.step} took {dt:.2f}s "
+                         f"(ema {self._ema:.2f}s)")
+            s.step += 1
+            if s.step % self.log_every == 0:
+                m = self.history[-1]
+                self.log(f"[trainer] step {s.step} loss={float(m['loss']):.4f} "
+                         f"gnorm={float(m['grad_norm']):.3f} {dt * 1e3:.0f}ms")
+            if self.ckpt_every and s.step % self.ckpt_every == 0:
+                self.checkpoint()
+        self.checkpoint()
+        if self._preempted:
+            self.log("[trainer] SIGTERM received: checkpointed and exiting")
+        return self.history
+
+    def _apply(self, tokens):
+        s = self.state
+        if s.ef is not None:
+            return self.step_fn(s.params, s.opt_state, s.ef, tokens)
+        return self.step_fn(s.params, s.opt_state, tokens)
+
+    def _absorb(self, out):
+        s = self.state
+        if s.ef is not None:
+            s.params, s.opt_state, s.ef, metrics = out
+        else:
+            s.params, s.opt_state, metrics = out
+        self.history.append(metrics)

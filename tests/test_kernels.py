@@ -1,0 +1,63 @@
+"""Pallas kernels vs jnp oracles: shape/dtype sweeps in interpret mode."""
+import numpy as np
+import pytest
+import jax
+import jax.numpy as jnp
+
+from repro.core.schemes import CodeSpec, sample_offsets
+from repro.kernels import ref
+from repro.kernels.collision import collision_counts_pallas
+from repro.kernels.pack_codes import pack_codes_pallas
+from repro.kernels.proj_code import coded_project_pallas
+
+SHAPES = [(8, 64, 32), (100, 700, 96), (128, 512, 128), (33, 1000, 17)]
+DTYPES = [jnp.float32, jnp.bfloat16]
+SCHEMES = [("uniform", 1.0), ("2bit", 0.75), ("sign", 1.0), ("offset", 1.0)]
+
+
+@pytest.mark.parametrize("m,d,k", SHAPES)
+@pytest.mark.parametrize("dtype", DTYPES, ids=["f32", "bf16"])
+@pytest.mark.parametrize("scheme,w", SCHEMES)
+def test_proj_code_matches_ref(m, d, k, dtype, scheme, w):
+    key = jax.random.PRNGKey(m * 7 + k)
+    x = jax.random.normal(key, (m, d), dtype)
+    r = jax.random.normal(jax.random.fold_in(key, 1), (d, k), dtype)
+    q = sample_offsets(jax.random.fold_in(key, 2), k, w)
+    spec = CodeSpec(scheme, w)
+    got = coded_project_pallas(x, r, spec, q, interpret=True,
+                               block_m=32, block_k=32, block_d=64)
+    want = ref.coded_project_ref(x, r, spec, q)
+    mism = int(jnp.sum(got != want))
+    # floor() at bin boundaries can differ by one ulp between accumulation
+    # orders for bf16 inputs; allow a vanishing fraction there.
+    tol = 0 if dtype == jnp.float32 else max(2, int(0.001 * got.size))
+    assert mism <= tol, f"{mism}/{got.size} mismatches"
+
+
+@pytest.mark.parametrize("bits", [1, 2, 4, 8])
+@pytest.mark.parametrize("m,k", [(5, 17), (64, 256), (130, 100)])
+def test_pack_codes_matches_ref(bits, m, k):
+    codes = jax.random.randint(jax.random.PRNGKey(bits), (m, k), 0, 1 << bits)
+    got = pack_codes_pallas(codes, bits, interpret=True, block_m=32)
+    want = ref.pack_codes_ref(codes, bits)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+@pytest.mark.parametrize("q,n,k", [(8, 16, 32), (33, 51, 77), (128, 64, 256)])
+def test_collision_counts_matches_ref(q, n, k):
+    key = jax.random.PRNGKey(q)
+    cq = jax.random.randint(key, (q, k), 0, 4)
+    cdb = jax.random.randint(jax.random.fold_in(key, 1), (n, k), 0, 4)
+    got = collision_counts_pallas(cq, cdb, interpret=True,
+                                  block_q=32, block_n=32, block_k=64)
+    want = ref.collision_counts_ref(cq, cdb)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_ops_dispatch_cpu_uses_ref():
+    from repro.kernels import ops
+    x = jnp.ones((4, 8), jnp.float32)
+    r = jnp.ones((8, 4), jnp.float32)
+    spec = CodeSpec("sign", 1.0)
+    out = ops.coded_project(x, r, spec)  # impl=auto -> ref on CPU
+    np.testing.assert_array_equal(np.asarray(out), 1)

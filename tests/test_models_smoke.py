@@ -1,0 +1,64 @@
+"""Per-arch reduced-config smoke: init -> loss+grad finite -> prefill/decode
+consistency against the full forward pass (deliverable f)."""
+import numpy as np
+import pytest
+import jax
+import jax.numpy as jnp
+
+from repro import configs as C
+from repro.models import lm as L
+from repro.models.nn import init_params
+
+B, S = 2, 24
+
+
+def _tokens(cfg, key):
+    shape = (B, S, cfg.n_codebooks) if cfg.n_codebooks > 1 else (B, S)
+    return jax.random.randint(key, shape, 0, cfg.vocab_size)
+
+
+@pytest.mark.parametrize("arch", C.ARCHS)
+def test_arch_smoke(arch):
+    cfg = C.get_smoke_config(arch)
+    params = init_params(L.model_param_specs(cfg), seed=0)
+    tokens = _tokens(cfg, jax.random.PRNGKey(1))
+
+    loss, grads = jax.value_and_grad(
+        lambda p: L.lm_loss(p, tokens, cfg)[0])(params)
+    assert np.isfinite(float(loss)), arch
+    gnorm = jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
+                         for g in jax.tree.leaves(grads)))
+    assert np.isfinite(float(gnorm)), arch
+
+    # decode consistency: last-token logits via prefill+decode == full fwd
+    last, caches = L.prefill(params, tokens[:, :S - 1], cfg, max_len=S + 4)
+    logits_dec, _ = L.decode_step(params, caches, tokens[:, S - 1:S],
+                                  jnp.int32(S - 1), cfg)
+    hidden, _, _ = L.forward(params, tokens, cfg, mode="train")
+    logits_full = L.lm_logits(hidden[:, -1:], params, cfg)
+    err = float(jnp.max(jnp.abs(logits_dec - logits_full)))
+    scale = float(jnp.max(jnp.abs(logits_full))) + 1e-6
+    assert err / scale < 0.08, f"{arch}: decode mismatch {err} vs scale {scale}"
+
+
+def test_exact_assigned_configs_match_assignment():
+    # spot-check the exact architecture hyperparameters from the assignment
+    cfg = C.get_config("qwen2-0.5b")
+    assert (cfg.n_layers, cfg.d_model, cfg.n_heads, cfg.n_kv_heads,
+            cfg.d_ff, cfg.vocab_size) == (24, 896, 14, 2, 4864, 151936)
+    assert cfg.qkv_bias
+    cfg = C.get_config("gemma2-9b")
+    assert (cfg.n_layers, cfg.d_model, cfg.n_heads, cfg.n_kv_heads,
+            cfg.d_ff, cfg.vocab_size) == (42, 3584, 16, 8, 14336, 256000)
+    assert cfg.layer_pattern == "LG" and cfg.logit_softcap == 30.0
+    cfg = C.get_config("qwen3-moe-235b-a22b")
+    assert (cfg.n_layers, cfg.d_model, cfg.n_experts,
+            cfg.n_experts_per_token) == (94, 4096, 128, 8)
+    cfg = C.get_config("rwkv6-7b")
+    assert cfg.family == "ssm" and cfg.d_model == 4096
+    cfg = C.get_config("musicgen-medium")
+    assert cfg.n_codebooks == 4 and cfg.vocab_size == 2048
+    cfg = C.get_config("zamba2-1.2b")
+    assert cfg.family == "hybrid" and cfg.ssm_state == 64
+    cfg = C.get_config("chameleon-34b")
+    assert cfg.d_model == 8192 and cfg.qk_norm

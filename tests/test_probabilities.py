@@ -1,0 +1,118 @@
+"""Core math vs scipy oracles + the paper's stated constants."""
+import numpy as np
+import pytest
+import jax
+import jax.numpy as jnp
+from scipy import integrate, stats
+
+from repro.core import probabilities as P
+from repro.core import variance as V
+from repro.core.optimal import optimal_w
+
+RHOS = np.asarray([0.0, 0.1, 0.25, 0.5, 0.75, 0.9, 0.99])
+
+
+def _joint(x, y, rho):
+    s2 = 1 - rho ** 2
+    return np.exp(-(x * x - 2 * rho * x * y + y * y) / (2 * s2)) / (2 * np.pi * np.sqrt(s2))
+
+
+def test_pw_rho0_matches_series():
+    # Eq. (11): P_w|rho=0 = 2 sum (Phi((i+1)w) - Phi(iw))^2
+    for w in (0.5, 1.0, 2.0, 6.0):
+        i = np.arange(0, 64)
+        series = 2 * np.sum((stats.norm.cdf((i + 1) * w) - stats.norm.cdf(i * w)) ** 2)
+        got = float(P.collision_prob_uniform(jnp.asarray(0.0), w))
+        assert abs(got - series) < 5e-6, (w, got, series)
+
+
+@pytest.mark.parametrize("rho,w", [(0.3, 0.75), (0.5, 1.0), (0.8, 2.0)])
+def test_pw_matches_dblquad(rho, w):
+    tot = 0.0
+    for i in range(int(np.ceil(8.5 / w))):
+        val, _ = integrate.dblquad(lambda y, x: _joint(x, y, rho),
+                                   i * w, (i + 1) * w,
+                                   lambda x: i * w, lambda x: (i + 1) * w)
+        tot += val
+    got = float(P.collision_prob_uniform(jnp.asarray(rho), w))
+    assert abs(got - 2 * tot) < 1e-5
+
+
+def test_pw2_limits_equal_sign():
+    # P_{w,2} at w->0 and w->inf equals P_1 (paper section 4)
+    p1 = np.asarray(P.collision_prob_sign(jnp.asarray(RHOS)))
+    for w in (1e-5, 60.0):
+        p2 = np.asarray(P.collision_prob_2bit(jnp.asarray(RHOS), w))
+        np.testing.assert_allclose(p2, p1, atol=2e-5)
+
+
+def test_pwq_closed_form_vs_integral():
+    # Eq. (6): P_{w,q} = int_0^w 2 phi(t/sqrt(d)) (1 - t/w) / sqrt(d) dt
+    for rho in (0.0, 0.5, 0.9):
+        d = 2 * (1 - rho)
+        for w in (0.5, 1.5, 3.0):
+            val, _ = integrate.quad(
+                lambda t: 2 * stats.norm.pdf(t / np.sqrt(d)) * (1 - t / w) / np.sqrt(d),
+                0, w)
+            got = float(P.collision_prob_offset(jnp.asarray(rho), w))
+            assert abs(got - val) < 1e-6  # f32 eval vs f64 quad
+
+
+def test_monotone_in_rho_all_schemes():
+    rho = jnp.linspace(0.0, 0.995, 256)
+    for scheme, w in (("uniform", 0.75), ("uniform", 3.0), ("offset", 1.5),
+                      ("2bit", 0.75), ("sign", 0.0)):
+        p = np.asarray(P.collision_prob(rho, w, scheme))
+        assert np.all(np.diff(p) > -1e-7), (scheme, w)
+
+
+def test_dp_drho_matches_numeric():
+    # eps must clear f32 resolution (P ~ 0.5, ulp ~ 6e-8): central diff with
+    # eps=1e-3 keeps rounding error ~3e-5 and truncation ~O(eps^2)
+    eps = 1e-3
+    for scheme, w in (("uniform", 1.0), ("offset", 1.5), ("2bit", 0.75),
+                      ("sign", 0.0)):
+        for r in (0.1, 0.5, 0.9):
+            num = (float(P.collision_prob(jnp.asarray(r + eps), w, scheme))
+                   - float(P.collision_prob(jnp.asarray(r - eps), w, scheme))) / (2 * eps)
+            ana = float(V.dP_drho(jnp.asarray(r), w, scheme))
+            assert abs(ana - num) / max(abs(num), 1e-9) < 5e-3, (scheme, w, r)
+
+
+def test_paper_constants():
+    # Fig 2: min of V_{w,q} * 4/d^2 = 7.6797 at w/sqrt(d) = 1.6476
+    ws = np.linspace(1.0, 5.0, 2000)
+    vals = np.asarray([float(V.variance_factor_offset(jnp.asarray(0.0), w))
+                       for w in ws])  # d=2 -> *4/d^2 = *1
+    i = int(np.argmin(vals))
+    assert abs(vals[i] - 7.6797) < 1e-3
+    assert abs(ws[i] / np.sqrt(2.0) - 1.6476) < 5e-3
+    # Thm 3 remark: V_w|rho=0 -> pi^2/4 as w -> inf
+    assert abs(float(V.variance_factor_uniform(jnp.asarray(0.0), 12.0))
+               - np.pi ** 2 / 4) < 1e-4
+    # V_1(0) = pi^2/4
+    assert abs(float(V.variance_factor_sign(jnp.asarray(0.0)))
+               - np.pi ** 2 / 4) < 1e-6
+
+
+def test_optimal_w_threshold():
+    # Fig 5: for rho < ~0.56 the optimal w for h_w exceeds 6 (1 bit enough);
+    # at high rho the optimum is small; offset scheme optimum stays ~1-3.
+    w_lo, _ = optimal_w(jnp.asarray([0.3]), "uniform")
+    w_hi, _ = optimal_w(jnp.asarray([0.9]), "uniform")
+    assert float(w_lo[0]) > 6.0
+    assert float(w_hi[0]) < 1.5
+    w_q, _ = optimal_w(jnp.asarray([0.0, 0.5, 0.9]), "offset")
+    assert np.all(np.asarray(w_q) < 4.0)
+
+
+def test_variance_ordering_paper_claims():
+    rho = jnp.asarray([0.0, 0.25, 0.5])
+    for w in (2.0, 4.0, 6.0):
+        vw = np.asarray(V.variance_factor_uniform(rho, w))
+        vq = np.asarray(V.variance_factor_offset(rho, w))
+        assert np.all(vw < vq), f"h_w should beat h_wq at w={w}"
+    # 2-bit beats uniform at small w, low rho (Fig 7)
+    v2 = float(V.variance_factor_2bit(jnp.asarray(0.25), 0.5))
+    vu = float(V.variance_factor_uniform(jnp.asarray(0.25), 0.5))
+    assert v2 < vu

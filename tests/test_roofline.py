@@ -1,0 +1,57 @@
+"""Roofline helpers: HLO collective parsing + term math."""
+from repro.launch.roofline import (HW, collective_bytes, roofline_terms,
+                                   _shape_bytes)
+
+HLO = """
+ENTRY %main {
+  %ag = bf16[8,128,256]{2,1,0} all-gather(%x), replica_groups=...
+  %ar = f32[1024,1024]{1,0} all-reduce(%y), to_apply=%add
+  %ars = f32[64,64]{1,0} all-reduce-start(%z)
+  %rs = bf16[2,4]{1,0} reduce-scatter(%w)
+  %a2a = bf16[16,8,320,4096]{3,2,1,0} all-to-all(%v)
+  %cp = u32[128]{0} collective-permute(%u)
+  %dot = f32[128,128]{1,0} dot(%a, %b)
+}
+"""
+
+
+def test_shape_bytes():
+    assert _shape_bytes("bf16[8,128,256]") == 8 * 128 * 256 * 2
+    assert _shape_bytes("f32[1024,1024]") == 1024 * 1024 * 4
+    assert _shape_bytes("(f32[2,2], s32[3])") == 16 + 12
+
+
+def test_collective_bytes_parses_all_kinds():
+    out = collective_bytes(HLO)
+    assert out["all-gather"] == 8 * 128 * 256 * 2
+    # all-reduce counted twice (ring reduce+broadcast), includes -start
+    assert out["all-reduce"] == 2 * (1024 * 1024 * 4 + 64 * 64 * 4)
+    assert out["reduce-scatter"] == 2 * 4 * 2
+    assert out["all-to-all"] == 16 * 8 * 320 * 4096 * 2
+    assert out["collective-permute"] == 128 * 4
+    assert out["count"] == 6
+    assert out["total"] == sum(out[k] for k in (
+        "all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+        "collective-permute"))
+
+
+def test_roofline_terms_dominance():
+    hw = HW()
+    t = roofline_terms(197e12, 0.0, 0.0, hw)   # 1s compute, nothing else
+    assert t["dominant"] == "compute" and abs(t["t_compute_s"] - 1.0) < 1e-9
+    assert t["roofline_fraction"] == 1.0
+    t = roofline_terms(197e10, 819e9, 0.0, hw)  # memory 1s vs compute 10ms
+    assert t["dominant"] == "memory"
+    assert abs(t["roofline_fraction"] - 0.01) < 1e-6
+    t = roofline_terms(0.0, 0.0, 50e9, hw)
+    assert t["dominant"] == "collective"
+
+
+def test_model_flops_conventions():
+    from repro.launch.roofline import model_flops, active_params
+    from repro import configs as C
+    cfg = C.get_config("olmoe-1b-7b")
+    act, tot = active_params(cfg)
+    assert act < tot  # MoE: only top-k experts active
+    assert model_flops(cfg, "train", 2, 128) == 6.0 * act * 256
+    assert model_flops(cfg, "decode", 4, 999) == 2.0 * act * 4

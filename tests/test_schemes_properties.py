@@ -1,0 +1,77 @@
+"""Hypothesis property tests on scheme/packing/estimator invariants."""
+import numpy as np
+import jax.numpy as jnp
+from hypothesis import given, settings, strategies as st
+
+from repro.core import packing as PK
+from repro.core import schemes as S
+from repro.core.estimators import CollisionEstimator
+from repro.core.probabilities import collision_prob
+
+settings.register_profile("ci", max_examples=25, deadline=None)
+settings.load_profile("ci")
+
+# width=32 + no subnormals: the encoders run in f32 and XLA flushes
+# denormals to zero, so generate values exactly representable there
+W = st.floats(min_value=0.125, max_value=8.0, width=32)
+VALS = st.lists(st.floats(min_value=-20, max_value=20,
+                          allow_subnormal=False, width=32),
+                min_size=1, max_size=64)
+
+
+@given(VALS, W)
+def test_uniform_codes_in_range(vals, w):
+    spec = S.CodeSpec("uniform", w)
+    codes = np.asarray(S.encode(jnp.asarray(vals), spec))
+    assert codes.min() >= 0 and codes.max() < spec.n_codes
+    assert spec.n_codes <= 2 ** spec.bits
+
+
+@given(VALS, W, st.integers(0, 2 ** 31 - 1))
+def test_offset_codes_in_range(vals, w, seed):
+    import jax
+    spec = S.CodeSpec("offset", w)
+    q = S.sample_offsets(jax.random.PRNGKey(seed), len(vals), w)
+    codes = np.asarray(S.encode(jnp.asarray(vals), spec, q))
+    assert codes.min() >= 0 and codes.max() < spec.n_codes
+
+
+@given(VALS, W)
+def test_2bit_region_semantics(vals, w):
+    codes = np.asarray(S.encode_2bit(jnp.asarray(vals), w))
+    w32 = float(np.float32(w))    # encoder compares in f32 on both sides
+    for v, c in zip(vals, codes):
+        v = float(np.float32(v))  # (denormals -> +-0.0, ties round f32)
+        want = 0 if v < -w32 else 1 if v < 0 else 2 if v < w32 else 3
+        assert c == want
+
+
+@given(st.integers(1, 4), st.integers(1, 200), st.integers(0, 2 ** 31 - 1))
+def test_pack_unpack_roundtrip(bits_pow, k, seed):
+    bits = [1, 2, 4, 8][bits_pow - 1]
+    rng = np.random.default_rng(seed)
+    codes = rng.integers(0, 1 << bits, size=(3, k)).astype(np.int32)
+    packed = PK.pack_codes(jnp.asarray(codes), bits)
+    assert packed.shape[-1] == PK.packed_width(k, bits)
+    back = np.asarray(PK.unpack_codes(packed, bits, k))
+    np.testing.assert_array_equal(back, codes)
+
+
+@given(st.integers(1, 128), st.integers(0, 2 ** 31 - 1))
+def test_1bit_match_count_equals_direct(k, seed):
+    rng = np.random.default_rng(seed)
+    a = rng.integers(0, 2, size=(k,)).astype(np.int32)
+    b = rng.integers(0, 2, size=(k,)).astype(np.int32)
+    pa = PK.pack_codes(jnp.asarray(a[None]), 1)
+    pb = PK.pack_codes(jnp.asarray(b[None]), 1)
+    got = int(PK.match_count_packed_1bit(pa, pb, k)[0])
+    assert got == int(np.sum(a == b))
+
+
+@given(st.sampled_from(["uniform", "offset", "2bit", "sign"]),
+       st.floats(0.3, 4.0), st.floats(0.0, 0.99))
+def test_estimator_inverts_probability(scheme, w, rho):
+    est = CollisionEstimator(scheme, w, grid_size=2048)
+    p = float(collision_prob(jnp.asarray(rho), w, scheme))
+    rho_hat = float(est(p))
+    assert abs(rho_hat - rho) < 0.01, (scheme, w, rho, rho_hat)

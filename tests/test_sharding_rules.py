@@ -1,0 +1,59 @@
+"""ShardingRules resolution logic (pure logic — no devices needed)."""
+import jax
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.parallel.sharding import ShardingRules, zero_shard_spec
+
+
+@pytest.fixture(scope="module")
+def mesh():
+    # AbstractMesh: resolution logic without real devices
+    return jax.sharding.AbstractMesh((4, 2), ("data", "model"))
+
+
+def test_pspec_resolution(mesh):
+    r = ShardingRules(mesh)
+    assert r.pspec("batch", "seq", "embed") == P("data", None, None)
+    assert r.pspec("batch", None, "mlp") == P("data", None, "model")
+
+
+def test_duplicate_physical_axis_dropped(mesh):
+    r = ShardingRules(mesh).with_overrides(seq="model")
+    # heads also wants 'model'; second use must drop it
+    spec = r.pspec("batch", "seq", "heads")
+    assert spec == P("data", "model", None)
+
+
+def test_ragged_dim_falls_back():
+    mesh4 = jax.sharding.AbstractMesh((2, 4), ("data", "model"))
+    r = ShardingRules(mesh4)
+    axes = r._divisible_axes((14, 64), ("heads", "head_dim"))  # 14 % 4 != 0
+    assert axes == (None, "head_dim")
+    axes = r._divisible_axes((16, 64), ("heads", "head_dim"))
+    assert axes == ("heads", "head_dim")
+
+
+def test_dp_expansion_multipod():
+    mesh3 = jax.sharding.AbstractMesh((2, 4, 2), ("pod", "data", "model"))
+    r = ShardingRules(mesh3)
+    assert r.pspec("batch") == P(("pod", "data"))
+
+
+def test_zero_shard_spec(mesh):
+    r = ShardingRules(mesh)
+    # first divisible unsharded dim gets 'data' (4)
+    out = zero_shard_spec(r, P(None, "model"), (8, 6))
+    assert out == P("data", "model")
+    # start=1 skips the stacked-layers dim
+    out = zero_shard_spec(r, P(None, None, "model"), (8, 12, 6), start=1)
+    assert out == P(None, "data", "model")
+    # nothing divisible -> unchanged
+    out = zero_shard_spec(r, P(None,), (7,))
+    assert out == P(None,)
+
+
+def test_overrides():
+    r = ShardingRules(None).with_overrides(seq_kv="data")
+    assert r.mapping["seq_kv"] == "data"
+    assert r.shard(jax.numpy.zeros((2, 2)), "batch", "seq") is not None

@@ -1,0 +1,78 @@
+"""End-to-end behaviour of the paper's system: sketch -> code -> estimate;
+LSH search; SVM on coded features; storage economics."""
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.core import SketchConfig, CodedRandomProjection
+from repro.core.lsh import LSHIndex
+from repro.core.svm import SVMConfig, expand_codes, svm_accuracy, train_linear_svm
+
+
+def _corpus(key, n, d, rho_pairs):
+    """Unit-norm corpus where planted row i has similarity ~rho_i to row i."""
+    base = jax.random.normal(key, (n, d))
+    base = base / jnp.linalg.norm(base, axis=1, keepdims=True)
+    rows = []
+    for i, rho in enumerate(rho_pairs):
+        u = base[i]
+        z = jax.random.normal(jax.random.fold_in(key, i), (d,))
+        z = z - jnp.dot(z, u) * u
+        z = z / jnp.linalg.norm(z)
+        rows.append(rho * u + np.sqrt(1 - rho ** 2) * z)
+    return jnp.concatenate([base, jnp.stack(rows)], axis=0)
+
+
+def test_sketch_estimates_similarity():
+    d, k = 1000, 2048
+    rhos = [0.3, 0.6, 0.9, 0.98]
+    x = _corpus(jax.random.PRNGKey(0), len(rhos), d, rhos)
+    for scheme, w in (("2bit", 0.75), ("uniform", 1.0), ("sign", 0.0)):
+        crp = CodedRandomProjection(
+            SketchConfig(k=k, scheme=scheme, w=max(w, 1e-3), seed=1), d)
+        codes = crp.encode(x)
+        for i, rho in enumerate(rhos):
+            rho_hat = float(crp.estimate_rho(codes[i], codes[len(rhos) + i]))
+            tol = 3.5 * float(crp.asymptotic_std(rho)) + 0.01
+            assert abs(rho_hat - rho) < tol, (scheme, rho, rho_hat, tol)
+
+
+def test_packed_sketch_same_estimate():
+    d, k = 512, 512
+    x = _corpus(jax.random.PRNGKey(1), 2, d, [0.8, 0.5])
+    crp = CodedRandomProjection(SketchConfig(k=k, scheme="2bit", w=0.75), d)
+    codes = crp.encode(x)
+    words = crp.pack(codes)
+    r1 = crp.estimate_rho(codes[0], codes[2])
+    r2 = crp.estimate_rho_packed(words[0], words[2])
+    assert abs(float(r1) - float(r2)) < 1e-6
+    # storage economics: 2-bit codes are 16x smaller than fp32 projections
+    assert crp.fp32_bytes_per_vector() == 16 * crp.bytes_per_vector()
+
+
+def test_lsh_finds_planted_neighbor():
+    d = 256
+    key = jax.random.PRNGKey(2)
+    corpus = _corpus(key, 40, d, [0.95])  # item 40 ~ item 0
+    crp = CodedRandomProjection(SketchConfig(k=64, scheme="2bit", w=0.75), d)
+    idx = LSHIndex(crp, n_tables=8, band_width=4).build(corpus[:40])
+    hits = idx.query(np.asarray(corpus[40]), top=5)
+    assert hits and hits[0][0] == 0, hits
+
+
+def test_svm_on_coded_features_learns():
+    # two gaussian classes in 300-d, projected to k=128, coded 2-bit
+    key = jax.random.PRNGKey(3)
+    n, d, k = 400, 300, 128
+    mu = jax.random.normal(key, (d,)) * 0.35
+    x0 = jax.random.normal(jax.random.fold_in(key, 0), (n, d)) + mu
+    x1 = jax.random.normal(jax.random.fold_in(key, 1), (n, d)) - mu
+    x = jnp.concatenate([x0, x1])
+    x = x / jnp.linalg.norm(x, axis=1, keepdims=True)
+    y = jnp.concatenate([jnp.ones(n), -jnp.ones(n)])
+
+    crp = CodedRandomProjection(SketchConfig(k=k, scheme="2bit", w=0.75), d)
+    feats = expand_codes(crp.encode(x), crp.spec)
+    w_, b_ = train_linear_svm(feats[::2], y[::2], SVMConfig(c=1.0, steps=200))
+    acc = float(svm_accuracy(w_, b_, feats[1::2], y[1::2]))
+    assert acc > 0.9, acc

@@ -1,0 +1,72 @@
+"""End-to-end: tiny LM trains (loss drops), checkpoint resume is exact,
+data pipeline is deterministic/resumable, serving generates."""
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.checkpoint import latest_step
+from repro.data import DataConfig, TokenPipeline
+from repro.models import lm as L
+from repro.models.nn import init_params
+from repro.optim import AdamWConfig, adamw_update, init_opt_state
+from repro.serve import generate
+from repro.train import Trainer, TrainState, make_train_step
+
+
+def _tiny_cfg():
+    return L.ModelConfig(name="tiny", n_layers=2, d_model=32, n_heads=2,
+                         n_kv_heads=2, d_ff=64, vocab_size=64, loss_chunk=16,
+                         chunk_kv=16, chunk_q=16, remat=False)
+
+
+def test_data_pipeline_deterministic():
+    p1 = TokenPipeline(DataConfig(vocab_size=64, seq_len=16, global_batch=2))
+    p2 = TokenPipeline(DataConfig(vocab_size=64, seq_len=16, global_batch=2))
+    np.testing.assert_array_equal(np.asarray(p1.batch_at(3)),
+                                  np.asarray(p2.batch_at(3)))
+    assert not np.array_equal(np.asarray(p1.batch_at(3)),
+                              np.asarray(p1.batch_at(4)))
+
+
+def test_train_loss_decreases_and_resumes(tmp_path):
+    cfg = _tiny_cfg()
+    opt_cfg = AdamWConfig(lr_peak=3e-3, warmup_steps=5, decay_steps=60,
+                          weight_decay=0.0)
+    pipe = TokenPipeline(DataConfig(vocab_size=64, seq_len=32, global_batch=4))
+    from repro.parallel.sharding import ShardingRules
+    rules = ShardingRules(None)
+    step_fn = make_train_step(cfg, opt_cfg, rules)
+
+    params = init_params(L.model_param_specs(cfg), seed=0)
+    opt = init_opt_state(params, opt_cfg)
+    tr = Trainer(step_fn, TrainState(params, opt), pipe,
+                 ckpt_dir=str(tmp_path), ckpt_every=10, log_every=100,
+                 log_fn=lambda *a: None)
+    hist = tr.run(30)
+    first = float(np.mean([h["loss"] for h in hist[:5]]))
+    last = float(np.mean([h["loss"] for h in hist[-5:]]))
+    assert last < first - 0.1, (first, last)
+    assert latest_step(str(tmp_path)) == 30
+
+    # resume: fresh trainer picks up step 30 and continues identically
+    params2 = init_params(L.model_param_specs(cfg), seed=0)
+    opt2 = init_opt_state(params2, opt_cfg)
+    tr2 = Trainer(step_fn, TrainState(params2, opt2), pipe,
+                  ckpt_dir=str(tmp_path), ckpt_every=10, log_every=100,
+                  log_fn=lambda *a: None)
+    tr2.maybe_resume()
+    assert tr2.state.step == 30
+    m_restored = tr2.state.opt_state["m"]
+    m_current = tr.state.opt_state["m"]
+    for a, b in zip(jax.tree.leaves(m_restored), jax.tree.leaves(m_current)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=1e-7)
+
+
+def test_generate_shapes():
+    cfg = _tiny_cfg()
+    params = init_params(L.model_param_specs(cfg), seed=0)
+    prompt = jax.random.randint(jax.random.PRNGKey(0), (2, 8), 0, 64)
+    out = generate(params, prompt, cfg, n_tokens=5)
+    assert out.shape == (2, 13)
+    out_t = generate(params, prompt, cfg, n_tokens=5, temperature=1.0, seed=3)
+    assert out_t.shape == (2, 13)
