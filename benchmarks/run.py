@@ -5,8 +5,14 @@ writes detailed tables to benchmarks/out/*.csv.
 """
 import argparse
 import importlib
+import os
 import sys
 import traceback
+
+if __package__ in (None, ""):          # direct `python benchmarks/run.py`
+    _root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    sys.path.insert(0, _root)
+    sys.path.insert(0, os.path.join(_root, "src"))
 
 MODULES = [
     "benchmarks.fig01_collision",
@@ -20,6 +26,7 @@ MODULES = [
     "benchmarks.fig11_svm",
     "benchmarks.kernel_bench",
     "benchmarks.grad_compression_bench",
+    "benchmarks.ann_bench",
 ]
 
 

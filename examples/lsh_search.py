@@ -1,22 +1,27 @@
-"""Near-neighbor search with coded-projection LSH tables (paper section 1.1).
+"""Batched near-neighbor search with the device-resident ANN engine.
 
     PYTHONPATH=src python examples/lsh_search.py
+
+Builds a packed-code ``AnnEngine`` over a corpus with planted
+near-duplicates, then answers a *batch* of queries in one device call —
+exact (brute-force packed collision) and LSH-banded multi-probe modes —
+and shows the microbatching service front-end plus the legacy
+``LSHIndex`` wrapper.
 """
 import numpy as np
 import jax
 import jax.numpy as jnp
 
+from repro.ann import AnnEngine, BandSpec
 from repro.core.lsh import LSHIndex
 from repro.core.sketch import CodedRandomProjection, SketchConfig
+from repro.serve import AnnService, AnnServiceConfig
 
 
-def main():
-    d, n = 512, 2000
-    key = jax.random.PRNGKey(0)
+def make_corpus(key, d, n):
     corpus = jax.random.normal(key, (n, d))
     corpus = corpus / jnp.linalg.norm(corpus, axis=1, keepdims=True)
-
-    # plant 5 near-duplicates of item 0 at similarity 0.9-0.98
+    # plant 5 near-duplicates of item 0 at similarity 0.85-0.98
     u = corpus[0]
     planted = []
     for i, rho in enumerate([0.98, 0.95, 0.92, 0.9, 0.85]):
@@ -24,21 +29,46 @@ def main():
         z = z - jnp.dot(z, u) * u
         z = z / jnp.linalg.norm(z)
         planted.append(rho * u + np.sqrt(1 - rho ** 2) * z)
-    corpus = jnp.concatenate([corpus, jnp.stack(planted)])
+    return jnp.concatenate([corpus, jnp.stack(planted)])
+
+
+def main():
+    d, n = 512, 2000
+    key = jax.random.PRNGKey(0)
+    corpus = make_corpus(key, d, n)
 
     crp = CodedRandomProjection(SketchConfig(k=128, scheme="2bit", w=0.75), d)
-    index = LSHIndex(crp, n_tables=16, band_width=6).build(corpus)
+    engine = AnnEngine.build(crp, corpus,
+                             BandSpec(n_tables=16, band_width=6))
+    print(f"indexed {engine.n} items: {engine.store.nbytes} bytes packed "
+          f"({crp.bytes_per_vector()} B/vec vs {4 * d} raw fp32)")
 
-    hits = index.query(np.asarray(u), top=8)
-    print("query = item 0; planted neighbors are ids >= 2000")
-    print(f"{'corpus id':>9s} {'rho_hat':>8s}")
-    for idx, rho in hits:
-        marker = " <- planted" if idx >= n else (" <- self" if idx == 0 else "")
-        print(f"{idx:9d} {rho:8.4f}{marker}")
-    found = sum(1 for idx, _ in hits if idx >= n)
-    print(f"\nrecall of planted near-duplicates in top-8: {found}/5")
-    print(f"index storage: {crp.bytes_per_vector()} bytes/vector "
-          f"(vs {4 * d} for raw fp32 vectors)")
+    # one batched call answers many queries; query 0 is the planted item
+    queries = jnp.concatenate([corpus[0][None, :], corpus[100:107]])
+    for mode, kw in [("exact", {}), ("lsh", dict(n_probes=2))]:
+        ids, rho = engine.search(queries, top_k=8, mode=mode, **kw)
+        hits = [(int(i), float(r)) for i, r in zip(ids[0], rho[0])]
+        print(f"\n[{mode}] query = item 0; planted neighbors are ids >= {n}")
+        print(f"{'corpus id':>9s} {'rho_hat':>8s}")
+        for idx, r in hits:
+            marker = (" <- planted" if idx >= n
+                      else (" <- self" if idx == 0 else ""))
+            print(f"{idx:9d} {r:8.4f}{marker}")
+        found = sum(1 for idx, _ in hits if idx >= n)
+        print(f"recall of planted near-duplicates in top-8: {found}/5")
+
+    # microbatching service front-end: submit singles, flush one batch
+    svc = AnnService(engine, AnnServiceConfig(top_k=3, mode="lsh",
+                                              n_probes=1, buckets=(1, 8, 64)))
+    tickets = [svc.submit(corpus[i]) for i in range(5)]
+    svc.flush()
+    ids0, _ = svc.result(tickets[0])
+    print(f"\nservice: {svc.stats}, ticket0 top ids {np.asarray(ids0)}")
+
+    # legacy wrapper still answers one query at a time
+    index = LSHIndex(crp, n_tables=16, band_width=6).build(corpus)
+    top = index.query(np.asarray(corpus[0]), top=3)
+    print(f"LSHIndex compat wrapper top-3: {[(i, round(r, 4)) for i, r in top]}")
 
 
 if __name__ == "__main__":

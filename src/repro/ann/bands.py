@@ -1,0 +1,86 @@
+"""Device-side LSH banding: batched band hashes + multi-probe expansion.
+
+The paper's table construction ("(2 ceil(6/w))^k buckets" amplified the
+standard way) banded the k codes into L tables of m codes each. The old
+``core.lsh`` hashed bands one query at a time into Python dicts; here the
+whole thing is a jnp computation so a [Q, k] code batch turns into
+[Q, L] uint32 bucket ids in one fused kernel, and corpus-vs-query bucket
+equality is a batched compare — no host round-trip on the query path.
+
+Multi-probe: probe p perturbs one band position by ±1 (the neighboring
+quantization cell, the natural probe for the paper's floor(./w) codes)
+before hashing. Probes are *prefix-nested*: the probe sequence is fixed
+and ``n_probes`` selects a prefix, so the probed bucket set — and hence
+the candidate set — is monotone in ``n_probes`` by construction.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax.numpy as jnp
+
+__all__ = ["BandSpec", "band_hashes", "probe_hashes"]
+
+_MIX1 = jnp.uint32(0x9E3779B9)      # golden-ratio increment
+_MIX2 = jnp.uint32(0x85EBCA6B)      # murmur3 finalizer constants
+_MIX3 = jnp.uint32(0xC2B2AE35)
+
+
+@dataclass(frozen=True)
+class BandSpec:
+    """L tables of m codes each over the first L*m of k projections."""
+    n_tables: int = 8
+    band_width: int = 8
+
+    def validate(self, k: int):
+        need = self.n_tables * self.band_width
+        if need > k:
+            raise ValueError(
+                f"need n_tables*band_width <= k, {need} > {k}")
+        return self
+
+
+def _mix(h):
+    h = h ^ (h >> jnp.uint32(16))
+    h = h * _MIX2
+    h = h ^ (h >> jnp.uint32(13))
+    h = h * _MIX3
+    return h ^ (h >> jnp.uint32(16))
+
+
+def _hash_bands(bands):
+    """bands int32 [..., L, m] -> uint32 [..., L] bucket ids.
+
+    Polynomial accumulate + murmur-style finalizer, all uint32 so it runs
+    on device without x64.
+    """
+    h = jnp.zeros(bands.shape[:-1], jnp.uint32)
+    for j in range(bands.shape[-1]):
+        h = (h ^ (bands[..., j].astype(jnp.uint32) + _MIX1)) * _MIX2
+        h = h ^ (h >> jnp.uint32(15))
+    return _mix(h)
+
+
+def band_hashes(codes, spec: BandSpec):
+    """codes int32 [..., k] -> uint32 band hashes [..., L]."""
+    L, m = spec.validate(codes.shape[-1]).n_tables, spec.band_width
+    bands = codes[..., :L * m].reshape(codes.shape[:-1] + (L, m))
+    return _hash_bands(bands)
+
+
+def probe_hashes(codes, spec: BandSpec, n_probes: int = 0):
+    """codes int32 [..., k] -> uint32 [..., P, L] with P = 1 + n_probes.
+
+    Probe 0 is the unperturbed hash; probe p >= 1 bumps band position
+    (p-1) // 2 mod m by +1 (p odd) or -1 (p even) in every band. The
+    sequence is deterministic, so probe sets are nested prefixes.
+    """
+    L, m = spec.validate(codes.shape[-1]).n_tables, spec.band_width
+    bands = codes[..., :L * m].reshape(codes.shape[:-1] + (L, m))
+    out = [_hash_bands(bands)]
+    for p in range(1, n_probes + 1):
+        pos = (p - 1) // 2 % m
+        delta = 1 if p % 2 == 1 else -1
+        bump = jnp.zeros((m,), jnp.int32).at[pos].set(delta)
+        out.append(_hash_bands(bands + bump))
+    return jnp.stack(out, axis=-2)

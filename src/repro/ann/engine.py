@@ -1,0 +1,268 @@
+"""Batched device-resident ANN search over packed codes.
+
+The serving-side payoff of the paper's coding schemes (and of the
+follow-ups 1403.8144 / 1602.06577): queries are fused-projected to b-bit
+codes, bit-packed, and matched against a ``CodeStore`` without the codes
+ever existing as int32 in HBM. Two candidate modes:
+
+``exact``   — brute-force: streaming packed-collision top-k over the whole
+              corpus (``kernels.packed_collision``; jnp oracle off-TPU).
+``lsh``     — banded candidates: batched multi-probe band-hash matching
+              (``ann.bands``) scores every corpus row by matching-band
+              count; only rows sharing >= ``min_bands`` buckets with the
+              query are eligible (classic LSH retrieval semantics), and
+              eligible rows are re-ranked by full packed collision count.
+              Packed counts are so cheap (32/b codes per uint32 XOR) that
+              re-ranking is a masked brute pass rather than a gather —
+              the candidate *set* is exact, never truncated to a fixed C,
+              and grows monotonically with ``n_probes``.
+
+Both modes process queries in fixed-size chunks (padded to one shape, so
+each mode compiles exactly twice: chunk shape + remainder-free path) and
+return (ids [Q, top_k], rho_hat [Q, top_k]) with rho_hat from the paper's
+collision estimator. ``search_sharded`` runs the exact mode under
+``shard_map`` with the corpus row-sharded across a mesh axis, merging
+per-shard top-k by all-gather + re-top-k.
+"""
+from __future__ import annotations
+
+import functools
+from dataclasses import dataclass, replace
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, PartitionSpec as P
+
+from repro.ann.bands import BandSpec, band_hashes, probe_hashes
+from repro.ann.store import CodeStore
+from repro.core import packing as _packing
+from repro.core.sketch import CodedRandomProjection
+from repro.kernels import ops as _ops
+from repro.kernels import ref as _ref
+
+__all__ = ["SearchConfig", "AnnEngine"]
+
+
+@dataclass(frozen=True)
+class SearchConfig:
+    """Static knobs of one search variant (one jit cache entry each)."""
+    top_k: int = 10
+    mode: str = "exact"          # exact | lsh
+    min_bands: int = 1           # lsh: matching bands required to be a candidate
+    n_probes: int = 0            # lsh: multi-probe expansions per band
+    chunk_q: int = 256           # query rows per device step
+    impl: str = "auto"           # kernel dispatch (see kernels.ops)
+
+
+def _packed_counts_rowwise(q_words, cand_words, bits: int, k: int):
+    """q_words [c, W] vs per-query candidates [c, C, W] -> int32 [c, C]."""
+    w = q_words.shape[-1]
+    mism = jnp.zeros(cand_words.shape[:-1], jnp.int32)
+    for j in range(w):
+        xor = jnp.bitwise_xor(q_words[:, None, j], cand_words[..., j])
+        mism = mism + _packing.mismatch_count_words(xor, bits).astype(jnp.int32)
+    return k - mism
+
+
+def _coarse_band_scores(q_probe_hashes, db_hashes):
+    """Matching-band counts: [c, P, L] vs [N, L] -> int32 [c, N].
+
+    A band matches when *any* probe hits its bucket; looping the small
+    static (P, L) axes keeps temporaries at [c, N].
+    """
+    c, p_n, l_n = q_probe_hashes.shape
+    score = jnp.zeros((c, db_hashes.shape[0]), jnp.int32)
+    for l in range(l_n):
+        hit = jnp.zeros((c, db_hashes.shape[0]), bool)
+        for p in range(p_n):
+            hit = hit | (q_probe_hashes[:, p, l][:, None]
+                         == db_hashes[None, :, l])
+        score = score + hit.astype(jnp.int32)
+    return score
+
+
+class AnnEngine:
+    """Immutable search engine: sketcher + packed corpus + band hashes."""
+
+    def __init__(self, sketcher: CodedRandomProjection, store: CodeStore,
+                 band_spec: BandSpec = BandSpec(), db_band_hashes=None):
+        self.sketcher = sketcher
+        self.store = store
+        self.band_spec = band_spec.validate(sketcher.cfg.k)
+        if db_band_hashes is None:
+            db_band_hashes = band_hashes(store.unpack(), band_spec)
+        self.db_band_hashes = db_band_hashes      # uint32 [n, L]
+        self._rmat = None
+        self._search_fns = {}
+
+    # -- construction / ingestion -------------------------------------------
+    @classmethod
+    def build(cls, sketcher: CodedRandomProjection, corpus,
+              band_spec: BandSpec = BandSpec(), impl: str = "auto"):
+        """Index a corpus [n, D]: fused project+code, pack, band-hash."""
+        codes = sketcher.encode(corpus)
+        return cls.from_codes(sketcher, codes, band_spec, impl=impl)
+
+    @classmethod
+    def from_codes(cls, sketcher: CodedRandomProjection, codes,
+                   band_spec: BandSpec = BandSpec(), impl: str = "auto"):
+        store = CodeStore.from_codes(codes, sketcher.cfg.k,
+                                     sketcher.spec.bits, impl=impl)
+        return cls(sketcher, store, band_spec,
+                   db_band_hashes=band_hashes(codes, band_spec))
+
+    def add(self, x, impl: str = "auto") -> "AnnEngine":
+        """New engine with corpus rows appended (ids continue from n)."""
+        codes = self.sketcher.encode(x)
+        store = self.store.add(codes, impl=impl)
+        hashes = jnp.concatenate(
+            [self.db_band_hashes, band_hashes(codes, self.band_spec)])
+        return AnnEngine(self.sketcher, store, self.band_spec,
+                         db_band_hashes=hashes)
+
+    @property
+    def n(self) -> int:
+        return self.store.n
+
+    # -- query encoding ------------------------------------------------------
+    def _r_matrix(self):
+        """Materialized projection [D, k] for the fused query kernel; the
+        sketcher regenerates it from the seed, block by block."""
+        if self._rmat is None:
+            s = self.sketcher
+            bd = s.cfg.block_d
+            blocks = [s._block_r(b, min(bd, s.d - b * bd))
+                      for b in range((s.d + bd - 1) // bd)]
+            self._rmat = jnp.concatenate(blocks, axis=0)
+        return self._rmat
+
+    def encode_queries(self, x, impl: str = "auto"):
+        """x [Q, D] -> int32 codes [Q, k] via the fused proj+code kernel."""
+        return _ops.coded_project(x, self._r_matrix(), self.sketcher.spec,
+                                  self.sketcher._offsets, impl=impl)
+
+    # -- search --------------------------------------------------------------
+    def search(self, queries, top_k: int = 10, *, mode: str = "exact",
+               min_bands: int = 1, n_probes: int = 0,
+               chunk_q: int = 256, impl: str = "auto"):
+        """queries [Q, D] -> (ids int32 [Q, top_k], rho_hat f32 [Q, top_k]).
+
+        ids of -1 mark empty slots (top_k exceeding corpus/candidates).
+        """
+        cfg = SearchConfig(top_k=top_k, mode=mode, min_bands=min_bands,
+                           n_probes=n_probes, chunk_q=chunk_q, impl=impl)
+        return self.search_codes(self.encode_queries(queries, impl=impl), cfg)
+
+    def search_codes(self, q_codes, cfg: SearchConfig):
+        """Search pre-encoded queries [Q, k] (chunked, padded to one shape)."""
+        if cfg.mode not in ("exact", "lsh"):
+            raise ValueError(f"unknown mode {cfg.mode!r}")
+        q = q_codes.shape[0]
+        if q == 0:
+            return (jnp.zeros((0, cfg.top_k), jnp.int32),
+                    jnp.zeros((0, cfg.top_k), jnp.float32))
+        # round small batches up to a power of two so the jit cache stays
+        # bounded (<= log2(chunk_q) shapes) however callers vary Q
+        chunk = min(cfg.chunk_q, 1 << (q - 1).bit_length())
+        cfg = replace(cfg, chunk_q=chunk)
+        pad = (-q) % chunk
+        if pad:
+            q_codes = jnp.pad(q_codes, ((0, pad), (0, 0)))
+        fn = self._chunk_fn(cfg)
+        ids, rho = [], []
+        for lo in range(0, q + pad, chunk):
+            i, r = fn(q_codes[lo:lo + chunk])
+            ids.append(i)
+            rho.append(r)
+        ids = jnp.concatenate(ids)[:q]
+        rho = jnp.concatenate(rho)[:q]
+        return ids, rho
+
+    def _chunk_fn(self, cfg: SearchConfig):
+        """jit'd one-chunk search; cached per SearchConfig (warm cache)."""
+        fn = self._search_fns.get(cfg)
+        if fn is None:
+            body = (self._exact_chunk if cfg.mode == "exact"
+                    else self._lsh_chunk)
+            fn = jax.jit(functools.partial(body, cfg=cfg))
+            self._search_fns[cfg] = fn
+        return fn
+
+    def _rho(self, counts):
+        """Collision counts -> rho_hat via the paper's estimator; empty
+        slots (count < 0) surface as rho = -1."""
+        k = self.sketcher.cfg.k
+        rho = self.sketcher._estimator(counts / k)
+        return jnp.where(counts < 0, -1.0, rho)
+
+    def _exact_chunk(self, q_codes, *, cfg: SearchConfig):
+        q_words = _ops.pack_codes(q_codes, self.store.bits, impl=cfg.impl)
+        vals, ids = _ops.packed_topk(
+            q_words, self.store.words, self.store.bits, self.sketcher.cfg.k,
+            cfg.top_k, impl=cfg.impl)
+        return jnp.where(vals < 0, -1, ids), self._rho(vals)
+
+    def _lsh_chunk(self, q_codes, *, cfg: SearchConfig):
+        q_words = _ops.pack_codes(q_codes, self.store.bits, impl=cfg.impl)
+        qh = probe_hashes(q_codes, self.band_spec, cfg.n_probes)
+        coarse = _coarse_band_scores(qh, self.db_band_hashes)
+        counts = _ops.packed_collision_counts(
+            q_words, self.store.words, self.store.bits, self.sketcher.cfg.k,
+            impl=cfg.impl)
+        # non-candidates (too few matching bands) are unretrievable
+        counts = jnp.where(coarse >= cfg.min_bands, counts, -1)
+        vals, ids = _ref.topk_stable_ref(counts, cfg.top_k)
+        return ids, self._rho(vals)
+
+    # -- candidate introspection (compat wrapper + tests) --------------------
+    def band_match_counts(self, q_codes, n_probes: int = 0):
+        """[Q, k] codes -> int32 [Q, n] matching-band counts (coarse
+        scores; a row is a candidate iff its count > 0). Monotone
+        non-decreasing in ``n_probes`` (prefix-nested probes)."""
+        qh = probe_hashes(q_codes, self.band_spec, n_probes)
+        return _coarse_band_scores(qh, self.db_band_hashes)
+
+    def rerank(self, q_codes, cand_ids):
+        """Full packed collision counts of one query row's candidate list
+        -> (counts [c], rho_hat [c])."""
+        q_words = _ops.pack_codes(q_codes[None, :], self.store.bits,
+                                  impl="ref")
+        counts = _packed_counts_rowwise(
+            q_words, self.store.take(jnp.asarray(cand_ids))[None, ...],
+            self.store.bits, self.sketcher.cfg.k)[0]
+        return counts, self._rho(counts)
+
+    # -- multi-device path ---------------------------------------------------
+    def search_sharded(self, queries, mesh: Mesh, axis: str = "data",
+                       top_k: int = 10, impl: str = "auto"):
+        """Exact search with the corpus row-sharded over ``mesh[axis]``.
+
+        Each shard computes a local streaming top-k over its rows (local
+        ids offset to global by the shard index), then the per-shard
+        lists are all-gathered and re-top-k'd — the classic distributed
+        top-k merge; every step stays on device.
+        """
+        from jax.experimental.shard_map import shard_map
+
+        store = self.store.shard(mesh, axis)
+        q_codes = self.encode_queries(queries, impl=impl)
+        q_words = _ops.pack_codes(q_codes, store.bits, impl=impl)
+        k = self.sketcher.cfg.k
+        bits = store.bits
+
+        def local(qw, dbw):
+            vals, ids = _ops.packed_topk(qw, dbw, bits, k, top_k, impl=impl)
+            ids = ids + jax.lax.axis_index(axis) * dbw.shape[0]
+            vg = jax.lax.all_gather(vals, axis)       # [n_sh, Q, top_k]
+            ig = jax.lax.all_gather(ids, axis)
+            vg = jnp.moveaxis(vg, 0, 1).reshape(vals.shape[0], -1)
+            ig = jnp.moveaxis(ig, 0, 1).reshape(vals.shape[0], -1)
+            best, pos = jax.lax.top_k(vg, top_k)
+            return best, jnp.take_along_axis(ig, pos, axis=1)
+
+        fn = shard_map(local, mesh=mesh,
+                       in_specs=(P(None, None), P(axis, None)),
+                       out_specs=(P(None, None), P(None, None)),
+                       check_rep=False)
+        vals, ids = jax.jit(fn)(q_words, store.words)
+        return jnp.where(vals < 0, -1, ids), self._rho(vals)

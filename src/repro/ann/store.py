@@ -1,0 +1,102 @@
+"""Device-resident corpus of bit-packed codes (the ANN engine's HBM side).
+
+A ``CodeStore`` is an immutable array of uint32 words in the layout of
+``repro.core.packing`` / ``kernels.pack_codes``: row i holds item i's k
+b-bit codes in ceil(k / (32/b)) words. Immutability keeps every search
+jit-cache entry valid forever; ingestion produces *new* stores
+(``add``/``merge``), which under jax donates nothing and copies only the
+concatenation — the incremental path later PRs can turn into a
+segment-log.
+
+The row axis is the shard axis: ``shard``/``row_sharding`` place the
+store across a mesh's data axis for the multi-device search path.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.core import packing as _packing
+from repro.kernels import ops as _ops
+
+__all__ = ["CodeStore"]
+
+
+@dataclass(frozen=True)
+class CodeStore:
+    """Immutable packed-code corpus: ``words`` uint32 [n, n_words]."""
+    words: jax.Array
+    k: int
+    bits: int
+
+    def __post_init__(self):
+        want = _packing.packed_width(self.k, self.bits)
+        if self.words.ndim != 2 or self.words.shape[1] != want:
+            raise ValueError(
+                f"words {self.words.shape} != [n, {want}] for k={self.k}, "
+                f"bits={self.bits}")
+
+    # -- construction / ingestion -------------------------------------------
+    @classmethod
+    def from_codes(cls, codes, k: int, bits: int, impl: str = "auto"):
+        """Pack int32 codes [n, k] (Pallas kernel on TPU, jnp oracle off)."""
+        assert codes.shape[-1] == k, (codes.shape, k)
+        words = _ops.pack_codes(codes, bits, impl=impl)
+        return cls(words=words, k=k, bits=bits)
+
+    @classmethod
+    def from_words(cls, words, k: int, bits: int):
+        return cls(words=jnp.asarray(words, jnp.uint32), k=k, bits=bits)
+
+    def add(self, codes, impl: str = "auto") -> "CodeStore":
+        """New store with packed ``codes`` [m, k] appended (ids n..n+m)."""
+        return self.merge(CodeStore.from_codes(codes, self.k, self.bits,
+                                               impl=impl))
+
+    def merge(self, other: "CodeStore") -> "CodeStore":
+        if (self.k, self.bits) != (other.k, other.bits):
+            raise ValueError(f"incompatible stores: k/bits "
+                             f"{(self.k, self.bits)} vs {(other.k, other.bits)}")
+        return CodeStore(words=jnp.concatenate([self.words, other.words]),
+                         k=self.k, bits=self.bits)
+
+    # -- geometry ------------------------------------------------------------
+    @property
+    def n(self) -> int:
+        return self.words.shape[0]
+
+    @property
+    def n_words(self) -> int:
+        return self.words.shape[1]
+
+    @property
+    def nbytes(self) -> int:
+        return self.n * self.n_words * 4
+
+    def unpack(self):
+        """int32 codes [n, k] (debug / compat path only)."""
+        return _packing.unpack_codes(self.words, self.bits, self.k)
+
+    def take(self, ids):
+        """Gather rows -> uint32 [..., n_words] (candidate re-ranking)."""
+        return jnp.take(self.words, ids, axis=0)
+
+    # -- device placement ----------------------------------------------------
+    def row_sharding(self, mesh: Mesh, axis: str = "data") -> NamedSharding:
+        return NamedSharding(mesh, P(axis, None))
+
+    def shard(self, mesh: Mesh, axis: str = "data") -> "CodeStore":
+        """Store with rows laid out across ``mesh[axis]`` (n must divide).
+
+        The multi-device search path (``AnnEngine.search_sharded``) maps
+        over exactly this layout.
+        """
+        if self.n % mesh.shape[axis] != 0:
+            raise ValueError(
+                f"n={self.n} not divisible by mesh axis {axis} "
+                f"({mesh.shape[axis]})")
+        words = jax.device_put(self.words, self.row_sharding(mesh, axis))
+        return CodeStore(words=words, k=self.k, bits=self.bits)

@@ -1,41 +1,31 @@
-"""LSH tables over coded random projections (paper §1.1).
+"""LSH tables over coded random projections (paper §1.1) — compat shim.
 
-"Using k projections and a bin width w, we can naturally build a hash
-table with (2 ceil(6/w))^k buckets." We band the k codes into L tables of
-m codes each (standard LSH amplification), hash each band to a 64-bit
-bucket id, and re-rank candidates by full collision count.
-
-The index is a host-side structure (serving-layer component); probing and
-re-ranking are batched jnp computations (re-ranking uses the collision
-kernel in ``repro.kernels.collision`` on TPU).
+Historically this module owned a host-side Python-dict index probing one
+query at a time. The search path now lives in ``repro.ann``: a
+device-resident ``AnnEngine`` over bit-packed codes with batched
+band-hash candidate generation and packed-collision re-ranking.
+``LSHIndex`` survives as a thin wrapper preserving the original
+one-query-at-a-time API (build / candidates / query) for existing
+callers; new code should use ``repro.ann.AnnEngine.search`` directly and
+get the batched, multi-probe, multi-device paths.
 """
 from __future__ import annotations
 
-from collections import defaultdict
 from dataclasses import dataclass
 
 import numpy as np
 import jax.numpy as jnp
 
+from repro.ann.bands import BandSpec
+from repro.ann.engine import AnnEngine
 from repro.core.sketch import CodedRandomProjection
 
 __all__ = ["LSHIndex"]
 
-_MIX = np.uint64(0x9E3779B97F4A7C15)
-
-
-def _band_hash(codes: np.ndarray) -> np.ndarray:
-    """codes [n, m] -> uint64 bucket ids (splitmix-style polynomial hash)."""
-    h = np.zeros(codes.shape[0], dtype=np.uint64)
-    for j in range(codes.shape[1]):
-        h = (h ^ (codes[:, j].astype(np.uint64) + _MIX)) * np.uint64(0xBF58476D1CE4E5B9)
-        h ^= h >> np.uint64(31)
-    return h
-
 
 @dataclass
 class LSHIndex:
-    """L banded hash tables over coded projections."""
+    """L banded hash tables over coded projections (engine-backed)."""
     sketcher: CodedRandomProjection
     n_tables: int = 8
     band_width: int = 8
@@ -43,36 +33,35 @@ class LSHIndex:
     def __post_init__(self):
         need = self.n_tables * self.band_width
         if need > self.sketcher.cfg.k:
-            raise ValueError(f"need n_tables*band_width <= k, {need} > {self.sketcher.cfg.k}")
-        self._tables = [defaultdict(list) for _ in range(self.n_tables)]
-        self._codes = None  # [n, k] corpus codes for re-ranking
+            raise ValueError(f"need n_tables*band_width <= k, "
+                             f"{need} > {self.sketcher.cfg.k}")
+        self._engine = None
+
+    @property
+    def engine(self) -> AnnEngine:
+        if self._engine is None:
+            raise RuntimeError("index not built; call build(corpus) first")
+        return self._engine
 
     def build(self, x):
         """Index a corpus x [n, D]."""
-        codes = np.asarray(self.sketcher.encode(x))
-        self._codes = jnp.asarray(codes)
-        for t in range(self.n_tables):
-            band = codes[:, t * self.band_width:(t + 1) * self.band_width]
-            for i, h in enumerate(_band_hash(band)):
-                self._tables[t][int(h)].append(i)
+        self._engine = AnnEngine.build(
+            self.sketcher, x,
+            BandSpec(n_tables=self.n_tables, band_width=self.band_width))
         return self
 
     def candidates(self, q_codes: np.ndarray):
         """Union of bucket members across tables for one query code row."""
-        out = set()
-        for t in range(self.n_tables):
-            band = q_codes[None, t * self.band_width:(t + 1) * self.band_width]
-            out.update(self._tables[t].get(int(_band_hash(band)[0]), ()))
-        return sorted(out)
+        counts = self.engine.band_match_counts(
+            jnp.asarray(q_codes)[None, :])[0]
+        return [int(i) for i in np.flatnonzero(np.asarray(counts) > 0)]
 
     def query(self, x_query, top: int = 10):
         """x_query [D] -> list[(corpus_idx, rho_hat)] sorted by similarity."""
-        q_codes = np.asarray(self.sketcher.encode(x_query[None, :]))[0]
-        cand = self.candidates(q_codes)
+        q_codes = self.engine.encode_queries(jnp.asarray(x_query)[None, :])[0]
+        cand = self.candidates(np.asarray(q_codes))
         if not cand:
             return []
-        cand_idx = jnp.asarray(cand)
-        cand_codes = self._codes[cand_idx]  # [c, k]
-        rho = self.sketcher.estimate_rho(cand_codes, jnp.asarray(q_codes)[None, :])
+        _, rho = self.engine.rerank(q_codes, jnp.asarray(cand))
         order = jnp.argsort(-rho)[:top]
-        return [(int(cand_idx[i]), float(rho[i])) for i in order]
+        return [(cand[int(i)], float(rho[i])) for i in order]

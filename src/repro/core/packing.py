@@ -10,7 +10,9 @@ from __future__ import annotations
 import jax.numpy as jnp
 
 __all__ = ["codes_per_word", "packed_width", "pack_codes", "unpack_codes",
-           "hamming_packed", "match_count_packed_1bit"]
+           "hamming_packed", "match_count_packed_1bit", "field_lsb_mask",
+           "fold_nonzero_fields", "mismatch_count_words",
+           "match_count_packed"]
 
 
 def codes_per_word(bits: int) -> int:
@@ -68,3 +70,44 @@ def match_count_packed_1bit(a, b, k: int):
     """Number of colliding 1-bit codes = k - hamming (padding bits cancel
     in xor since both padded with zeros)."""
     return k - hamming_packed(a, b)
+
+
+def field_lsb_mask(bits: int) -> int:
+    """uint32 mask with a 1 at the least-significant bit of every b-bit
+    field: 0xFFFFFFFF (b=1), 0x55555555 (b=2), 0x11111111 (b=4), ..."""
+    cpw = codes_per_word(bits)
+    return sum(1 << (i * bits) for i in range(cpw))
+
+
+def fold_nonzero_fields(x, bits: int):
+    """OR-fold each b-bit field of uint32 ``x`` onto its LSB.
+
+    After the fold, bit i*b of the result is 1 iff field i of ``x`` is
+    nonzero (higher bits of each field hold garbage; mask with
+    ``field_lsb_mask``). Shift amounts stay < b, so cross-field
+    contamination never reaches a field's LSB.
+    """
+    s = 1
+    while s < bits:
+        x = x | (x >> jnp.uint32(s))
+        s *= 2
+    return x
+
+
+def mismatch_count_words(xor_words, bits: int):
+    """Per-word count of differing b-bit fields from XORed packed words."""
+    folded = fold_nonzero_fields(xor_words, bits)
+    return _popcount32(folded & jnp.uint32(field_lsb_mask(bits)))
+
+
+def match_count_packed(a, b, bits: int, k: int):
+    """Number of colliding b-bit codes between packed rows a, b [..., W].
+
+    The oracle for ``kernels.packed_collision``: XOR, OR-fold each field
+    to its LSB, popcount the mismatch bits. Zero-padded fields (k not a
+    multiple of 32/b) XOR to zero in both operands and so never count as
+    mismatches; matches over the k real fields = k - mismatches.
+    """
+    xor = jnp.bitwise_xor(a, b)
+    mism = jnp.sum(mismatch_count_words(xor, bits), axis=-1).astype(jnp.int32)
+    return k - mism

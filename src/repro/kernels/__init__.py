@@ -1,10 +1,15 @@
 """Pallas TPU kernels for the paper's compute hot-spots.
 
-proj_code   — fused projection GEMM + in-register coding (MXU + epilogue)
-pack_codes  — b-bit field packing into uint32 words (VPU)
-collision   — all-pairs code-match counting (VPU compare-accumulate)
+proj_code        — fused projection GEMM + in-register coding (MXU + epilogue)
+pack_codes       — b-bit field packing into uint32 words (VPU)
+collision        — all-pairs code-match counting on int32 codes (VPU)
+packed_collision — collision counts + fused streaming top-k directly on
+                   packed uint32 words (XOR/fold/popcount; ANN hot loop)
 
 Each has a pure-jnp oracle in ref.py and a dispatching wrapper in ops.py;
 tests sweep shapes/dtypes in interpret mode against the oracles.
 """
-from repro.kernels.ops import coded_project, pack_codes, collision_counts  # noqa: F401
+from repro.kernels.ops import (  # noqa: F401
+    coded_project, pack_codes, collision_counts, packed_collision_counts,
+    packed_topk,
+)

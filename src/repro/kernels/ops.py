@@ -17,9 +17,12 @@ from repro.core.schemes import CodeSpec
 from repro.kernels import ref as _ref
 from repro.kernels.collision import collision_counts_pallas
 from repro.kernels.pack_codes import pack_codes_pallas
+from repro.kernels.packed_collision import (
+    packed_collision_counts_pallas, packed_topk_pallas)
 from repro.kernels.proj_code import coded_project_pallas
 
-__all__ = ["coded_project", "pack_codes", "collision_counts"]
+__all__ = ["coded_project", "pack_codes", "collision_counts",
+           "packed_collision_counts", "packed_topk"]
 
 
 def _resolve(impl: str) -> str:
@@ -55,3 +58,22 @@ def collision_counts(codes_q, codes_db, impl: str = "auto", **block_kwargs):
         return _ref.collision_counts_ref(codes_q, codes_db)
     return collision_counts_pallas(codes_q, codes_db, interpret=_interpret(),
                                    **block_kwargs)
+
+
+def packed_collision_counts(words_q, words_db, bits: int, k: int,
+                            impl: str = "auto", **block_kwargs):
+    """All-pairs counts on packed words: [Q, W], [N, W] -> int32 [Q, N]."""
+    if _resolve(impl) == "ref":
+        return _ref.packed_collision_ref(words_q, words_db, bits, k)
+    return packed_collision_counts_pallas(words_q, words_db, bits, k,
+                                          interpret=_interpret(),
+                                          **block_kwargs)
+
+
+def packed_topk(words_q, words_db, bits: int, k: int, top_k: int,
+                impl: str = "auto", **block_kwargs):
+    """Streaming top-k search on packed words -> (counts, ids) [Q, top_k]."""
+    if _resolve(impl) == "ref":
+        return _ref.packed_topk_ref(words_q, words_db, bits, k, top_k)
+    return packed_topk_pallas(words_q, words_db, bits, k, top_k,
+                              interpret=_interpret(), **block_kwargs)

@@ -5,13 +5,16 @@ outputs) across the shape/dtype sweeps in tests/test_kernels.py.
 """
 from __future__ import annotations
 
+import jax
 import jax.numpy as jnp
 
 from repro.core import packing as _packing
 from repro.core import schemes as _schemes
 from repro.core.schemes import CodeSpec
 
-__all__ = ["coded_project_ref", "pack_codes_ref", "collision_counts_ref"]
+__all__ = ["coded_project_ref", "pack_codes_ref", "collision_counts_ref",
+           "packed_collision_ref", "packed_topk_ref", "topk_blocked_ref",
+           "topk_stable_ref"]
 
 
 def coded_project_ref(x, r, spec: CodeSpec, q=None):
@@ -33,3 +36,86 @@ def collision_counts_ref(codes_q, codes_db):
     """codes_q [Q, K], codes_db [N, K] -> int32 [Q, N] match counts."""
     eq = (codes_q[:, None, :] == codes_db[None, :, :])
     return jnp.sum(eq, axis=-1).astype(jnp.int32)
+
+
+def packed_collision_ref(words_q, words_db, bits: int, k: int):
+    """words_q uint32 [Q, W], words_db uint32 [N, W] -> int32 [Q, N].
+
+    All-pairs b-bit collision counts computed directly on packed words
+    (XOR + field fold + popcount; semantics in ``packing.match_count_packed``).
+    Accumulates word-by-word so the [Q, N] temporaries stay 2-D — the
+    broadcast [Q, N, W] intermediate never materializes (W is small and
+    static, so the unrolled loop fuses under jit).
+    """
+    q, w = words_q.shape
+    n = words_db.shape[0]
+    mism = jnp.zeros((q, n), jnp.int32)
+    for j in range(w):
+        xor = jnp.bitwise_xor(words_q[:, None, j], words_db[None, :, j])
+        mism = mism + _packing.mismatch_count_words(xor, bits).astype(jnp.int32)
+    return k - mism
+
+
+def topk_blocked_ref(m, top_k: int, block: int = 4096):
+    """Stable descending top-k over the last axis of int matrix [c, n].
+
+    Bit-identical to ``jax.lax.top_k`` (ties -> lowest index) but built
+    for small top_k on large n: one block-max pass over the matrix, then
+    per-pick work touches only the winning block, so the cost is
+    O(c*n + top_k * c * block) instead of XLA's full per-row sort.
+    ~30x faster than ``lax.top_k`` on CPU at [256, 100k], top_k=10.
+
+    Unlike ``lax.top_k``, top_k > n is allowed: overflow slots return the
+    dtype-min sentinel as value (ids point past n) — callers mask on
+    value < real-minimum.
+    """
+    c, n = m.shape
+    sent = jnp.iinfo(m.dtype).min
+    pad = (-max(n, top_k)) % block + (max(n, top_k) - n)
+    if pad:
+        m = jnp.pad(m, ((0, 0), (0, pad)), constant_values=sent)
+    nb = m.shape[1] // block
+    mb = m.reshape(c, nb, block)
+    bmax = jnp.max(mb, axis=2)                       # [c, nb]
+    rows = jnp.arange(c)
+    vals, ids = [], []
+    for _ in range(top_k):
+        b = jnp.argmax(bmax, axis=1)                 # lowest block on ties
+        blk = mb[rows, b]                            # [c, block]
+        inner = jnp.argmax(blk, axis=1)
+        vals.append(blk[rows, inner])
+        ids.append((b * block + inner).astype(jnp.int32))
+        mb = mb.at[rows, b, inner].set(sent)
+        bmax = bmax.at[rows, b].set(jnp.max(mb[rows, b], axis=1))
+    return jnp.stack(vals, axis=1), jnp.stack(ids, axis=1)
+
+
+def topk_stable_ref(m, top_k: int):
+    """Stable descending top-k of int scores [c, n] with -1-fill overflow.
+
+    The shared selection for search paths: blocked picking for small
+    top_k (fast on CPU), one lax.top_k call beyond that (the unrolled
+    pick loop would trace top_k scatter steps). top_k > n is allowed —
+    overflow slots come back as (-1, -1); negative scores also surface
+    ids of -1 (search paths use negatives to mark non-candidates).
+    """
+    if top_k > m.shape[1]:
+        m = jnp.pad(m, ((0, 0), (0, top_k - m.shape[1])),
+                    constant_values=-1)
+    if top_k <= 64:
+        vals, ids = topk_blocked_ref(m, top_k)
+    else:
+        vals, ids = jax.lax.top_k(m, top_k)
+        ids = ids.astype(jnp.int32)
+    return vals, jnp.where(vals < 0, -1, ids)
+
+
+def packed_topk_ref(words_q, words_db, bits: int, k: int, top_k: int):
+    """-> (counts [Q, top_k], ids [Q, top_k]): full packed collision matrix
+    followed by a stable descending top-k (lowest corpus id wins ties).
+
+    top_k > N yields (-1, -1) in the overflow slots, matching the
+    streaming kernel's scratch-fill semantics.
+    """
+    counts = packed_collision_ref(words_q, words_db, bits, k)
+    return topk_stable_ref(counts, top_k)

@@ -91,7 +91,7 @@ def active_params(cfg) -> tuple:
     specs = model_param_specs(cfg)
     total = active = 0
     emb = np_prod(specs["embed"].shape)
-    leaves = jax.tree.flatten_with_path(
+    leaves = jax.tree_util.tree_flatten_with_path(
         specs, is_leaf=lambda x: hasattr(x, "shape") and hasattr(x, "axes"))[0]
     for path, s in leaves:
         name = jax.tree_util.keystr(path)

@@ -59,7 +59,8 @@ def _is_spec(x):
 def init_params(specs, seed: int = 0):
     """Deterministic init: every leaf key is fold_in(root, hash(path))."""
     root = jax.random.PRNGKey(seed)
-    leaves, treedef = jax.tree.flatten_with_path(specs, is_leaf=_is_spec)
+    leaves, treedef = jax.tree_util.tree_flatten_with_path(
+        specs, is_leaf=_is_spec)
     out = []
     for path, spec in leaves:
         h = hash(jax.tree_util.keystr(path)) & 0x7FFFFFFF

@@ -18,7 +18,17 @@ from typing import Optional
 import jax
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
-__all__ = ["ShardingRules", "DEFAULT_RULES", "zero_shard_spec"]
+__all__ = ["ShardingRules", "DEFAULT_RULES", "zero_shard_spec",
+           "make_abstract_mesh"]
+
+
+def make_abstract_mesh(axis_sizes, axis_names):
+    """AbstractMesh across jax versions: 0.4.x wants one iterable of
+    (name, size) pairs, >= 0.5 wants (axis_sizes, axis_names)."""
+    try:
+        return jax.sharding.AbstractMesh(tuple(zip(axis_names, axis_sizes)))
+    except TypeError:
+        return jax.sharding.AbstractMesh(tuple(axis_sizes), tuple(axis_names))
 
 # logical axis -> mesh axis name(s) or None. 'dp' expands to the mesh's
 # data-parallel axes (('pod','data') or ('data',)).

@@ -1,1 +1,2 @@
 from repro.serve.serving import make_serve_step, generate  # noqa: F401
+from repro.serve.ann_service import AnnService, AnnServiceConfig  # noqa: F401

@@ -1,0 +1,109 @@
+"""Microbatching front-end for the ANN engine (serving-layer component).
+
+Mirrors ``serve.serving``'s split between jit'd device steps and a thin
+host loop: individual queries arrive via ``submit`` (a ticket comes
+back), ``flush`` pads the pending queue up to the next bucket size and
+runs ONE batched ``AnnEngine`` search per bucket-shaped batch. Bucketed
+padding keeps the jit cache to a handful of entries regardless of
+traffic shape — ``warmup`` pre-compiles every bucket so the first real
+query never pays compile latency.
+
+This is the single-process skeleton of the production front-end: the
+queue becomes a real async queue and ``flush`` a deadline-driven loop,
+but the device contract (pad-to-bucket, warm cache, one search per
+batch) is exactly what a high-QPS deployment needs.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+import jax.numpy as jnp
+
+from repro.ann.engine import AnnEngine
+
+__all__ = ["AnnServiceConfig", "AnnService"]
+
+
+@dataclass(frozen=True)
+class AnnServiceConfig:
+    top_k: int = 10
+    mode: str = "exact"            # exact | lsh
+    min_bands: int = 1
+    n_probes: int = 0
+    buckets: tuple = (1, 8, 64, 256)   # padded batch shapes (ascending)
+    impl: str = "auto"
+
+
+@dataclass
+class AnnService:
+    """Queue + pad-to-bucket batching over a shared ``AnnEngine``."""
+    engine: AnnEngine
+    cfg: AnnServiceConfig = field(default_factory=AnnServiceConfig)
+
+    def __post_init__(self):
+        self._queue = []          # [(ticket, vector [D])]
+        self._results = {}        # ticket -> (ids [top_k], rho [top_k])
+        self._next_ticket = 0
+        self.stats = {"queries": 0, "batches": 0, "padded_rows": 0}
+
+    # -- request path --------------------------------------------------------
+    def submit(self, x) -> int:
+        """Enqueue one query vector [D]; returns a ticket for ``result``."""
+        x = jnp.asarray(x)
+        if x.ndim != 1:
+            raise ValueError(f"submit takes a single vector, got {x.shape}")
+        t = self._next_ticket
+        self._next_ticket += 1
+        self._queue.append((t, x))
+        return t
+
+    def result(self, ticket: int):
+        """(ids, rho) for a flushed ticket; KeyError if not flushed yet."""
+        return self._results[ticket]
+
+    def pending(self) -> int:
+        return len(self._queue)
+
+    # -- batch execution -----------------------------------------------------
+    def _bucket_for(self, n: int) -> int:
+        for b in self.cfg.buckets:
+            if n <= b:
+                return b
+        return self.cfg.buckets[-1]
+
+    def flush(self):
+        """Run every pending query; returns {ticket: (ids, rho)}.
+
+        Queries are taken in arrival order, in slices of at most the
+        largest bucket; each slice is padded up to its bucket shape.
+        """
+        out = {}
+        cfg = self.cfg
+        max_b = cfg.buckets[-1]
+        while self._queue:
+            batch = self._queue[:max_b]
+            self._queue = self._queue[max_b:]
+            n = len(batch)
+            b = self._bucket_for(n)
+            x = jnp.stack([v for _, v in batch])
+            if b > n:
+                x = jnp.pad(x, ((0, b - n), (0, 0)))
+            ids, rho = self.engine.search(
+                x, cfg.top_k, mode=cfg.mode, min_bands=cfg.min_bands,
+                n_probes=cfg.n_probes, chunk_q=b, impl=cfg.impl)
+            for i, (t, _) in enumerate(batch):
+                self._results[t] = (ids[i], rho[i])
+                out[t] = (ids[i], rho[i])
+            self.stats["queries"] += n
+            self.stats["batches"] += 1
+            self.stats["padded_rows"] += b - n
+        return out
+
+    def warmup(self, d: int):
+        """Pre-compile every bucket shape (cold-start insurance)."""
+        for b in self.cfg.buckets:
+            self.engine.search(
+                jnp.zeros((b, d)), self.cfg.top_k, mode=self.cfg.mode,
+                min_bands=self.cfg.min_bands,
+                n_probes=self.cfg.n_probes, chunk_q=b, impl=self.cfg.impl)
+        return self

@@ -1,0 +1,238 @@
+"""repro.ann subsystem: packed-collision kernels vs the core/packing
+oracle, CodeStore ingestion, batched search (exact vs LSH recall),
+multi-probe monotonicity, the serving front-end, and the compat wrapper."""
+import numpy as np
+import pytest
+import jax
+import jax.numpy as jnp
+
+from repro.ann import AnnEngine, BandSpec, CodeStore
+from repro.core import packing as PK
+from repro.core.sketch import CodedRandomProjection, SketchConfig
+from repro.kernels import ref
+from repro.kernels.packed_collision import (
+    packed_collision_counts_pallas, packed_topk_pallas)
+from repro.serve.ann_service import AnnService, AnnServiceConfig
+
+
+def _codes(key, shape, bits):
+    return jax.random.randint(key, shape, 0, 1 << bits)
+
+
+# -- packed-collision kernel vs core/packing oracle ---------------------------
+
+@pytest.mark.parametrize("bits", [1, 2, 4, 8])
+@pytest.mark.parametrize("q,n,k", [(8, 16, 32), (5, 33, 17), (33, 70, 77)])
+def test_packed_collision_matches_oracle(bits, q, n, k):
+    """Bit-exact vs unpacked collision counts, incl. K-padding (k chosen
+    to not divide 32/bits) and word/row block padding."""
+    key = jax.random.PRNGKey(bits * 100 + q)
+    cq = _codes(key, (q, k), bits)
+    cdb = _codes(jax.random.fold_in(key, 1), (n, k), bits)
+    wq = PK.pack_codes(cq, bits)
+    wdb = PK.pack_codes(cdb, bits)
+    want = ref.collision_counts_ref(cq, cdb)
+    got_ref = ref.packed_collision_ref(wq, wdb, bits, k)
+    got_pal = packed_collision_counts_pallas(
+        wq, wdb, bits, k, block_q=8, block_n=16, block_w=2, interpret=True)
+    np.testing.assert_array_equal(np.asarray(got_ref), np.asarray(want))
+    np.testing.assert_array_equal(np.asarray(got_pal), np.asarray(want))
+
+
+@pytest.mark.parametrize("bits", [1, 2, 8])
+def test_match_count_packed_rowwise(bits):
+    k = 45
+    key = jax.random.PRNGKey(bits)
+    a = _codes(key, (12, k), bits)
+    b = _codes(jax.random.fold_in(key, 1), (12, k), bits)
+    got = PK.match_count_packed(PK.pack_codes(a, bits),
+                                PK.pack_codes(b, bits), bits, k)
+    want = jnp.sum((a == b).astype(jnp.int32), axis=-1)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+@pytest.mark.parametrize("bits,k", [(2, 128), (4, 30)])
+@pytest.mark.parametrize("top_k", [1, 5, 13])
+def test_packed_topk_streaming_matches_ref(bits, k, top_k):
+    """Streaming kernel == full-matrix top-k, values AND tie-broken ids."""
+    key = jax.random.PRNGKey(k + top_k)
+    wq = PK.pack_codes(_codes(key, (9, k), bits), bits)
+    wdb = PK.pack_codes(_codes(jax.random.fold_in(key, 1), (50, k), bits),
+                        bits)
+    gv, gi = packed_topk_pallas(wq, wdb, bits, k, top_k,
+                                block_q=8, block_n=16, interpret=True)
+    rv, ri = ref.packed_topk_ref(wq, wdb, bits, k, top_k)
+    np.testing.assert_array_equal(np.asarray(gv), np.asarray(rv))
+    np.testing.assert_array_equal(np.asarray(gi), np.asarray(ri))
+
+
+def test_packed_topk_overflow_slots():
+    """top_k > N: kernel and ref both fill overflow slots with (-1, -1)."""
+    bits, k, n = 2, 20, 4
+    key = jax.random.PRNGKey(1)
+    wq = PK.pack_codes(_codes(key, (3, k), bits), bits)
+    wdb = PK.pack_codes(_codes(jax.random.fold_in(key, 1), (n, k), bits),
+                        bits)
+    rv, ri = ref.packed_topk_ref(wq, wdb, bits, k, 7)
+    gv, gi = packed_topk_pallas(wq, wdb, bits, k, 7, block_q=8, block_n=8,
+                                interpret=True)
+    assert (np.asarray(rv[:, n:]) == -1).all()
+    assert (np.asarray(ri[:, n:]) == -1).all()
+    np.testing.assert_array_equal(np.asarray(gv), np.asarray(rv))
+    np.testing.assert_array_equal(np.asarray(gi), np.asarray(ri))
+
+
+def test_topk_blocked_matches_lax_top_k():
+    """The CPU-fast blocked top-k is bit-identical to stable lax.top_k
+    under heavy ties and non-divisible block sizes."""
+    m = jax.random.randint(jax.random.PRNGKey(0), (7, 5001), 0, 9,
+                           dtype=jnp.int32)
+    v1, i1 = ref.topk_blocked_ref(m, 6, block=128)
+    v2, i2 = jax.lax.top_k(m, 6)
+    np.testing.assert_array_equal(np.asarray(v1), np.asarray(v2))
+    np.testing.assert_array_equal(np.asarray(i1), np.asarray(i2))
+
+
+# -- CodeStore ----------------------------------------------------------------
+
+def test_code_store_roundtrip_add_merge():
+    bits, k = 2, 50
+    key = jax.random.PRNGKey(3)
+    c1 = _codes(key, (20, k), bits)
+    c2 = _codes(jax.random.fold_in(key, 1), (12, k), bits)
+    s = CodeStore.from_codes(c1, k, bits)
+    assert s.n == 20 and s.n_words == PK.packed_width(k, bits)
+    np.testing.assert_array_equal(np.asarray(s.unpack()), np.asarray(c1))
+    s2 = s.add(c2)
+    assert s2.n == 32 and s.n == 20  # immutable: original untouched
+    np.testing.assert_array_equal(np.asarray(s2.unpack()[20:]),
+                                  np.asarray(c2))
+    with pytest.raises(ValueError):
+        s.merge(CodeStore.from_codes(c1, k, 4))
+
+
+# -- engine: batched search ---------------------------------------------------
+
+def _unit(x):
+    return x / jnp.linalg.norm(x, axis=-1, keepdims=True)
+
+
+@pytest.fixture(scope="module")
+def small_world():
+    d, n_clusters, per = 32, 60, 5
+    key = jax.random.PRNGKey(7)
+    centers = _unit(jax.random.normal(key, (n_clusters, d)))
+    noise = _unit(jax.random.normal(jax.random.fold_in(key, 1),
+                                    (n_clusters, per, d)))
+    corpus = _unit(0.95 * centers[:, None, :] + np.sqrt(1 - 0.95 ** 2)
+                   * noise).reshape(-1, d)
+    queries = corpus[::per][:20]  # one member of each of 20 clusters
+    crp = CodedRandomProjection(SketchConfig(k=128, scheme="2bit", w=0.75), d)
+    engine = AnnEngine.build(crp, corpus,
+                             BandSpec(n_tables=32, band_width=4))
+    return engine, corpus, queries, per
+
+
+def test_exact_search_is_packed_brute_force(small_world):
+    engine, corpus, queries, per = small_world
+    ids, rho = engine.search(queries, top_k=3, mode="exact", chunk_q=8)
+    # query IS a corpus row: rank 0 must be itself at rho ~ 1
+    np.testing.assert_array_equal(np.asarray(ids[:, 0]),
+                                  np.arange(20) * per)
+    assert float(jnp.min(rho[:, 0])) > 0.98
+    # exact == oracle top-k over unpacked collision counts
+    counts = ref.collision_counts_ref(engine.encode_queries(queries),
+                                      engine.store.unpack())
+    want_v, want_i = jax.lax.top_k(counts, 3)
+    np.testing.assert_array_equal(np.asarray(ids), np.asarray(want_i))
+
+
+def test_search_edge_batches(small_world):
+    """Empty query batch and top_k > corpus both honor the -1-fill
+    contract instead of crashing."""
+    engine, corpus, queries, per = small_world
+    ids, rho = engine.search(queries[:0], top_k=3)
+    assert ids.shape == (0, 3) and rho.shape == (0, 3)
+    big = engine.n + 5
+    for mode in ("exact", "lsh"):
+        ids, rho = engine.search(queries[:2], top_k=big, mode=mode)
+        assert ids.shape == (2, big)
+        assert (np.asarray(ids[:, engine.n:]) == -1).all()
+        assert (np.asarray(rho[:, engine.n:]) == -1).all()
+
+
+def test_lsh_recall_vs_exact(small_world):
+    engine, corpus, queries, per = small_world
+    ids_e, _ = engine.search(queries, top_k=5, mode="exact")
+    ids_l, _ = engine.search(queries, top_k=5, mode="lsh", n_probes=1)
+    recall = np.mean([len(set(np.asarray(a)) & set(np.asarray(b))) / 5
+                      for a, b in zip(ids_l, ids_e)])
+    assert recall >= 0.9, recall
+
+
+def test_multiprobe_candidates_monotone(small_world):
+    """Prefix-nested probes: candidate sets only grow with n_probes."""
+    engine, corpus, queries, per = small_world
+    q_codes = engine.encode_queries(queries)
+    prev = None
+    for p in (0, 1, 3, 5):
+        coarse = np.asarray(engine.band_match_counts(q_codes, n_probes=p))
+        if prev is not None:
+            assert (coarse >= prev).all(), f"probe {p} lost candidates"
+        prev = coarse
+
+
+def test_incremental_add_finds_new_rows(small_world):
+    engine, corpus, queries, per = small_world
+    engine2 = engine.add(queries[:4])
+    ids, _ = engine2.search(queries[:4], top_k=2, mode="exact")
+    # the appended duplicates (ids n..n+3) tie with the originals; both
+    # top-2 slots must come from {original, appended}
+    for i in range(4):
+        got = set(int(x) for x in np.asarray(ids[i]))
+        assert got == {i * per, engine.n + i}, (i, got)
+
+
+def test_search_sharded_matches_exact(small_world):
+    from jax.sharding import Mesh
+    engine, corpus, queries, per = small_world
+    mesh = Mesh(np.asarray(jax.devices()[:1]), ("data",))
+    ids_s, rho_s = engine.search_sharded(queries, mesh, top_k=4)
+    ids_e, rho_e = engine.search(queries, top_k=4, mode="exact")
+    np.testing.assert_array_equal(np.asarray(ids_s), np.asarray(ids_e))
+    np.testing.assert_allclose(np.asarray(rho_s), np.asarray(rho_e),
+                               rtol=1e-6)
+
+
+# -- serving front-end --------------------------------------------------------
+
+def test_ann_service_microbatching(small_world):
+    engine, corpus, queries, per = small_world
+    svc = AnnService(engine, AnnServiceConfig(top_k=3, mode="exact",
+                                              buckets=(1, 4, 8)))
+    tickets = [svc.submit(queries[i]) for i in range(6)]
+    out = svc.flush()
+    assert svc.pending() == 0 and set(out) == set(tickets)
+    assert svc.stats["queries"] == 6 and svc.stats["padded_rows"] == 2
+    ids_direct, _ = engine.search(queries[:6], top_k=3, mode="exact")
+    for i, t in enumerate(tickets):
+        ids_t, _ = svc.result(t)
+        np.testing.assert_array_equal(np.asarray(ids_t),
+                                      np.asarray(ids_direct[i]))
+    with pytest.raises(ValueError):
+        svc.submit(queries[:2])  # batch submit is one vector at a time
+
+
+# -- compat wrapper -----------------------------------------------------------
+
+def test_lsh_index_wrapper_compat(small_world):
+    from repro.core.lsh import LSHIndex
+    engine, corpus, queries, per = small_world
+    idx = LSHIndex(engine.sketcher, n_tables=32, band_width=4).build(corpus)
+    hits = idx.query(np.asarray(queries[0]), top=3)
+    assert hits[0][0] == 0 and hits[0][1] > 0.98
+    cand = idx.candidates(np.asarray(engine.encode_queries(
+        queries[:1])[0]))
+    assert 0 in cand
+    with pytest.raises(ValueError):
+        LSHIndex(engine.sketcher, n_tables=64, band_width=4)  # > k codes

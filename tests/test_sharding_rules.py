@@ -3,13 +3,14 @@ import jax
 import pytest
 from jax.sharding import PartitionSpec as P
 
-from repro.parallel.sharding import ShardingRules, zero_shard_spec
+from repro.parallel.sharding import (ShardingRules, make_abstract_mesh,
+                                     zero_shard_spec)
 
 
 @pytest.fixture(scope="module")
 def mesh():
     # AbstractMesh: resolution logic without real devices
-    return jax.sharding.AbstractMesh((4, 2), ("data", "model"))
+    return make_abstract_mesh((4, 2), ("data", "model"))
 
 
 def test_pspec_resolution(mesh):
@@ -26,7 +27,7 @@ def test_duplicate_physical_axis_dropped(mesh):
 
 
 def test_ragged_dim_falls_back():
-    mesh4 = jax.sharding.AbstractMesh((2, 4), ("data", "model"))
+    mesh4 = make_abstract_mesh((2, 4), ("data", "model"))
     r = ShardingRules(mesh4)
     axes = r._divisible_axes((14, 64), ("heads", "head_dim"))  # 14 % 4 != 0
     assert axes == (None, "head_dim")
@@ -35,7 +36,7 @@ def test_ragged_dim_falls_back():
 
 
 def test_dp_expansion_multipod():
-    mesh3 = jax.sharding.AbstractMesh((2, 4, 2), ("pod", "data", "model"))
+    mesh3 = make_abstract_mesh((2, 4, 2), ("pod", "data", "model"))
     r = ShardingRules(mesh3)
     assert r.pspec("batch") == P(("pod", "data"))
 
