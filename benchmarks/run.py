@@ -27,6 +27,7 @@ MODULES = [
     "benchmarks.kernel_bench",
     "benchmarks.grad_compression_bench",
     "benchmarks.ann_bench",
+    "benchmarks.ingest_bench",
 ]
 
 

@@ -4,8 +4,10 @@ store   — ``CodeStore``: immutable bit-packed corpus in HBM (add/merge,
           row-shardable across a mesh)
 bands   — batched LSH band hashing with prefix-nested multi-probe
 engine  — ``AnnEngine``: fused project→code→pack queries, exact and
-          LSH-banded candidate search, multi-device top-k merge
-(serving front-end: ``repro.serve.ann_service``)
+          LSH-banded candidate search, multi-device top-k merge;
+          ``QueryCoder``/``merge_topk`` shared with the mutable layer
+(mutable lifecycle over this layer: ``repro.index``; serving
+front-end: ``repro.serve.ann_service``)
 """
 from repro.ann.bands import BandSpec, band_hashes, probe_hashes  # noqa: F401
 from repro.ann.engine import AnnEngine, SearchConfig  # noqa: F401

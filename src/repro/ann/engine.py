@@ -40,7 +40,8 @@ from repro.core.sketch import CodedRandomProjection
 from repro.kernels import ops as _ops
 from repro.kernels import ref as _ref
 
-__all__ = ["SearchConfig", "AnnEngine"]
+__all__ = ["SearchConfig", "AnnEngine", "QueryCoder", "merge_topk",
+           "run_chunked"]
 
 
 @dataclass(frozen=True)
@@ -52,6 +53,66 @@ class SearchConfig:
     n_probes: int = 0            # lsh: multi-probe expansions per band
     chunk_q: int = 256           # query rows per device step
     impl: str = "auto"           # kernel dispatch (see kernels.ops)
+
+
+class QueryCoder:
+    """Fused query encoder shared by the immutable engine and the mutable
+    segment-log engine (``repro.index``): materializes the sketcher's
+    projection once and runs the fused proj+code kernel per batch."""
+
+    def __init__(self, sketcher: CodedRandomProjection):
+        self.sketcher = sketcher
+        self._rmat = None
+
+    def r_matrix(self):
+        """Materialized projection [D, k]; the sketcher regenerates it
+        from the seed, block by block."""
+        if self._rmat is None:
+            s = self.sketcher
+            bd = s.cfg.block_d
+            blocks = [s._block_r(b, min(bd, s.d - b * bd))
+                      for b in range((s.d + bd - 1) // bd)]
+            self._rmat = jnp.concatenate(blocks, axis=0)
+        return self._rmat
+
+    def encode(self, x, impl: str = "auto"):
+        """x [Q, D] -> int32 codes [Q, k] via the fused proj+code kernel."""
+        return _ops.coded_project(x, self.r_matrix(), self.sketcher.spec,
+                                  self.sketcher._offsets, impl=impl)
+
+
+def merge_topk(vals_list, ids_list, top_k: int):
+    """Merge per-part (segment/shard) top-k lists into a global top-k.
+
+    Parts are concatenated in list order; ``lax.top_k`` is stable, so
+    ties resolve to the earliest part and, within a part, to the part's
+    own list order (the kernels emit ties lowest-row-first). With parts
+    ordered by row offset this reproduces the single-store tie-break
+    exactly. Entries with negative values surface ids of -1.
+    """
+    cat_v = jnp.concatenate(vals_list, axis=1)
+    cat_i = jnp.concatenate(ids_list, axis=1)
+    best_v, pos = jax.lax.top_k(cat_v, top_k)
+    best_i = jnp.take_along_axis(cat_i, pos, axis=1)
+    return best_v, jnp.where(best_v < 0, -1, best_i)
+
+
+def run_chunked(q_codes, cfg: SearchConfig, chunk_fn):
+    """Shared query chunking: pad Q up to a power-of-two chunk (jit cache
+    stays <= log2(chunk_q) shapes however callers vary Q), run
+    ``chunk_fn(q_codes[lo:hi], cfg)`` per chunk, unpad."""
+    q = q_codes.shape[0]
+    chunk = min(cfg.chunk_q, 1 << (q - 1).bit_length())
+    cfg = replace(cfg, chunk_q=chunk)
+    pad = (-q) % chunk
+    if pad:
+        q_codes = jnp.pad(q_codes, ((0, pad), (0, 0)))
+    ids, rho = [], []
+    for lo in range(0, q + pad, chunk):
+        i, r = chunk_fn(q_codes[lo:lo + chunk], cfg)
+        ids.append(i)
+        rho.append(r)
+    return jnp.concatenate(ids)[:q], jnp.concatenate(rho)[:q]
 
 
 def _packed_counts_rowwise(q_words, cand_words, bits: int, k: int):
@@ -92,7 +153,7 @@ class AnnEngine:
         if db_band_hashes is None:
             db_band_hashes = band_hashes(store.unpack(), band_spec)
         self.db_band_hashes = db_band_hashes      # uint32 [n, L]
-        self._rmat = None
+        self._coder = QueryCoder(sketcher)
         self._search_fns = {}
 
     # -- construction / ingestion -------------------------------------------
@@ -126,20 +187,11 @@ class AnnEngine:
 
     # -- query encoding ------------------------------------------------------
     def _r_matrix(self):
-        """Materialized projection [D, k] for the fused query kernel; the
-        sketcher regenerates it from the seed, block by block."""
-        if self._rmat is None:
-            s = self.sketcher
-            bd = s.cfg.block_d
-            blocks = [s._block_r(b, min(bd, s.d - b * bd))
-                      for b in range((s.d + bd - 1) // bd)]
-            self._rmat = jnp.concatenate(blocks, axis=0)
-        return self._rmat
+        return self._coder.r_matrix()
 
     def encode_queries(self, x, impl: str = "auto"):
         """x [Q, D] -> int32 codes [Q, k] via the fused proj+code kernel."""
-        return _ops.coded_project(x, self._r_matrix(), self.sketcher.spec,
-                                  self.sketcher._offsets, impl=impl)
+        return self._coder.encode(x, impl=impl)
 
     # -- search --------------------------------------------------------------
     def search(self, queries, top_k: int = 10, *, mode: str = "exact",
@@ -161,22 +213,8 @@ class AnnEngine:
         if q == 0:
             return (jnp.zeros((0, cfg.top_k), jnp.int32),
                     jnp.zeros((0, cfg.top_k), jnp.float32))
-        # round small batches up to a power of two so the jit cache stays
-        # bounded (<= log2(chunk_q) shapes) however callers vary Q
-        chunk = min(cfg.chunk_q, 1 << (q - 1).bit_length())
-        cfg = replace(cfg, chunk_q=chunk)
-        pad = (-q) % chunk
-        if pad:
-            q_codes = jnp.pad(q_codes, ((0, pad), (0, 0)))
-        fn = self._chunk_fn(cfg)
-        ids, rho = [], []
-        for lo in range(0, q + pad, chunk):
-            i, r = fn(q_codes[lo:lo + chunk])
-            ids.append(i)
-            rho.append(r)
-        ids = jnp.concatenate(ids)[:q]
-        rho = jnp.concatenate(rho)[:q]
-        return ids, rho
+        return run_chunked(q_codes, cfg,
+                           lambda chunk, c: self._chunk_fn(c)(chunk))
 
     def _chunk_fn(self, cfg: SearchConfig):
         """jit'd one-chunk search; cached per SearchConfig (warm cache)."""

@@ -4,9 +4,10 @@ A ``CodeStore`` is an immutable array of uint32 words in the layout of
 ``repro.core.packing`` / ``kernels.pack_codes``: row i holds item i's k
 b-bit codes in ceil(k / (32/b)) words. Immutability keeps every search
 jit-cache entry valid forever; ingestion produces *new* stores
-(``add``/``merge``), which under jax donates nothing and copies only the
-concatenation — the incremental path later PRs can turn into a
-segment-log.
+(``add``/``merge``) by copying the concatenation — O(corpus) per batch.
+The mutable ingestion path that amortizes this away is
+``repro.index.SegmentLogStore``, a log of content-immutable segments
+with the same row layout.
 
 The row axis is the shard axis: ``shard``/``row_sharding`` place the
 store across a mesh's data axis for the multi-device search path.

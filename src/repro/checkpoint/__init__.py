@@ -1,3 +1,4 @@
 from repro.checkpoint.checkpointer import (  # noqa: F401
-    save_checkpoint, restore_checkpoint, latest_step, available_steps,
+    save_checkpoint, restore_checkpoint, read_manifest, latest_step,
+    available_steps,
 )

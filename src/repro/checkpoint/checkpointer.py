@@ -26,8 +26,8 @@ from typing import Optional
 import numpy as np
 import jax
 
-__all__ = ["save_checkpoint", "restore_checkpoint", "latest_step",
-           "available_steps"]
+__all__ = ["save_checkpoint", "restore_checkpoint", "read_manifest",
+           "latest_step", "available_steps"]
 
 _STEP_RE = re.compile(r"^step_(\d+)$")
 
@@ -92,6 +92,16 @@ def available_steps(directory: str):
 def latest_step(directory: str) -> Optional[int]:
     steps = available_steps(directory)
     return steps[-1] if steps else None
+
+
+def read_manifest(directory: str, step: int) -> dict:
+    """The step's manifest (leaf names/shapes/dtypes). Lets a caller
+    reconstruct the ``like`` pytree for ``restore_checkpoint`` without
+    knowing the saved structure a priori — the self-describing-restore
+    path (``repro.index.snapshot`` rebuilds whole indexes from it)."""
+    path = os.path.join(directory, f"step_{step}", "manifest.json")
+    with open(path) as f:
+        return json.load(f)
 
 
 def restore_checkpoint(directory: str, step: int, like, shardings=None):

@@ -12,7 +12,8 @@ import jax.numpy as jnp
 __all__ = ["codes_per_word", "packed_width", "pack_codes", "unpack_codes",
            "hamming_packed", "match_count_packed_1bit", "field_lsb_mask",
            "fold_nonzero_fields", "mismatch_count_words",
-           "match_count_packed"]
+           "match_count_packed", "bitmask_width", "pack_bitmask",
+           "unpack_bitmask"]
 
 
 def codes_per_word(bits: int) -> int:
@@ -98,6 +99,27 @@ def mismatch_count_words(xor_words, bits: int):
     """Per-word count of differing b-bit fields from XORed packed words."""
     folded = fold_nonzero_fields(xor_words, bits)
     return _popcount32(folded & jnp.uint32(field_lsb_mask(bits)))
+
+
+def bitmask_width(n: int) -> int:
+    """Words in a packed 1-bit-per-row validity mask over n rows."""
+    return (n + 31) // 32
+
+
+def pack_bitmask(flags):
+    """Bool/int flags [..., n] -> uint32 words [..., ceil(n/32)].
+
+    Bit ``r % 32`` of word ``r // 32`` is flag r (LSB-first, same
+    convention as ``pack_codes`` with bits=1); any nonzero flag counts
+    as set. Rows are zero-padded, so bits past n are always 0 — kernels
+    rely on that to mask row padding.
+    """
+    return pack_codes((jnp.asarray(flags) != 0).astype(jnp.int32), 1)
+
+
+def unpack_bitmask(words, n: int):
+    """Inverse of ``pack_bitmask``: uint32 [..., W] -> bool [..., n]."""
+    return unpack_codes(words, 1, n).astype(bool)
 
 
 def match_count_packed(a, b, bits: int, k: int):

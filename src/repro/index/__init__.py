@@ -1,0 +1,27 @@
+"""Mutable streaming index lifecycle over packed codes.
+
+The layer between the immutable device corpus (``repro.ann.CodeStore``)
+and a real online near-neighbor service: a corpus that changes under
+traffic without ever invalidating a search executable.
+
+segment_log — ``SegmentLogStore``: append-only log of content-immutable
+              segments + a preallocated donated tail buffer (O(batch)
+              ingest), packed tombstone bitmasks, id↔row mapping for
+              deletes/upserts
+compaction  — size-tiered adjacent-run rewrite: merges small segments,
+              drops tombstoned rows, preserves result order bit-exactly
+snapshot    — durability via ``repro.checkpoint``: atomic snapshot +
+              self-describing restore (manifest-driven), ids never reused
+engine      — ``MutableAnnEngine``: batched exact/LSH search across
+              segments with the masked streaming top-k kernel and a
+              cross-segment merge; results are bit-identical to a fresh
+              immutable store of the surviving rows
+
+(serving front-end with mutation endpoints + result cache:
+``repro.serve.ann_service``)
+"""
+from repro.index.compaction import (CompactionPolicy, compact,  # noqa: F401
+                                    plan_compaction)
+from repro.index.engine import MutableAnnEngine  # noqa: F401
+from repro.index.segment_log import Segment, SegmentLogStore  # noqa: F401
+from repro.index.snapshot import restore_index, save_index  # noqa: F401

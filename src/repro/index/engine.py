@@ -1,0 +1,162 @@
+"""Mutable ANN engine: batched search over the segment log.
+
+The serving twin of ``ann.AnnEngine`` for a corpus that changes under
+traffic: same query path (fused project→code→pack via the shared
+``QueryCoder``, same ``SearchConfig`` knobs, same chunking), but the
+corpus side is a ``SegmentLogStore``. Each segment is searched with the
+*masked* streaming top-k kernel (tombstones skipped on device), local
+rows are swapped for external ids, and the per-segment lists are fused
+by ``ann.engine.merge_topk`` — segments are ordered by log position, so
+the merged tie-break is identical to one search over a fresh immutable
+store of the live rows. That equivalence is the subsystem's contract:
+mutate however you like, search never tells the difference.
+
+LSH mode mirrors ``AnnEngine``'s banded retrieval per segment: coarse
+matching-band scores against the segment's resident band hashes, the
+validity mask folded into the candidate filter, full packed collision
+re-rank, then the same cross-segment merge.
+"""
+from __future__ import annotations
+
+import numpy as np
+import jax.numpy as jnp
+
+from repro.ann.bands import BandSpec, probe_hashes
+from repro.ann.engine import (QueryCoder, SearchConfig, _coarse_band_scores,
+                              merge_topk, run_chunked)
+from repro.core import packing as _packing
+from repro.core.sketch import CodedRandomProjection
+from repro.index.compaction import CompactionPolicy, compact
+from repro.index.segment_log import SegmentLogStore
+from repro.index.snapshot import restore_index, save_index
+from repro.kernels import ops as _ops
+from repro.kernels import ref as _ref
+
+__all__ = ["MutableAnnEngine"]
+
+
+class MutableAnnEngine:
+    """In-place mutable index: add/delete/upsert/compact + batched search.
+
+    Returned ids are *external* item ids (stable across upserts, seals,
+    compaction and restarts), not store rows. ``generation`` increments
+    on every mutation — the serving layer keys result-cache validity on
+    it.
+    """
+
+    mutable = True
+
+    def __init__(self, sketcher: CodedRandomProjection, *,
+                 band_spec: BandSpec = BandSpec(), tail_rows: int = 1024,
+                 impl: str = "auto", store: SegmentLogStore = None):
+        self.sketcher = sketcher
+        if store is None:
+            store = SegmentLogStore(sketcher.cfg.k, sketcher.spec.bits,
+                                    band_spec=band_spec,
+                                    tail_rows=tail_rows, impl=impl)
+        if (store.k, store.bits) != (sketcher.cfg.k, sketcher.spec.bits):
+            raise ValueError(
+                f"store k/bits {(store.k, store.bits)} != sketcher "
+                f"{(sketcher.cfg.k, sketcher.spec.bits)}")
+        self.store = store
+        self.band_spec = store.band_spec
+        self._coder = QueryCoder(sketcher)
+
+    # -- mutation ------------------------------------------------------------
+    @property
+    def generation(self) -> int:
+        return self.store.generation
+
+    @property
+    def n(self) -> int:
+        return self.store.n_live
+
+    def add(self, x, ids=None) -> np.ndarray:
+        """Encode vectors [m, D] and append; returns external ids."""
+        return self.store.add_codes(self.sketcher.encode(x), ids=ids)
+
+    def add_codes(self, codes, ids=None) -> np.ndarray:
+        return self.store.add_codes(codes, ids=ids)
+
+    def delete(self, ids, strict: bool = True) -> int:
+        return self.store.delete(ids, strict=strict)
+
+    def upsert(self, ids, x) -> np.ndarray:
+        return self.store.upsert_codes(ids, self.sketcher.encode(x))
+
+    def upsert_codes(self, ids, codes) -> np.ndarray:
+        return self.store.upsert_codes(ids, codes)
+
+    def compact(self, policy: CompactionPolicy = CompactionPolicy()) -> dict:
+        return compact(self.store, policy)
+
+    # -- durability ----------------------------------------------------------
+    def save(self, directory: str, step: int, keep: int = 3) -> str:
+        return save_index(self.store, directory, step, keep=keep)
+
+    @classmethod
+    def restore(cls, sketcher: CodedRandomProjection, directory: str,
+                step: int = None) -> "MutableAnnEngine":
+        return cls(sketcher, store=restore_index(directory, step))
+
+    # -- search --------------------------------------------------------------
+    def encode_queries(self, x, impl: str = "auto"):
+        return self._coder.encode(x, impl=impl)
+
+    def search(self, queries, top_k: int = 10, *, mode: str = "exact",
+               min_bands: int = 1, n_probes: int = 0, chunk_q: int = 256,
+               impl: str = "auto"):
+        """queries [Q, D] -> (ids int32 [Q, top_k], rho_hat [Q, top_k]);
+        ids are external item ids, -1 marks empty slots."""
+        cfg = SearchConfig(top_k=top_k, mode=mode, min_bands=min_bands,
+                           n_probes=n_probes, chunk_q=chunk_q, impl=impl)
+        return self.search_codes(self.encode_queries(queries, impl=impl),
+                                 cfg)
+
+    def search_codes(self, q_codes, cfg: SearchConfig):
+        """Search pre-encoded queries [Q, k] across all segments."""
+        if cfg.mode not in ("exact", "lsh"):
+            raise ValueError(f"unknown mode {cfg.mode!r}")
+        if cfg.mode == "lsh" and self.band_spec is None:
+            raise ValueError("store built without band_spec: lsh "
+                             "retrieval unavailable")
+        q = q_codes.shape[0]
+        if q == 0 or self.store.n_live == 0:
+            return (jnp.full((q, cfg.top_k), -1, jnp.int32),
+                    jnp.full((q, cfg.top_k), -1.0, jnp.float32))
+        return run_chunked(q_codes, cfg, self._search_chunk)
+
+    def _search_chunk(self, q_codes, cfg: SearchConfig):
+        k = self.sketcher.cfg.k
+        bits = self.store.bits
+        q_words = _ops.pack_codes(q_codes, bits, impl=cfg.impl)
+        qh = (probe_hashes(q_codes, self.band_spec, cfg.n_probes)
+              if cfg.mode == "lsh" else None)
+        vals_l, ids_l = [], []
+        for seg in self.store.segments():
+            if seg.live == 0:
+                continue
+            if cfg.mode == "exact":
+                vals, rows = _ops.packed_topk_masked(
+                    q_words, seg.words, seg.valid_dev(), bits, k,
+                    cfg.top_k, impl=cfg.impl)
+            else:
+                counts = _ops.packed_collision_counts(
+                    q_words, seg.words, bits, k, impl=cfg.impl)
+                coarse = _coarse_band_scores(qh, seg.hashes)
+                live = _packing.unpack_bitmask(seg.valid_dev(), seg.cap)
+                counts = jnp.where(live[None, :]
+                                   & (coarse >= cfg.min_bands), counts, -1)
+                vals, rows = _ref.topk_stable_ref(counts, cfg.top_k)
+            ext = jnp.take(seg.ids_dev(),
+                           jnp.clip(rows, 0, seg.cap - 1), axis=0)
+            ids_l.append(jnp.where(rows < 0, -1, ext))
+            vals_l.append(vals)
+        vals, ids = merge_topk(vals_l, ids_l, cfg.top_k)
+        return ids, self._rho(vals)
+
+    def _rho(self, counts):
+        """Collision counts -> rho_hat (paper estimator); empty slots
+        (count < 0) surface as rho = -1."""
+        rho = self.sketcher._estimator(counts / self.sketcher.cfg.k)
+        return jnp.where(counts < 0, -1.0, rho)

@@ -4,12 +4,14 @@ proj_code        — fused projection GEMM + in-register coding (MXU + epilogue)
 pack_codes       — b-bit field packing into uint32 words (VPU)
 collision        — all-pairs code-match counting on int32 codes (VPU)
 packed_collision — collision counts + fused streaming top-k directly on
-                   packed uint32 words (XOR/fold/popcount; ANN hot loop)
+                   packed uint32 words (XOR/fold/popcount; ANN hot loop),
+                   plus the masked top-k variant that skips tombstoned
+                   rows via a packed validity bitmask (repro.index)
 
 Each has a pure-jnp oracle in ref.py and a dispatching wrapper in ops.py;
 tests sweep shapes/dtypes in interpret mode against the oracles.
 """
 from repro.kernels.ops import (  # noqa: F401
     coded_project, pack_codes, collision_counts, packed_collision_counts,
-    packed_topk,
+    packed_topk, packed_topk_masked,
 )

@@ -18,11 +18,12 @@ from repro.kernels import ref as _ref
 from repro.kernels.collision import collision_counts_pallas
 from repro.kernels.pack_codes import pack_codes_pallas
 from repro.kernels.packed_collision import (
-    packed_collision_counts_pallas, packed_topk_pallas)
+    packed_collision_counts_pallas, packed_topk_masked_pallas,
+    packed_topk_pallas)
 from repro.kernels.proj_code import coded_project_pallas
 
 __all__ = ["coded_project", "pack_codes", "collision_counts",
-           "packed_collision_counts", "packed_topk"]
+           "packed_collision_counts", "packed_topk", "packed_topk_masked"]
 
 
 def _resolve(impl: str) -> str:
@@ -77,3 +78,14 @@ def packed_topk(words_q, words_db, bits: int, k: int, top_k: int,
         return _ref.packed_topk_ref(words_q, words_db, bits, k, top_k)
     return packed_topk_pallas(words_q, words_db, bits, k, top_k,
                               interpret=_interpret(), **block_kwargs)
+
+
+def packed_topk_masked(words_q, words_db, valid_words, bits: int, k: int,
+                       top_k: int, impl: str = "auto", **block_kwargs):
+    """Streaming top-k over live rows only (packed validity bitmask)."""
+    if _resolve(impl) == "ref":
+        return _ref.packed_topk_masked_ref(words_q, words_db, valid_words,
+                                           bits, k, top_k)
+    return packed_topk_masked_pallas(words_q, words_db, valid_words, bits, k,
+                                     top_k, interpret=_interpret(),
+                                     **block_kwargs)

@@ -20,11 +20,20 @@ Two kernels over uint32 word arrays (layout of ``kernels.pack_codes``):
     match a full-matrix ``lax.top_k`` bit-for-bit. Only the [Q, top_k]
     result ever reaches HBM; the [Q, N] count matrix is never written.
 
+``packed_topk_masked_pallas``
+    The streaming top-k kernel with a packed row-validity bitmask (the
+    mutable-index tombstone path, ``repro.index``): one uint32 word
+    covers 32 corpus rows, the per-tile mask slice is expanded to a row
+    mask in-register, and dead rows are forced to -1 before the top-k
+    merge — deletes cost one bit of HBM per row and zero recompiles,
+    because the mask is data, not shape.
+
 Padding: the wrappers zero-pad every axis. Zero-padded words XOR to zero
 and contribute no mismatches, so counts stay exact; zero-padded corpus
 *rows* would alias a real all-zero code row, so the top-k kernel masks
 rows past the static ``n_valid`` count to -1 before merging — that mask
-is load-bearing, not belt-and-braces.
+is load-bearing, not belt-and-braces. (The masked kernel folds row
+padding into the bitmask itself: bits past N are zeroed by the wrapper.)
 """
 from __future__ import annotations
 
@@ -35,9 +44,10 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-from repro.core.packing import mismatch_count_words
+from repro.core.packing import bitmask_width, mismatch_count_words
 
-__all__ = ["packed_collision_counts_pallas", "packed_topk_pallas"]
+__all__ = ["packed_collision_counts_pallas", "packed_topk_pallas",
+           "packed_topk_masked_pallas"]
 
 
 def _mismatch_bits(xor, bits: int):
@@ -112,6 +122,26 @@ def packed_collision_counts_pallas(words_q, words_db, bits: int, k: int, *,
 
 # -- fused streaming top-k ----------------------------------------------------
 
+def _tile_counts_gids(q_ref, db_ref, j, *, bits: int, k: int, block_n: int):
+    """One (bq, bn) count tile + its global corpus ids."""
+    q = q_ref[...]           # [bq, W]
+    db = db_ref[...]         # [bn, W]
+    xor = jnp.bitwise_xor(q[:, None, :], db[None, :, :])
+    counts = k - jnp.sum(_mismatch_bits(xor, bits), axis=-1)   # [bq, bn]
+    local = jax.lax.broadcasted_iota(jnp.int32, (counts.shape[0], block_n), 1)
+    return counts, local + j * block_n
+
+
+def _merge_running_topk(vals_ref, ids_ref, counts, gids, top_k: int):
+    # merge running top-k with the fresh tile; running entries come first,
+    # and lax.top_k is stable, so ties keep the lowest corpus id
+    cat_v = jnp.concatenate([vals_ref[...], counts], axis=1)
+    cat_i = jnp.concatenate([ids_ref[...], gids], axis=1)
+    best_v, pos = jax.lax.top_k(cat_v, top_k)
+    vals_ref[...] = best_v
+    ids_ref[...] = jnp.take_along_axis(cat_i, pos, axis=1)
+
+
 def _topk_kernel(q_ref, db_ref, ov_ref, oi_ref, vals_ref, ids_ref, *,
                  bits: int, k: int, top_k: int, n_valid: int,
                  block_n: int):
@@ -122,22 +152,10 @@ def _topk_kernel(q_ref, db_ref, ov_ref, oi_ref, vals_ref, ids_ref, *,
         vals_ref[...] = jnp.full_like(vals_ref, -1)
         ids_ref[...] = jnp.full_like(ids_ref, -1)
 
-    q = q_ref[...]           # [bq, W]
-    db = db_ref[...]         # [bn, W]
-    xor = jnp.bitwise_xor(q[:, None, :], db[None, :, :])
-    counts = k - jnp.sum(_mismatch_bits(xor, bits), axis=-1)   # [bq, bn]
-    bq = counts.shape[0]
-    local = jax.lax.broadcasted_iota(jnp.int32, (bq, block_n), 1)
-    gids = local + j * block_n
+    counts, gids = _tile_counts_gids(q_ref, db_ref, j, bits=bits, k=k,
+                                     block_n=block_n)
     counts = jnp.where(gids < n_valid, counts, -1)
-
-    # merge running top-k with the fresh tile; running entries come first,
-    # and lax.top_k is stable, so ties keep the lowest corpus id
-    cat_v = jnp.concatenate([vals_ref[...], counts], axis=1)
-    cat_i = jnp.concatenate([ids_ref[...], gids], axis=1)
-    best_v, pos = jax.lax.top_k(cat_v, top_k)
-    vals_ref[...] = best_v
-    ids_ref[...] = jnp.take_along_axis(cat_i, pos, axis=1)
+    _merge_running_topk(vals_ref, ids_ref, counts, gids, top_k)
 
     @pl.when(j == pl.num_programs(1) - 1)
     def _finalize():
@@ -189,4 +207,93 @@ def packed_topk_pallas(words_q, words_db, bits: int, k: int, top_k: int, *,
         ],
         interpret=interpret,
     )(qp, dbp)
+    return vals[:qn], ids[:qn]
+
+
+# -- fused streaming top-k over live rows only --------------------------------
+
+def _topk_masked_kernel(q_ref, db_ref, valid_ref, ov_ref, oi_ref, vals_ref,
+                        ids_ref, *, bits: int, k: int, top_k: int,
+                        block_n: int):
+    j = pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _init():
+        vals_ref[...] = jnp.full_like(vals_ref, -1)
+        ids_ref[...] = jnp.full_like(ids_ref, -1)
+
+    counts, gids = _tile_counts_gids(q_ref, db_ref, j, bits=bits, k=k,
+                                     block_n=block_n)
+    # expand the packed validity tile in-register: [bn/32, 1] uint32 words
+    # -> bit matrix [bn/32, 32] -> row mask [1, bn]. Bit r%32 of word
+    # r//32 is row r, so the row-major reshape IS the row order. The
+    # wrapper zeroes bits past N, so block row-padding is dead too.
+    v = valid_ref[...]                                      # [bn/32, 1]
+    bitpos = jax.lax.broadcasted_iota(jnp.uint32, (block_n // 32, 32), 1)
+    live = ((v >> bitpos) & jnp.uint32(1)).reshape(1, block_n)
+    counts = jnp.where(live != 0, counts, -1)
+    _merge_running_topk(vals_ref, ids_ref, counts, gids, top_k)
+
+    @pl.when(j == pl.num_programs(1) - 1)
+    def _finalize():
+        ov_ref[...] = vals_ref[...]
+        oi_ref[...] = ids_ref[...]
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("bits", "k", "top_k", "block_q", "block_n",
+                     "interpret"))
+def packed_topk_masked_pallas(words_q, words_db, valid_words, bits: int,
+                              k: int, top_k: int, *, block_q: int = 128,
+                              block_n: int = 512, interpret: bool = False):
+    """Streaming top-k over rows whose validity bit is set.
+
+    ``valid_words``: uint32 [ceil(N/32)] packed bitmask in the
+    ``packing.pack_bitmask`` layout. Dead rows are masked to -1 before
+    every merge, so they can never enter the running list; slots beyond
+    the live count surface as (-1, -1). Bit-exact (values, tie-broken
+    ids) vs ``ref.packed_topk_masked_ref``. The mask is *data* — deletes
+    never change any traced shape, so the jit cache entry survives any
+    tombstone pattern.
+    """
+    qn, w = words_q.shape
+    n = words_db.shape[0]
+    assert w == words_db.shape[1], (words_q.shape, words_db.shape)
+    assert block_n % 32 == 0, block_n
+    nw = bitmask_width(n)
+    assert valid_words.shape == (nw,), (valid_words.shape, nw)
+    qp = _pad(words_q, block_q, 0)
+    dbp = _pad(words_db, block_n, 0)
+    qm = qp.shape[0]
+    nm = dbp.shape[0]
+    vw = valid_words.astype(jnp.uint32)
+    if n % 32:      # zero mask bits past N inside the last partial word
+        vw = vw.at[-1].set(vw[-1] & jnp.uint32((1 << (n % 32)) - 1))
+    vw = jnp.pad(vw, (0, nm // 32 - nw)).reshape(nm // 32, 1)
+    grid = (qm // block_q, nm // block_n)
+    kernel = functools.partial(_topk_masked_kernel, bits=bits, k=k,
+                               top_k=top_k, block_n=block_n)
+    vals, ids = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_q, w), lambda i, j: (i, 0)),
+            pl.BlockSpec((block_n, w), lambda i, j: (j, 0)),
+            pl.BlockSpec((block_n // 32, 1), lambda i, j: (j, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((block_q, top_k), lambda i, j: (i, 0)),
+            pl.BlockSpec((block_q, top_k), lambda i, j: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((qm, top_k), jnp.int32),
+            jax.ShapeDtypeStruct((qm, top_k), jnp.int32),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((block_q, top_k), jnp.int32),
+            pltpu.VMEM((block_q, top_k), jnp.int32),
+        ],
+        interpret=interpret,
+    )(qp, dbp, vw)
     return vals[:qn], ids[:qn]

@@ -13,8 +13,8 @@ from repro.core import schemes as _schemes
 from repro.core.schemes import CodeSpec
 
 __all__ = ["coded_project_ref", "pack_codes_ref", "collision_counts_ref",
-           "packed_collision_ref", "packed_topk_ref", "topk_blocked_ref",
-           "topk_stable_ref"]
+           "packed_collision_ref", "packed_topk_ref",
+           "packed_topk_masked_ref", "topk_blocked_ref", "topk_stable_ref"]
 
 
 def coded_project_ref(x, r, spec: CodeSpec, q=None):
@@ -119,3 +119,16 @@ def packed_topk_ref(words_q, words_db, bits: int, k: int, top_k: int):
     """
     counts = packed_collision_ref(words_q, words_db, bits, k)
     return topk_stable_ref(counts, top_k)
+
+
+def packed_topk_masked_ref(words_q, words_db, valid_words, bits: int, k: int,
+                           top_k: int):
+    """``packed_topk_ref`` over live rows only: ``valid_words`` is the
+    packed row-validity bitmask (``packing.pack_bitmask`` layout, bit
+    r%32 of word r//32 = row r live). Dead rows never surface — slots
+    beyond the live count come back as (-1, -1), exactly as if the store
+    held just the live rows (tie order among survivors is unchanged).
+    """
+    counts = packed_collision_ref(words_q, words_db, bits, k)
+    live = _packing.unpack_bitmask(valid_words, words_db.shape[0])
+    return topk_stable_ref(jnp.where(live[None, :], counts, -1), top_k)

@@ -4,22 +4,39 @@ from __future__ import annotations
 
 import jax
 
-__all__ = ["make_production_mesh", "make_dp_mesh", "dp_axes"]
+__all__ = ["make_mesh_compat", "make_production_mesh", "make_dp_mesh",
+           "dp_axes"]
+
+
+def make_mesh_compat(shape, axes):
+    """``jax.make_mesh`` across jax versions.
+
+    jax >= 0.5 takes ``axis_types`` (and defaults axes to Auto); 0.4.x has
+    neither ``jax.sharding.AxisType`` nor the kwarg, and its meshes are
+    implicitly Auto — so requesting Auto everywhere is the portable
+    behavior on both.
+    """
+    axis_type = getattr(jax.sharding, "AxisType", None)
+    if axis_type is not None:
+        try:
+            return jax.make_mesh(shape, axes,
+                                 axis_types=(axis_type.Auto,) * len(axes))
+        except TypeError:
+            pass
+    return jax.make_mesh(shape, axes)
 
 
 def make_production_mesh(*, multi_pod: bool = False):
     """16x16 (data, model) per pod; 2x16x16 (pod, data, model) multi-pod."""
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    types = (jax.sharding.AxisType.Auto,) * len(axes)
-    return jax.make_mesh(shape, axes, axis_types=types)
+    return make_mesh_compat(shape, axes)
 
 
 def make_dp_mesh(n_devices: int | None = None):
     """Pure data-parallel mesh (gradient-compression study / examples)."""
     n = n_devices or len(jax.devices())
-    return jax.make_mesh((n,), ("data",),
-                         axis_types=(jax.sharding.AxisType.Auto,))
+    return make_mesh_compat((n,), ("data",))
 
 
 def dp_axes(mesh) -> tuple:

@@ -20,12 +20,8 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
-try:  # jax>=0.6 exposes shard_map at top level
-    from jax import shard_map as _shard_map
-except ImportError:  # pragma: no cover
-    from jax.experimental.shard_map import shard_map as _shard_map
-
 from repro.models.nn import ParamSpec
+from repro.parallel.sharding import shard_map_unchecked
 
 __all__ = ["MoEConfig", "moe_param_specs", "moe"]
 
@@ -149,10 +145,9 @@ def moe(params, x, c: MoEConfig, rules=None):
         aux = jax.lax.pmean(aux, mesh.axis_names)
         return out.reshape(bb, sb_, dd), aux
 
-    out, aux = _shard_map(
+    out, aux = shard_map_unchecked(
         mapped, mesh=mesh,
         in_specs=(x_spec, param_specs),
         out_specs=(x_spec, P()),
-        check_vma=False,
     )(x, params)
     return out, aux

@@ -19,7 +19,22 @@ import jax
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 __all__ = ["ShardingRules", "DEFAULT_RULES", "zero_shard_spec",
-           "make_abstract_mesh"]
+           "make_abstract_mesh", "shard_map_unchecked"]
+
+try:  # jax>=0.6 exposes shard_map at top level
+    from jax import shard_map as _shard_map
+except ImportError:  # pragma: no cover
+    from jax.experimental.shard_map import shard_map as _shard_map
+
+
+def shard_map_unchecked(f, mesh, in_specs, out_specs):
+    """``shard_map`` with replication checking off, across jax versions:
+    jax >= 0.6 spells the kwarg ``check_vma``, older jax ``check_rep``."""
+    kw = dict(mesh=mesh, in_specs=in_specs, out_specs=out_specs)
+    try:
+        return _shard_map(f, check_vma=False, **kw)
+    except TypeError:
+        return _shard_map(f, check_rep=False, **kw)
 
 
 def make_abstract_mesh(axis_sizes, axis_names):

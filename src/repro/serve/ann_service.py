@@ -1,25 +1,35 @@
-"""Microbatching front-end for the ANN engine (serving-layer component).
+"""Microbatching front-end for the ANN engines (serving-layer component).
 
 Mirrors ``serve.serving``'s split between jit'd device steps and a thin
 host loop: individual queries arrive via ``submit`` (a ticket comes
 back), ``flush`` pads the pending queue up to the next bucket size and
-runs ONE batched ``AnnEngine`` search per bucket-shaped batch. Bucketed
-padding keeps the jit cache to a handful of entries regardless of
-traffic shape — ``warmup`` pre-compiles every bucket so the first real
-query never pays compile latency.
+runs ONE batched engine search per bucket-shaped batch. Bucketed padding
+keeps the jit cache to a handful of entries regardless of traffic shape —
+``warmup`` pre-compiles every bucket so the first real query never pays
+compile latency.
 
-This is the single-process skeleton of the production front-end: the
-queue becomes a real async queue and ``flush`` a deadline-driven loop,
-but the device contract (pad-to-bucket, warm cache, one search per
-batch) is exactly what a high-QPS deployment needs.
+Two engine flavors plug in unchanged: the immutable ``ann.AnnEngine``
+and the mutable ``index.MutableAnnEngine``. For mutable engines the
+service exposes ``add``/``delete``/``upsert``/``compact`` endpoints that
+interleave with queries.
+
+Result cache: an LRU keyed on the query's *packed code words* (identical
+vectors — and any vectors that code identically — share an entry) plus
+the search knobs. Entries are valid for exactly one engine
+``generation``: any index mutation bumps the generation and the next
+flush drops the whole cache, so a cached hit is always bit-identical to
+a fresh search.
 """
 from __future__ import annotations
 
+from collections import OrderedDict
 from dataclasses import dataclass, field
 
+import numpy as np
 import jax.numpy as jnp
 
-from repro.ann.engine import AnnEngine
+from repro.ann.engine import SearchConfig
+from repro.core import packing as _packing
 
 __all__ = ["AnnServiceConfig", "AnnService"]
 
@@ -31,20 +41,24 @@ class AnnServiceConfig:
     min_bands: int = 1
     n_probes: int = 0
     buckets: tuple = (1, 8, 64, 256)   # padded batch shapes (ascending)
+    cache_size: int = 256          # LRU result entries (0 disables)
     impl: str = "auto"
 
 
 @dataclass
 class AnnService:
-    """Queue + pad-to-bucket batching over a shared ``AnnEngine``."""
-    engine: AnnEngine
+    """Queue + pad-to-bucket batching + result LRU over a shared engine."""
+    engine: object
     cfg: AnnServiceConfig = field(default_factory=AnnServiceConfig)
 
     def __post_init__(self):
         self._queue = []          # [(ticket, vector [D])]
         self._results = {}        # ticket -> (ids [top_k], rho [top_k])
         self._next_ticket = 0
-        self.stats = {"queries": 0, "batches": 0, "padded_rows": 0}
+        self._cache = OrderedDict()   # key -> (ids np, rho np)
+        self._cache_gen = None
+        self.stats = {"queries": 0, "batches": 0, "padded_rows": 0,
+                      "cache_hits": 0, "cache_misses": 0}
 
     # -- request path --------------------------------------------------------
     def submit(self, x) -> int:
@@ -64,6 +78,28 @@ class AnnService:
     def pending(self) -> int:
         return len(self._queue)
 
+    # -- mutation endpoints (mutable engines only) ---------------------------
+    def _mutable(self):
+        if not getattr(self.engine, "mutable", False):
+            raise TypeError("engine is immutable (ann.AnnEngine); build "
+                            "the service over index.MutableAnnEngine for "
+                            "add/delete/upsert")
+        return self.engine
+
+    def add(self, x, ids=None):
+        """Ingest vectors [m, D]; returns their external ids. The result
+        cache invalidates on the next flush (generation bump)."""
+        return self._mutable().add(x, ids=ids)
+
+    def delete(self, ids, strict: bool = True) -> int:
+        return self._mutable().delete(ids, strict=strict)
+
+    def upsert(self, ids, x):
+        return self._mutable().upsert(ids, x)
+
+    def compact(self, *args, **kwargs) -> dict:
+        return self._mutable().compact(*args, **kwargs)
+
     # -- batch execution -----------------------------------------------------
     def _bucket_for(self, n: int) -> int:
         for b in self.cfg.buckets:
@@ -71,32 +107,84 @@ class AnnService:
                 return b
         return self.cfg.buckets[-1]
 
+    def _cache_key(self, word_row: np.ndarray):
+        cfg = self.cfg
+        return (word_row.tobytes(), cfg.top_k, cfg.mode, cfg.min_bands,
+                cfg.n_probes)
+
+    def _sync_cache_generation(self):
+        gen = getattr(self.engine, "generation", 0)
+        if gen != self._cache_gen:
+            self._cache.clear()
+            self._cache_gen = gen
+
     def flush(self):
         """Run every pending query; returns {ticket: (ids, rho)}.
 
         Queries are taken in arrival order, in slices of at most the
-        largest bucket; each slice is padded up to its bucket shape.
+        largest bucket; cache hits are served host-side and only misses
+        are padded up to a bucket shape and searched.
         """
         out = {}
         cfg = self.cfg
+        self._sync_cache_generation()
         max_b = cfg.buckets[-1]
         while self._queue:
             batch = self._queue[:max_b]
             self._queue = self._queue[max_b:]
             n = len(batch)
+            # pad to the bucket BEFORE any device work, so every jit'd
+            # stage (encode included) only ever sees bucket shapes
             b = self._bucket_for(n)
             x = jnp.stack([v for _, v in batch])
             if b > n:
                 x = jnp.pad(x, ((0, b - n), (0, 0)))
-            ids, rho = self.engine.search(
-                x, cfg.top_k, mode=cfg.mode, min_bands=cfg.min_bands,
-                n_probes=cfg.n_probes, chunk_q=b, impl=cfg.impl)
-            for i, (t, _) in enumerate(batch):
-                self._results[t] = (ids[i], rho[i])
-                out[t] = (ids[i], rho[i])
+            q_codes = self.engine.encode_queries(x, impl=cfg.impl)
+            res = [None] * n
+            miss = list(range(n))
+            keys = None
+            if cfg.cache_size:
+                words = np.asarray(_packing.pack_codes(
+                    q_codes, self.engine.store.bits))
+                keys = [self._cache_key(words[i]) for i in range(n)]
+                miss = []
+                for i, key in enumerate(keys):
+                    hit = self._cache.get(key)
+                    if hit is not None:
+                        self._cache.move_to_end(key)
+                        res[i] = hit
+                    else:
+                        miss.append(i)
+            if miss:
+                if len(miss) == n:
+                    sub, b2 = q_codes, b          # already bucket-shaped
+                else:
+                    # gather with a bucket-shaped index list (row 0
+                    # repeated as filler) so the gather itself only ever
+                    # compiles at bucket shapes
+                    b2 = self._bucket_for(len(miss))
+                    idx = miss + [0] * (b2 - len(miss))
+                    sub = q_codes[jnp.asarray(idx)]
+                ids, rho = self.engine.search_codes(
+                    sub, SearchConfig(top_k=cfg.top_k, mode=cfg.mode,
+                                      min_bands=cfg.min_bands,
+                                      n_probes=cfg.n_probes, chunk_q=b2,
+                                      impl=cfg.impl))
+                ids, rho = np.asarray(ids), np.asarray(rho)
+                for j, i in enumerate(miss):
+                    res[i] = (ids[j], rho[j])
+                    if cfg.cache_size:
+                        self._cache[keys[i]] = res[i]
+                        while len(self._cache) > cfg.cache_size:
+                            self._cache.popitem(last=False)
+                self.stats["batches"] += 1
+                self.stats["padded_rows"] += b2 - len(miss)
+            for (t, _), r in zip(batch, res):
+                self._results[t] = r
+                out[t] = r
             self.stats["queries"] += n
-            self.stats["batches"] += 1
-            self.stats["padded_rows"] += b - n
+            self.stats["cache_hits"] += n - len(miss)
+            self.stats["cache_misses"] += len(miss)
         return out
 
     def warmup(self, d: int):

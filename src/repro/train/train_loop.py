@@ -26,12 +26,8 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import NamedSharding, PartitionSpec as P
 
-try:
-    from jax import shard_map as _shard_map
-except ImportError:  # pragma: no cover
-    from jax.experimental.shard_map import shard_map as _shard_map
-
 from repro.checkpoint import latest_step, restore_checkpoint, save_checkpoint
+from repro.parallel.sharding import shard_map_unchecked
 from repro.models import lm as L
 from repro.models.nn import abstract_params, param_shardings, init_params
 from repro.optim import AdamWConfig, adamw_update, init_opt_state
@@ -117,11 +113,10 @@ def make_compressed_train_step(cfg, opt_cfg: AdamWConfig, mesh, compressor,
         return new_params, new_opt, new_ef, dict(om, loss=loss)
 
     def wrapped(params, opt_state, ef, tokens):
-        return _shard_map(
+        return shard_map_unchecked(
             step, mesh=mesh,
             in_specs=(P(), P(), P(), P(axis)),   # prefix specs: replicated
             out_specs=(P(), P(), P(), P()),
-            check_vma=False,
         )(params, opt_state, ef, tokens)
 
     return jax.jit(wrapped, donate_argnums=(0, 1, 2))

@@ -19,8 +19,8 @@ from jax.sharding import PartitionSpec as P
 assert len(jax.devices()) == 8
 
 # --- 1) MoE shard_map parity vs single-device routing ---
-mesh = jax.make_mesh((2, 4), ("data", "model"),
-                     axis_types=(jax.sharding.AxisType.Auto,) * 2)
+from repro.launch.mesh import make_mesh_compat
+mesh = make_mesh_compat((2, 4), ("data", "model"))
 from repro.parallel.sharding import ShardingRules
 from repro.models.moe import MoEConfig, moe, moe_param_specs
 from repro.models.nn import init_params
@@ -88,8 +88,7 @@ import tempfile
 d = tempfile.mkdtemp()
 save_checkpoint(d, 1, params)
 specs = L.model_param_specs(cfg)
-sh = param_shardings(specs, ShardingRules(jax.make_mesh((8,), ("data",),
-    axis_types=(jax.sharding.AxisType.Auto,))))
+sh = param_shardings(specs, ShardingRules(make_mesh_compat((8,), ("data",))))
 restored = restore_checkpoint(d, 1, params, shardings=None)
 for a, b in zip(jax.tree.leaves(restored), jax.tree.leaves(params)):
     np.testing.assert_allclose(np.asarray(a, dtype=np.float32),

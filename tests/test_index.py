@@ -1,0 +1,442 @@
+"""repro.index lifecycle contract: masked-kernel parity, segment-log
+mutation semantics, randomized add/delete/upsert/compact vs a fresh-build
+oracle, snapshot/restore equivalence, and the serving-layer cache."""
+import numpy as np
+import pytest
+import jax
+import jax.numpy as jnp
+
+from repro.ann import AnnEngine, BandSpec
+from repro.ann.engine import SearchConfig, merge_topk
+from repro.core import packing as PK
+from repro.core.sketch import CodedRandomProjection, SketchConfig
+from repro.index import (CompactionPolicy, MutableAnnEngine, SegmentLogStore,
+                         compact, plan_compaction, restore_index, save_index)
+from repro.index.segment_log import _np_pack_bitmask, _np_unpack_bitmask
+from repro.kernels import ref
+from repro.kernels.packed_collision import packed_topk_masked_pallas
+from repro.serve.ann_service import AnnService, AnnServiceConfig
+
+D, K, BITS = 16, 64, 2
+BAND = BandSpec(n_tables=16, band_width=4)
+
+
+def _crp():
+    return CodedRandomProjection(
+        SketchConfig(k=K, scheme="2bit", w=0.75), D)
+
+
+def _codes(rng, m, k=K, bits=BITS):
+    return jnp.asarray(rng.integers(0, 1 << bits, (m, k)), jnp.int32)
+
+
+# -- packed validity bitmask --------------------------------------------------
+
+@pytest.mark.parametrize("n", [1, 31, 32, 33, 100])
+def test_bitmask_roundtrip(n):
+    rng = np.random.default_rng(n)
+    flags = rng.random(n) < 0.5
+    words = PK.pack_bitmask(jnp.asarray(flags))
+    assert words.shape == (PK.bitmask_width(n),)
+    np.testing.assert_array_equal(
+        np.asarray(PK.unpack_bitmask(words, n)), flags)
+    # host-side twin used by the segment log agrees bit for bit
+    np.testing.assert_array_equal(_np_pack_bitmask(flags),
+                                  np.asarray(words))
+    np.testing.assert_array_equal(
+        _np_unpack_bitmask(np.asarray(words), n), flags)
+
+
+# -- masked streaming top-k kernel vs oracle ----------------------------------
+
+@pytest.mark.parametrize("bits,k", [(1, 33), (2, 128), (4, 30)])
+@pytest.mark.parametrize("top_k", [1, 7])
+def test_packed_topk_masked_matches_oracle(bits, k, top_k):
+    """Kernel == masked ref == dense mask-then-topk oracle, and dead rows
+    never surface."""
+    rng = np.random.default_rng(bits * 10 + top_k)
+    wq = PK.pack_codes(_codes(rng, 9, k, bits), bits)
+    wdb = PK.pack_codes(_codes(rng, 70, k, bits), bits)
+    live = rng.random(70) < 0.6
+    vw = PK.pack_bitmask(jnp.asarray(live))
+    rv, ri = ref.packed_topk_masked_ref(wq, wdb, vw, bits, k, top_k)
+    gv, gi = packed_topk_masked_pallas(wq, wdb, vw, bits, k, top_k,
+                                       block_q=8, block_n=32,
+                                       interpret=True)
+    np.testing.assert_array_equal(np.asarray(gv), np.asarray(rv))
+    np.testing.assert_array_equal(np.asarray(gi), np.asarray(ri))
+    counts = np.asarray(ref.packed_collision_ref(wq, wdb, bits, k)).copy()
+    counts[:, ~live] = -1
+    ov, oi = ref.topk_stable_ref(jnp.asarray(counts), top_k)
+    np.testing.assert_array_equal(np.asarray(rv), np.asarray(ov))
+    np.testing.assert_array_equal(np.asarray(ri), np.asarray(oi))
+    surfaced = set(np.asarray(ri)[np.asarray(rv) >= 0].ravel().tolist())
+    assert not surfaced & set(np.flatnonzero(~live).tolist())
+
+
+def test_packed_topk_masked_overflow_and_all_dead():
+    """top_k beyond the live count fills (-1, -1); an all-dead mask
+    returns nothing at all."""
+    rng = np.random.default_rng(0)
+    wq = PK.pack_codes(_codes(rng, 3, 20, 2), 2)
+    wdb = PK.pack_codes(_codes(rng, 10, 20, 2), 2)
+    live = np.zeros(10, bool)
+    live[[2, 5]] = True
+    for vw in [PK.pack_bitmask(jnp.asarray(live)),
+               PK.pack_bitmask(jnp.zeros(10, bool))]:
+        n_live = int(np.asarray(PK.unpack_bitmask(vw, 10)).sum())
+        for fn in [
+            lambda: ref.packed_topk_masked_ref(wq, wdb, vw, 2, 20, 6),
+            lambda: packed_topk_masked_pallas(wq, wdb, vw, 2, 20, 6,
+                                              block_q=8, block_n=32,
+                                              interpret=True),
+        ]:
+            v, i = fn()
+            assert (np.asarray(v[:, n_live:]) == -1).all()
+            assert (np.asarray(i[:, n_live:]) == -1).all()
+
+
+def test_merge_topk_tie_break_matches_single_store():
+    """Cross-segment merge == one top-k over the concatenated scores."""
+    rng = np.random.default_rng(3)
+    parts = [jnp.asarray(rng.integers(0, 6, (4, 50)), jnp.int32)
+             for _ in range(3)]
+    full = jnp.concatenate(parts, axis=1)
+    want_v, want_i = ref.topk_stable_ref(full, 5)
+    vals_l, ids_l, off = [], [], 0
+    for p in parts:
+        v, i = ref.topk_stable_ref(p, 5)
+        vals_l.append(v)
+        ids_l.append(jnp.where(v < 0, -1, i + off))
+        off += p.shape[1]
+    got_v, got_i = merge_topk(vals_l, ids_l, 5)
+    np.testing.assert_array_equal(np.asarray(got_v), np.asarray(want_v))
+    np.testing.assert_array_equal(np.asarray(got_i), np.asarray(want_i))
+
+
+# -- segment log: mutation semantics ------------------------------------------
+
+def test_segment_log_add_seal_delete_upsert():
+    rng = np.random.default_rng(7)
+    store = SegmentLogStore(K, BITS, band_spec=BAND, tail_rows=32)
+    ids = store.add_codes(_codes(rng, 70))
+    assert store.n_segments == 3 and store.tail.length == 6
+    assert store.n_live == 70 and list(store.live_ids()) == list(range(70))
+    # tombstones drop rows everywhere, including sealed segments
+    assert store.delete(ids[:5]) == 5
+    assert store.n_live == 65 and 0 not in store
+    with pytest.raises(KeyError):
+        store.delete([0])
+    assert store.delete([0], strict=False) == 0
+    # upsert keeps the external id, moves the row to the tail
+    old_codes = np.asarray(store.live_codes())
+    store.upsert_codes(ids[10:12], _codes(rng, 2))
+    assert store.n_live == 65 and int(ids[10]) in store
+    # iteration order: surviving originals first, upserted versions last
+    assert list(store.live_ids()[-2:]) == [int(ids[10]), int(ids[11])]
+    # explicit-id add collides with a live id
+    with pytest.raises(ValueError):
+        store.add_codes(_codes(rng, 1), ids=np.asarray([int(ids[11])]))
+    del old_codes
+
+
+def test_mutation_failures_are_atomic():
+    """A raising mutator must leave the store untouched: strict deletes
+    validate before tombstoning, upserts validate before deleting, and
+    duplicate ids within one batch are rejected up front."""
+    rng = np.random.default_rng(37)
+    store = SegmentLogStore(K, BITS, tail_rows=32)
+    ids = store.add_codes(_codes(rng, 10))
+    gen = store.generation
+    # strict delete with one unknown id: nothing dies, generation frozen
+    with pytest.raises(KeyError):
+        store.delete([int(ids[1]), 999])
+    assert int(ids[1]) in store and store.generation == gen
+    assert store.n_live == 10
+    # bad upsert (wrong code width): old rows must survive
+    with pytest.raises(ValueError):
+        store.upsert_codes([int(ids[2])], jnp.zeros((1, 5), jnp.int32))
+    assert int(ids[2]) in store and store.n_live == 10
+    # duplicate ids in one batch: rejected before any mutation
+    with pytest.raises(ValueError):
+        store.add_codes(_codes(rng, 2), ids=np.asarray([50, 50]))
+    with pytest.raises(ValueError):
+        store.upsert_codes(np.asarray([int(ids[3])] * 2), _codes(rng, 2))
+    # out-of-int32-range id in an upsert batch: validated before the
+    # tombstone, so the in-range id's old version survives
+    with pytest.raises(ValueError):
+        store.upsert_codes(np.asarray([int(ids[4]), 2 ** 40]),
+                           _codes(rng, 2))
+    assert int(ids[4]) in store
+    assert store.n_live == 10 and store.generation == gen
+    np.testing.assert_array_equal(store.live_ids(), ids)
+
+
+def test_segment_log_add_is_o_batch():
+    """The donated tail write never reallocates the buffer: the tail
+    array keeps its shape, and sealed segment buffers are reused as-is
+    (object identity), so ingest copies O(batch), not O(corpus)."""
+    rng = np.random.default_rng(8)
+    store = SegmentLogStore(K, BITS, tail_rows=32)
+    store.add_codes(_codes(rng, 32))          # exactly one sealed segment
+    sealed_words = store.sealed[0].words
+    store.add_codes(_codes(rng, 48))
+    assert store.sealed[0].words is sealed_words
+    assert store.tail.words.shape == (32, store.n_words)
+
+
+def test_live_words_match_fresh_pack():
+    rng = np.random.default_rng(9)
+    store = SegmentLogStore(K, BITS, tail_rows=32)
+    codes = _codes(rng, 50)
+    ids = store.add_codes(codes)
+    store.delete(ids[::4])
+    keep = np.ones(50, bool)
+    keep[::4] = False
+    np.testing.assert_array_equal(np.asarray(store.live_codes()),
+                                  np.asarray(codes)[keep])
+    np.testing.assert_array_equal(store.live_ids(), ids[keep])
+
+
+# -- lifecycle contract vs fresh-build oracle ---------------------------------
+
+def _oracle_search(eng, q_codes, cfg):
+    """Fresh immutable store built from the surviving rows (the
+    acceptance-criteria oracle), results mapped back to external ids."""
+    live_ids = eng.store.live_ids()
+    fresh = AnnEngine.from_codes(eng.sketcher, eng.store.live_codes(),
+                                 eng.band_spec or BAND)
+    rows, rho = fresh.search_codes(q_codes, cfg)
+    rows = np.asarray(rows)
+    safe = np.clip(rows, 0, max(len(live_ids) - 1, 0))
+    ids = np.where(rows < 0, -1,
+                   live_ids[safe] if len(live_ids) else -1)
+    return ids, np.asarray(rho)
+
+
+def _check_vs_oracle(eng, q_codes, modes=("exact", "lsh")):
+    for mode in modes:
+        cfg = SearchConfig(top_k=7, mode=mode, n_probes=1, chunk_q=8)
+        got_i, got_r = eng.search_codes(q_codes, cfg)
+        want_i, want_r = _oracle_search(eng, q_codes, cfg)
+        np.testing.assert_array_equal(np.asarray(got_i), want_i)
+        np.testing.assert_allclose(np.asarray(got_r), want_r, rtol=1e-6)
+
+
+def _random_lifecycle(seed, n_ops, tail_rows=32):
+    rng = np.random.default_rng(seed)
+    eng = MutableAnnEngine(_crp(), band_spec=BAND, tail_rows=tail_rows)
+    live = []
+    for _ in range(n_ops):
+        op = rng.choice(["add", "delete", "upsert", "compact"],
+                        p=[0.5, 0.25, 0.15, 0.1])
+        if op == "add" or not live:
+            ids = eng.add_codes(_codes(rng, int(rng.integers(1, 40))))
+            live.extend(int(i) for i in ids)
+        elif op == "delete":
+            kill = rng.choice(len(live),
+                              size=min(len(live),
+                                       int(rng.integers(1, 10))),
+                              replace=False)
+            eng.delete([live[i] for i in kill])
+            live = [x for i, x in enumerate(live)
+                    if i not in set(kill.tolist())]
+        elif op == "upsert":
+            pick = [live[i] for i in
+                    rng.choice(len(live), size=min(len(live), 3),
+                               replace=False)]
+            eng.upsert_codes(np.asarray(pick, np.int64),
+                             _codes(rng, len(pick)))
+        else:
+            eng.compact(CompactionPolicy(target_rows=4 * tail_rows))
+    return eng, rng
+
+
+@pytest.mark.parametrize("seed", [0, 1, 2])
+def test_lifecycle_matches_fresh_build(seed):
+    """Randomized add/delete/upsert/compact sequences: engine results ==
+    fresh immutable store of the surviving rows, both search modes."""
+    eng, rng = _random_lifecycle(seed, n_ops=25)
+    assert eng.store.n_live > 0
+    _check_vs_oracle(eng, _codes(rng, 9))
+
+
+@pytest.mark.slow
+def test_lifecycle_hypothesis_sequences():
+    """Property-based op sequences where hypothesis is available."""
+    hyp = pytest.importorskip("hypothesis")
+    from hypothesis import given, settings, strategies as st
+
+    @settings(max_examples=10, deadline=None)
+    @given(st.integers(min_value=0, max_value=10 ** 6),
+           st.integers(min_value=5, max_value=15))
+    def prop(seed, n_ops):
+        eng, rng = _random_lifecycle(seed, n_ops)
+        _check_vs_oracle(eng, _codes(rng, 4), modes=("exact",))
+
+    prop()
+
+
+def test_mutable_engine_matches_immutable_when_append_only():
+    """No deletes: the mutable engine is just a sharded immutable store;
+    ids coincide with row numbers and results with AnnEngine."""
+    rng = np.random.default_rng(11)
+    codes = _codes(rng, 90)
+    eng = MutableAnnEngine(_crp(), band_spec=BAND, tail_rows=32)
+    eng.add_codes(codes)
+    base = AnnEngine.from_codes(_crp(), codes, BAND)
+    q = _codes(rng, 6)
+    for mode in ("exact", "lsh"):
+        cfg = SearchConfig(top_k=5, mode=mode, n_probes=1, chunk_q=8)
+        gi, gr = eng.search_codes(q, cfg)
+        wi, wr = base.search_codes(q, cfg)
+        np.testing.assert_array_equal(np.asarray(gi), np.asarray(wi))
+        np.testing.assert_allclose(np.asarray(gr), np.asarray(wr),
+                                   rtol=1e-6)
+
+
+# -- compaction ---------------------------------------------------------------
+
+def test_compaction_drops_dead_rows_and_preserves_results():
+    rng = np.random.default_rng(13)
+    eng = MutableAnnEngine(_crp(), band_spec=BAND, tail_rows=32)
+    ids = eng.add_codes(_codes(rng, 128))       # 4 sealed segments
+    eng.delete(ids[::2])
+    q = _codes(rng, 5)
+    before = eng.search_codes(q, SearchConfig(top_k=9, chunk_q=8))
+    st = compact(eng.store, CompactionPolicy(target_rows=128))
+    assert st["segments_after"] < st["segments_before"]
+    assert st["rows_dropped"] > 0
+    assert eng.store.n_rows == eng.store.n_live  # sealed dead rows gone
+    after = eng.search_codes(q, SearchConfig(top_k=9, chunk_q=8))
+    np.testing.assert_array_equal(np.asarray(before[0]),
+                                  np.asarray(after[0]))
+    np.testing.assert_allclose(np.asarray(before[1]),
+                               np.asarray(after[1]))
+    _check_vs_oracle(eng, q)
+
+
+def test_compaction_plan_respects_target_and_tiering():
+    rng = np.random.default_rng(14)
+    store = SegmentLogStore(K, BITS, tail_rows=32)
+    store.add_codes(_codes(rng, 96))            # 3 sealed, fully live
+    # nothing to gain: single full segments below the dead threshold
+    assert plan_compaction(store, CompactionPolicy(
+        target_rows=32, max_dead_fraction=0.25)) == []
+    # room to merge: adjacent runs group under the target
+    runs = plan_compaction(store, CompactionPolicy(target_rows=64))
+    assert runs == [[0, 1]]
+    stats = compact(store, CompactionPolicy(target_rows=64))
+    assert stats["segments_after"] == 2
+    assert [s.length for s in store.sealed] == [64, 32]
+
+
+# -- snapshot / restore -------------------------------------------------------
+
+def test_snapshot_restore_roundtrip(tmp_path):
+    eng, rng = _random_lifecycle(17, n_ops=20)
+    q = _codes(rng, 6)
+    cfg = SearchConfig(top_k=7, chunk_q=8)
+    want = eng.search_codes(q, cfg)
+    eng.save(str(tmp_path), 3)
+    eng2 = MutableAnnEngine.restore(_crp(), str(tmp_path))
+    assert eng2.store.n_live == eng.store.n_live
+    assert eng2.store.next_id == eng.store.next_id
+    got = eng2.search_codes(q, cfg)
+    np.testing.assert_array_equal(np.asarray(want[0]), np.asarray(got[0]))
+    np.testing.assert_allclose(np.asarray(want[1]), np.asarray(got[1]))
+    _check_vs_oracle(eng2, q)
+    # ingestion resumes: fresh ids, tail picks up where it stopped
+    tail_len = eng2.store.tail.length
+    new_ids = eng2.add_codes(_codes(rng, 3))
+    assert new_ids.min() >= eng.store.next_id
+    assert eng2.store.tail.length == (tail_len + 3) % eng2.store.tail_rows
+
+
+def test_snapshot_restore_no_band_spec(tmp_path):
+    rng = np.random.default_rng(19)
+    store = SegmentLogStore(K, BITS, tail_rows=32)
+    ids = store.add_codes(_codes(rng, 40))
+    store.delete(ids[:7])
+    save_index(store, str(tmp_path), 1)
+    back = restore_index(str(tmp_path), 1)
+    assert back.band_spec is None and back.tail.hashes is None
+    np.testing.assert_array_equal(back.live_ids(), store.live_ids())
+    np.testing.assert_array_equal(np.asarray(back.live_words()),
+                                  np.asarray(store.live_words()))
+
+
+def test_restore_missing_snapshot_raises(tmp_path):
+    with pytest.raises(FileNotFoundError):
+        restore_index(str(tmp_path))
+
+
+# -- serving layer ------------------------------------------------------------
+
+def test_service_mutation_endpoints_and_cache():
+    rng = np.random.default_rng(23)
+    eng = MutableAnnEngine(_crp(), band_spec=BAND, tail_rows=64)
+    svc = AnnService(eng, AnnServiceConfig(top_k=3, buckets=(1, 4, 8),
+                                           cache_size=16))
+    svc.add(jnp.asarray(rng.normal(size=(40, D)), jnp.float32))
+    q = jnp.asarray(rng.normal(size=(D,)), jnp.float32)
+    t1 = svc.submit(q)
+    svc.flush()
+    t2 = svc.submit(q)
+    svc.flush()
+    assert svc.stats["cache_hits"] == 1 and svc.stats["cache_misses"] == 1
+    i1, _ = svc.result(t1)
+    i2, _ = svc.result(t2)
+    np.testing.assert_array_equal(i1, i2)
+    # a delete invalidates: the old top hit must disappear
+    top = int(i1[0])
+    assert svc.delete([top]) == 1
+    t3 = svc.submit(q)
+    svc.flush()
+    i3, _ = svc.result(t3)
+    assert svc.stats["cache_misses"] == 2
+    assert top not in set(i3.tolist())
+    # interleaved adds keep serving
+    svc.add(jnp.asarray(rng.normal(size=(8, D)), jnp.float32))
+    t4 = svc.submit(q)
+    out = svc.flush()
+    assert t4 in out
+    # partial-hit batch: cached query + fresh query in one flush
+    q2 = jnp.asarray(rng.normal(size=(D,)), jnp.float32)
+    t5, t6 = svc.submit(q), svc.submit(q2)
+    hits_before = svc.stats["cache_hits"]
+    out = svc.flush()
+    assert svc.stats["cache_hits"] == hits_before + 1
+    np.testing.assert_array_equal(svc.result(t5)[0], svc.result(t4)[0])
+    assert t6 in out
+
+
+def test_service_cache_eviction_and_capacity():
+    rng = np.random.default_rng(29)
+    eng = MutableAnnEngine(_crp(), band_spec=BAND, tail_rows=64)
+    svc = AnnService(eng, AnnServiceConfig(top_k=3, buckets=(1, 4, 8),
+                                           cache_size=4))
+    svc.add(jnp.asarray(rng.normal(size=(20, D)), jnp.float32))
+    for i in range(8):
+        svc.submit(jnp.asarray(rng.normal(size=(D,)), jnp.float32))
+    svc.flush()
+    assert len(svc._cache) <= 4
+
+
+def test_service_immutable_engine_rejects_mutation(small_ann_engine=None):
+    rng = np.random.default_rng(31)
+    codes = _codes(rng, 30)
+    base = AnnEngine.from_codes(_crp(), codes, BAND)
+    svc = AnnService(base, AnnServiceConfig(top_k=3, buckets=(1, 4)))
+    with pytest.raises(TypeError):
+        svc.add(jnp.zeros((1, D)))
+    with pytest.raises(TypeError):
+        svc.delete([0])
+    # read path still works, cache included
+    q = jnp.asarray(rng.normal(size=(D,)), jnp.float32)
+    t1 = svc.submit(q)
+    svc.flush()
+    t2 = svc.submit(q)
+    svc.flush()
+    assert svc.stats["cache_hits"] == 1
+    np.testing.assert_array_equal(svc.result(t1)[0], svc.result(t2)[0])
