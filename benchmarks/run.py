@@ -2,6 +2,9 @@
 
 Prints ``name,us_per_call,derived`` CSV per row (scaffold contract) and
 writes detailed tables to benchmarks/out/*.csv.
+
+``python benchmarks/run.py lint`` runs the docs/docstring lint
+(``scripts/check_docs.py``) instead of the benchmarks.
 """
 import argparse
 import importlib
@@ -28,14 +31,23 @@ MODULES = [
     "benchmarks.grad_compression_bench",
     "benchmarks.ann_bench",
     "benchmarks.ingest_bench",
+    "benchmarks.rank_bench",
 ]
 
 
 def main() -> None:
     ap = argparse.ArgumentParser()
+    ap.add_argument("cmd", nargs="?", default="bench",
+                    choices=("bench", "lint"),
+                    help="bench (default) or lint (docs/docstring checks)")
     ap.add_argument("--full", action="store_true", help="bigger sizes")
     ap.add_argument("--only", default="", help="substring filter")
     args = ap.parse_args()
+    if args.cmd == "lint":
+        root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+        sys.path.insert(0, os.path.join(root, "scripts"))
+        import check_docs
+        raise SystemExit(check_docs.main())
     print("name,us_per_call,derived")
     failed = 0
     for modname in MODULES:

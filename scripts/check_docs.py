@@ -1,0 +1,149 @@
+"""Docs lint: public-API docstrings + no dead paths in the docs.
+
+Two checks, both tripping a nonzero exit:
+
+1. every public symbol (module, class, function, method, property) in
+   ``repro.ann``, ``repro.index`` and ``repro.rank`` carries a
+   docstring — the subsystems' shape/dtype contracts live there;
+2. every repo path referenced from ``README.md`` and ``docs/*.md``
+   (markdown links and backticked tokens that look like paths) exists.
+
+Run as ``python benchmarks/run.py lint``, ``python
+scripts/check_docs.py``, or through ``tests/test_docs_lint.py``.
+"""
+from __future__ import annotations
+
+import importlib
+import inspect
+import os
+import pkgutil
+import re
+import sys
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+PACKAGES = ("repro.ann", "repro.index", "repro.rank")
+DOC_FILES = ["README.md"]
+DOC_DIRS = ["docs"]
+
+_PATH_EXTS = (".py", ".md", ".json", ".ini", ".csv", ".txt")
+_PATH_ROOTS = ("src", "docs", "benchmarks", "tests", "scripts", "examples")
+_TOKEN = re.compile(r"`([A-Za-z0-9_\-./]+)`")
+_LINK = re.compile(r"\[[^\]]*\]\(([^)#]+)\)")
+
+
+def _iter_public_symbols(mod):
+    """Yield (qualname, object) for the module's public API: __all__ if
+    declared, else module-level defs; plus public methods/properties
+    declared directly on public classes."""
+    names = getattr(mod, "__all__", None)
+    if names is None:
+        names = [n for n in vars(mod) if not n.startswith("_")
+                 and getattr(getattr(mod, n), "__module__", None)
+                 == mod.__name__]
+    for name in names:
+        obj = getattr(mod, name)
+        if not (inspect.isclass(obj) or inspect.isfunction(obj)):
+            continue
+        yield f"{mod.__name__}.{name}", obj
+        if inspect.isclass(obj):
+            for mname, member in vars(obj).items():
+                if mname.startswith("_"):
+                    continue
+                if isinstance(member, property):
+                    yield f"{mod.__name__}.{name}.{mname}", member.fget
+                elif inspect.isfunction(member):
+                    yield f"{mod.__name__}.{name}.{mname}", member
+                elif isinstance(member, (classmethod, staticmethod)):
+                    yield f"{mod.__name__}.{name}.{mname}", member.__func__
+
+
+def check_docstrings() -> list:
+    """Missing-docstring report: list of offending qualnames."""
+    missing = []
+    for pkg_name in PACKAGES:
+        pkg = importlib.import_module(pkg_name)
+        if not (pkg.__doc__ or "").strip():
+            missing.append(pkg_name)
+        mods = [pkg] + [
+            importlib.import_module(f"{pkg_name}.{m.name}")
+            for m in pkgutil.iter_modules(pkg.__path__)]
+        for mod in mods:
+            if not (mod.__doc__ or "").strip():
+                missing.append(mod.__name__)
+            for qualname, obj in _iter_public_symbols(mod):
+                if not (getattr(obj, "__doc__", None) or "").strip():
+                    missing.append(qualname)
+    return sorted(set(missing))
+
+
+def _looks_like_path(token: str) -> bool:
+    if token.startswith(("http://", "https://")):
+        return False
+    if token.endswith(_PATH_EXTS):
+        return True
+    head = token.split("/", 1)[0]
+    return "/" in token and head in _PATH_ROOTS
+
+
+def _repo_basenames() -> set:
+    """All file basenames under the repo (for bare-filename refs)."""
+    names = set()
+    for dirpath, dirnames, filenames in os.walk(ROOT):
+        dirnames[:] = [d for d in dirnames
+                       if d not in (".git", "__pycache__", ".pytest_cache")]
+        names.update(filenames)
+    return names
+
+
+def check_doc_paths() -> list:
+    """Dead-path report: list of '<doc>: <path>' strings.
+
+    A reference resolves if it exists relative to the repo root, the
+    doc's own directory (how markdown links render), ``src/`` or
+    ``src/repro/`` (how module-relative prose reads). Bare filenames
+    (no '/') resolve if any file in the repo has that basename.
+    """
+    docs = [f for f in DOC_FILES
+            if os.path.exists(os.path.join(ROOT, f))]
+    for d in DOC_DIRS:
+        dpath = os.path.join(ROOT, d)
+        if os.path.isdir(dpath):
+            docs += [os.path.join(d, f) for f in sorted(os.listdir(dpath))
+                     if f.endswith(".md")]
+    basenames = _repo_basenames()
+    dead = []
+    for doc in docs:
+        text = open(os.path.join(ROOT, doc)).read()
+        doc_dir = os.path.dirname(os.path.join(ROOT, doc))
+        bases = [ROOT, doc_dir, os.path.join(ROOT, "src"),
+                 os.path.join(ROOT, "src", "repro")]
+        refs = set(_TOKEN.findall(text)) | set(_LINK.findall(text))
+        for token in sorted(refs):
+            token = token.strip()
+            if not _looks_like_path(token):
+                continue
+            if "/" not in token and token in basenames:
+                continue
+            if any(os.path.exists(os.path.join(b, token.rstrip("/")))
+                   for b in bases):
+                continue
+            dead.append(f"{doc}: {token}")
+    return dead
+
+
+def main() -> int:
+    """Run both checks; print a report and return the exit code."""
+    sys.path.insert(0, os.path.join(ROOT, "src"))
+    missing = check_docstrings()
+    dead = check_doc_paths()
+    for name in missing:
+        print(f"MISSING DOCSTRING  {name}")
+    for ref in dead:
+        print(f"DEAD PATH          {ref}")
+    print(f"check_docs: {len(missing)} missing docstrings, "
+          f"{len(dead)} dead doc paths across {PACKAGES}")
+    return 1 if (missing or dead) else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

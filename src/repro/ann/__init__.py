@@ -5,7 +5,8 @@ store   — ``CodeStore``: immutable bit-packed corpus in HBM (add/merge,
 bands   — batched LSH band hashing with prefix-nested multi-probe
 engine  — ``AnnEngine``: fused project→code→pack queries, exact and
           LSH-banded candidate search, multi-device top-k merge;
-          ``QueryCoder``/``merge_topk`` shared with the mutable layer
+          ``QueryCoder``/``merge_topk`` shared with the mutable layer;
+          ``scored=True`` adds the two-stage LUT re-rank (``repro.rank``)
 (mutable lifecycle over this layer: ``repro.index``; serving
 front-end: ``repro.serve.ann_service``)
 """

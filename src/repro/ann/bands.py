@@ -33,6 +33,7 @@ class BandSpec:
     band_width: int = 8
 
     def validate(self, k: int):
+        """Check L*m fits within k code positions; returns self."""
         need = self.n_tables * self.band_width
         if need > k:
             raise ValueError(

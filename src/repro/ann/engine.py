@@ -17,10 +17,20 @@ ever existing as int32 in HBM. Two candidate modes:
               the candidate *set* is exact, never truncated to a fixed C,
               and grows monotonically with ``n_probes``.
 
+Both modes also run **two-stage scored** (``scored=True``): the coarse
+pass above selects top-``rerank_m`` candidates by collision count, then
+a fused LUT kernel re-ranks them with the non-linear per-code-pair
+scores of ``repro.rank`` (contingency-table log-likelihood ratios, the
+1602.06577 estimator family) and returns calibrated rho_hat from the
+scores. Collision counts only see the table's diagonal, so equal counts
+hide real similarity differences; the re-rank breaks exactly those ties
+and recovers recall the coarse pass leaves on the floor.
+
 Both modes process queries in fixed-size chunks (padded to one shape, so
 each mode compiles exactly twice: chunk shape + remainder-free path) and
 return (ids [Q, top_k], rho_hat [Q, top_k]) with rho_hat from the paper's
-collision estimator. ``search_sharded`` runs the exact mode under
+collision estimator (table inversion of P(rho), or the LUT calibration
+curve when scored). ``search_sharded`` runs the exact mode under
 ``shard_map`` with the corpus row-sharded across a mesh axis, merging
 per-shard top-k by all-gather + re-top-k.
 """
@@ -39,9 +49,10 @@ from repro.core import packing as _packing
 from repro.core.sketch import CodedRandomProjection
 from repro.kernels import ops as _ops
 from repro.kernels import ref as _ref
+from repro.rank.tables import RankTables, build_rank_tables
 
 __all__ = ["SearchConfig", "AnnEngine", "QueryCoder", "merge_topk",
-           "run_chunked"]
+           "run_chunked", "lut_rerank_stage", "rho_scored"]
 
 
 @dataclass(frozen=True)
@@ -53,6 +64,15 @@ class SearchConfig:
     n_probes: int = 0            # lsh: multi-probe expansions per band
     chunk_q: int = 256           # query rows per device step
     impl: str = "auto"           # kernel dispatch (see kernels.ops)
+    scored: bool = False         # two-stage: coarse top-m -> LUT re-rank
+    rerank_m: int = 0            # scored: coarse candidates (0 = auto)
+
+    def resolve_m(self, n: int) -> int:
+        """Coarse candidate count for one part with ``n`` rows: the
+        configured ``rerank_m`` (default 4*top_k, floor 64), never below
+        ``top_k`` and never above ``n`` (all static => one jit entry)."""
+        m = self.rerank_m or max(64, 4 * self.top_k)
+        return max(1, min(max(m, self.top_k), n))
 
 
 class QueryCoder:
@@ -84,17 +104,27 @@ class QueryCoder:
 def merge_topk(vals_list, ids_list, top_k: int):
     """Merge per-part (segment/shard) top-k lists into a global top-k.
 
-    Parts are concatenated in list order; ``lax.top_k`` is stable, so
-    ties resolve to the earliest part and, within a part, to the part's
-    own list order (the kernels emit ties lowest-row-first). With parts
-    ordered by row offset this reproduces the single-store tie-break
-    exactly. Entries with negative values surface ids of -1.
+    vals_list: per-part values, each int32 collision counts or float32
+    LUT scores [Q, k_part]; ids_list: matching int32 ids [Q, k_part]
+    (-1 = empty slot). Returns (vals [Q, top_k], ids int32 [Q, top_k]).
+
+    Tie-break order: parts are concatenated in list order and
+    ``lax.top_k`` is stable, so equal values resolve to the earliest
+    part and, within a part, to the part's own list order (the kernels
+    emit ties lowest-row-first). With parts ordered by row offset this
+    reproduces the single-store tie-break exactly. Empty slots keep ids
+    of -1: the sentinel value is -1 for integer counts and -inf for
+    float scores (real float scores may be negative).
     """
     cat_v = jnp.concatenate(vals_list, axis=1)
     cat_i = jnp.concatenate(ids_list, axis=1)
     best_v, pos = jax.lax.top_k(cat_v, top_k)
     best_i = jnp.take_along_axis(cat_i, pos, axis=1)
-    return best_v, jnp.where(best_v < 0, -1, best_i)
+    if jnp.issubdtype(cat_v.dtype, jnp.floating):
+        empty = jnp.isneginf(best_v)
+    else:
+        empty = best_v < 0
+    return best_v, jnp.where(empty, -1, best_i)
 
 
 def run_chunked(q_codes, cfg: SearchConfig, chunk_fn):
@@ -113,6 +143,39 @@ def run_chunked(q_codes, cfg: SearchConfig, chunk_fn):
         ids.append(i)
         rho.append(r)
     return jnp.concatenate(ids)[:q], jnp.concatenate(rho)[:q]
+
+
+def lut_rerank_stage(tables: RankTables, q_codes, cand_ids, words_src,
+                     top_k: int, impl: str = "auto", q_tables=None):
+    """Second stage of a two-stage scored search (shared by the
+    immutable, mutable and sharded paths).
+
+    q_codes int32 [c, k]; cand_ids int32 [c, M] rows into ``words_src``
+    uint32 [n, W] from a coarse pass (-1 = empty slot); returns
+    (rows int32 [c, top_k] into words_src, -1 empty; scores f32
+    [c, top_k], -inf empty). Gathers candidate rows, builds the
+    query-specialized LUTs (pass prebuilt ``q_tables`` [c, F*P] to
+    reuse them across calls, e.g. per-segment loops) and runs the fused
+    re-rank kernel; fully jittable (one XLA gather + one kernel call).
+    """
+    n = words_src.shape[0]
+    cand = jnp.take(words_src, jnp.clip(cand_ids, 0, n - 1), axis=0)
+    if q_tables is None:
+        q_tables = tables.query_tables(q_codes)
+    scores, pos = _ops.packed_lut_rerank(q_tables, cand, cand_ids >= 0,
+                                         tables.bits, top_k, impl=impl)
+    rows = jnp.take_along_axis(cand_ids,
+                               jnp.clip(pos, 0, cand_ids.shape[1] - 1),
+                               axis=1)
+    return jnp.where(pos < 0, -1, rows), scores
+
+
+def rho_scored(tables: RankTables, ids, scores):
+    """LUT scores [...] -> calibrated rho_hat float32 [...] via the
+    tables' inversion curve; empty slots (id < 0) surface as rho = -1
+    (the scored twin of the engines' count-based ``_rho``)."""
+    rho = tables.rho_from_scores(scores)
+    return jnp.where(ids < 0, -1.0, rho)
 
 
 def _packed_counts_rowwise(q_words, cand_words, bits: int, k: int):
@@ -146,7 +209,8 @@ class AnnEngine:
     """Immutable search engine: sketcher + packed corpus + band hashes."""
 
     def __init__(self, sketcher: CodedRandomProjection, store: CodeStore,
-                 band_spec: BandSpec = BandSpec(), db_band_hashes=None):
+                 band_spec: BandSpec = BandSpec(), db_band_hashes=None,
+                 rank_tables: RankTables = None):
         self.sketcher = sketcher
         self.store = store
         self.band_spec = band_spec.validate(sketcher.cfg.k)
@@ -154,6 +218,7 @@ class AnnEngine:
             db_band_hashes = band_hashes(store.unpack(), band_spec)
         self.db_band_hashes = db_band_hashes      # uint32 [n, L]
         self._coder = QueryCoder(sketcher)
+        self._rank_tables = rank_tables
         self._search_fns = {}
 
     # -- construction / ingestion -------------------------------------------
@@ -167,6 +232,7 @@ class AnnEngine:
     @classmethod
     def from_codes(cls, sketcher: CodedRandomProjection, codes,
                    band_spec: BandSpec = BandSpec(), impl: str = "auto"):
+        """Index pre-encoded int32 codes [n, k]: pack + band-hash."""
         store = CodeStore.from_codes(codes, sketcher.cfg.k,
                                      sketcher.spec.bits, impl=impl)
         return cls(sketcher, store, band_spec,
@@ -179,11 +245,22 @@ class AnnEngine:
         hashes = jnp.concatenate(
             [self.db_band_hashes, band_hashes(codes, self.band_spec)])
         return AnnEngine(self.sketcher, store, self.band_spec,
-                         db_band_hashes=hashes)
+                         db_band_hashes=hashes,
+                         rank_tables=self._rank_tables)
 
     @property
     def n(self) -> int:
+        """Corpus rows resident in the store."""
         return self.store.n
+
+    @property
+    def rank_tables(self) -> RankTables:
+        """LUT scoring tables for scored search, built lazily from the
+        sketcher's (scheme, k) on first use (pass ``rank_tables`` to
+        ``__init__`` to override, e.g. for bf16-quantized tables)."""
+        if self._rank_tables is None:
+            self._rank_tables = build_rank_tables(self.sketcher)
+        return self._rank_tables
 
     # -- query encoding ------------------------------------------------------
     def _r_matrix(self):
@@ -196,13 +273,19 @@ class AnnEngine:
     # -- search --------------------------------------------------------------
     def search(self, queries, top_k: int = 10, *, mode: str = "exact",
                min_bands: int = 1, n_probes: int = 0,
-               chunk_q: int = 256, impl: str = "auto"):
-        """queries [Q, D] -> (ids int32 [Q, top_k], rho_hat f32 [Q, top_k]).
+               chunk_q: int = 256, impl: str = "auto",
+               scored: bool = False, rerank_m: int = 0):
+        """queries float [Q, D] -> (ids int32 [Q, top_k], rho_hat
+        float32 [Q, top_k]).
 
         ids of -1 mark empty slots (top_k exceeding corpus/candidates).
+        ``scored=True`` runs the two-stage path — coarse collision top-m
+        (m = ``rerank_m``, 0 = auto) then fused LUT re-rank — and
+        returns rho_hat calibrated from the non-linear scores.
         """
         cfg = SearchConfig(top_k=top_k, mode=mode, min_bands=min_bands,
-                           n_probes=n_probes, chunk_q=chunk_q, impl=impl)
+                           n_probes=n_probes, chunk_q=chunk_q, impl=impl,
+                           scored=scored, rerank_m=rerank_m)
         return self.search_codes(self.encode_queries(queries, impl=impl), cfg)
 
     def search_codes(self, q_codes, cfg: SearchConfig):
@@ -220,6 +303,8 @@ class AnnEngine:
         """jit'd one-chunk search; cached per SearchConfig (warm cache)."""
         fn = self._search_fns.get(cfg)
         if fn is None:
+            if cfg.scored:
+                self.rank_tables        # host-side build, outside the trace
             body = (self._exact_chunk if cfg.mode == "exact"
                     else self._lsh_chunk)
             fn = jax.jit(functools.partial(body, cfg=cfg))
@@ -233,12 +318,23 @@ class AnnEngine:
         rho = self.sketcher._estimator(counts / k)
         return jnp.where(counts < 0, -1.0, rho)
 
+    def _rerank(self, q_codes, cand_ids, cfg: SearchConfig):
+        """Coarse candidate rows -> (ids, rho) by fused LUT re-rank."""
+        ids, scores = lut_rerank_stage(self.rank_tables, q_codes, cand_ids,
+                                       self.store.words, cfg.top_k,
+                                       impl=cfg.impl)
+        return ids, rho_scored(self.rank_tables, ids, scores)
+
     def _exact_chunk(self, q_codes, *, cfg: SearchConfig):
         q_words = _ops.pack_codes(q_codes, self.store.bits, impl=cfg.impl)
+        top = cfg.resolve_m(self.store.n) if cfg.scored else cfg.top_k
         vals, ids = _ops.packed_topk(
             q_words, self.store.words, self.store.bits, self.sketcher.cfg.k,
-            cfg.top_k, impl=cfg.impl)
-        return jnp.where(vals < 0, -1, ids), self._rho(vals)
+            top, impl=cfg.impl)
+        ids = jnp.where(vals < 0, -1, ids)
+        if cfg.scored:
+            return self._rerank(q_codes, ids, cfg)
+        return ids, self._rho(vals)
 
     def _lsh_chunk(self, q_codes, *, cfg: SearchConfig):
         q_words = _ops.pack_codes(q_codes, self.store.bits, impl=cfg.impl)
@@ -249,7 +345,10 @@ class AnnEngine:
             impl=cfg.impl)
         # non-candidates (too few matching bands) are unretrievable
         counts = jnp.where(coarse >= cfg.min_bands, counts, -1)
-        vals, ids = _ref.topk_stable_ref(counts, cfg.top_k)
+        top = cfg.resolve_m(self.store.n) if cfg.scored else cfg.top_k
+        vals, ids = _ref.topk_stable_ref(counts, top)
+        if cfg.scored:
+            return self._rerank(q_codes, ids, cfg)
         return ids, self._rho(vals)
 
     # -- candidate introspection (compat wrapper + tests) --------------------
@@ -272,13 +371,18 @@ class AnnEngine:
 
     # -- multi-device path ---------------------------------------------------
     def search_sharded(self, queries, mesh: Mesh, axis: str = "data",
-                       top_k: int = 10, impl: str = "auto"):
+                       top_k: int = 10, impl: str = "auto",
+                       scored: bool = False, rerank_m: int = 0):
         """Exact search with the corpus row-sharded over ``mesh[axis]``.
 
-        Each shard computes a local streaming top-k over its rows (local
-        ids offset to global by the shard index), then the per-shard
-        lists are all-gathered and re-top-k'd — the classic distributed
-        top-k merge; every step stays on device.
+        queries float [Q, D] -> (ids int32 [Q, top_k], rho_hat float32
+        [Q, top_k]). Each shard computes a local streaming top-k over
+        its rows (local ids offset to global by the shard index), then
+        the per-shard lists are all-gathered and re-top-k'd — the
+        classic distributed top-k merge; every step stays on device.
+        With ``scored=True`` each shard additionally LUT re-ranks its
+        local coarse top-m before the merge, so the cross-shard merge
+        compares calibrated scores, not counts.
         """
         from jax.experimental.shard_map import shard_map
 
@@ -287,10 +391,12 @@ class AnnEngine:
         q_words = _ops.pack_codes(q_codes, store.bits, impl=impl)
         k = self.sketcher.cfg.k
         bits = store.bits
+        n_local = store.n // mesh.shape[axis]
+        tables = self.rank_tables if scored else None
+        cfg = SearchConfig(top_k=top_k, scored=scored, rerank_m=rerank_m)
 
-        def local(qw, dbw):
-            vals, ids = _ops.packed_topk(qw, dbw, bits, k, top_k, impl=impl)
-            ids = ids + jax.lax.axis_index(axis) * dbw.shape[0]
+        def merge_gathered(vals, ids, offset):
+            ids = jnp.where(ids < 0, -1, ids + offset)
             vg = jax.lax.all_gather(vals, axis)       # [n_sh, Q, top_k]
             ig = jax.lax.all_gather(ids, axis)
             vg = jnp.moveaxis(vg, 0, 1).reshape(vals.shape[0], -1)
@@ -298,6 +404,29 @@ class AnnEngine:
             best, pos = jax.lax.top_k(vg, top_k)
             return best, jnp.take_along_axis(ig, pos, axis=1)
 
+        def local(qw, dbw):
+            vals, ids = _ops.packed_topk(qw, dbw, bits, k, top_k, impl=impl)
+            return merge_gathered(vals, ids,
+                                  jax.lax.axis_index(axis) * dbw.shape[0])
+
+        def local_scored(qw, qc, dbw):
+            m = cfg.resolve_m(n_local)
+            cvals, cids = _ops.packed_topk(qw, dbw, bits, k, m, impl=impl)
+            cids = jnp.where(cvals < 0, -1, cids)
+            rows, scores = lut_rerank_stage(tables, qc, cids, dbw, top_k,
+                                            impl=impl)
+            return merge_gathered(scores, rows,
+                                  jax.lax.axis_index(axis) * dbw.shape[0])
+
+        if scored:
+            fn = shard_map(local_scored, mesh=mesh,
+                           in_specs=(P(None, None), P(None, None),
+                                     P(axis, None)),
+                           out_specs=(P(None, None), P(None, None)),
+                           check_rep=False)
+            scores, ids = jax.jit(fn)(q_words, q_codes, store.words)
+            ids = jnp.where(jnp.isneginf(scores), -1, ids)
+            return ids, rho_scored(tables, ids, scores)
         fn = shard_map(local, mesh=mesh,
                        in_specs=(P(None, None), P(axis, None)),
                        out_specs=(P(None, None), P(None, None)),

@@ -50,6 +50,7 @@ class CodeStore:
 
     @classmethod
     def from_words(cls, words, k: int, bits: int):
+        """Wrap already-packed uint32 words [n, ceil(k/(32/bits))]."""
         return cls(words=jnp.asarray(words, jnp.uint32), k=k, bits=bits)
 
     def add(self, codes, impl: str = "auto") -> "CodeStore":
@@ -58,6 +59,7 @@ class CodeStore:
                                                impl=impl))
 
     def merge(self, other: "CodeStore") -> "CodeStore":
+        """New store: self's rows then other's (same k/bits required)."""
         if (self.k, self.bits) != (other.k, other.bits):
             raise ValueError(f"incompatible stores: k/bits "
                              f"{(self.k, self.bits)} vs {(other.k, other.bits)}")
@@ -67,14 +69,17 @@ class CodeStore:
     # -- geometry ------------------------------------------------------------
     @property
     def n(self) -> int:
+        """Corpus rows."""
         return self.words.shape[0]
 
     @property
     def n_words(self) -> int:
+        """uint32 words per row: ceil(k / (32/bits))."""
         return self.words.shape[1]
 
     @property
     def nbytes(self) -> int:
+        """Device bytes of the packed corpus (4 per word)."""
         return self.n * self.n_words * 4
 
     def unpack(self):
@@ -87,6 +92,7 @@ class CodeStore:
 
     # -- device placement ----------------------------------------------------
     def row_sharding(self, mesh: Mesh, axis: str = "data") -> NamedSharding:
+        """The store's canonical sharding: rows split over mesh[axis]."""
         return NamedSharding(mesh, P(axis, None))
 
     def shard(self, mesh: Mesh, axis: str = "data") -> "CodeStore":

@@ -14,7 +14,8 @@ from repro.core.variance import (  # noqa: F401
     variance_factor, dP_drho,
 )
 from repro.core.estimators import (  # noqa: F401
-    CollisionEstimator, rho_from_sign_collision, mle_rho_2bit,
+    CollisionEstimator, MleRhoEstimator, cell_probs, mle_rho_2bit,
+    region_bounds, rho_from_sign_collision,
 )
 from repro.core.optimal import optimal_w  # noqa: F401
 from repro.core.packing import pack_codes, unpack_codes  # noqa: F401

@@ -12,6 +12,7 @@ as a beyond-paper extension) that uses the full contingency table of the
 """
 from __future__ import annotations
 
+import functools
 import math
 from dataclasses import dataclass, field
 
@@ -20,9 +21,11 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.probabilities import collision_prob, q_region
+from repro.core.schemes import CodeSpec
 from repro.core.variance import variance_factor
 
-__all__ = ["CollisionEstimator", "rho_from_sign_collision", "mle_rho_2bit"]
+__all__ = ["CollisionEstimator", "rho_from_sign_collision", "region_bounds",
+           "cell_probs", "MleRhoEstimator", "mle_rho_2bit"]
 
 
 def rho_from_sign_collision(p_hat):
@@ -70,30 +73,126 @@ class CollisionEstimator:
         return jnp.sqrt(variance_factor(jnp.asarray(rho), self.w, self.scheme) / k)
 
 
-def _cell_probs_2bit(rho, w: float):
-    """4x4 contingency-cell probabilities of (h_{w,2}(x), h_{w,2}(y)).
+def region_bounds(spec: CodeSpec):
+    """Code-region boundaries [(lo_0, hi_0), ...] of a coding scheme.
 
-    Cells are intersections of the regions R0=(-inf,-w), R1=[-w,0),
-    R2=[0,w), R3=[w,inf). By symmetry of the bivariate normal we compute
-    the upper triangle with Lemma 1-style quadrature over generalized
-    rectangles Pr(x in [a,b], y in [c,d]).
+    Region c is the half-open interval of projected values that encode to
+    code c (``schemes.encode``), truncated at |z| = ZMAX (tail mass
+    < 1e-18). Supported: 'sign', '2bit', 'uniform'. The 'offset' scheme
+    draws a random offset per projection, so its regions differ across
+    the k projections — raise rather than pretend one table covers them.
     """
-    from repro.core.probabilities import ZMAX, Phi, phi
+    from repro.core.probabilities import ZMAX
+
+    if spec.scheme == "sign":
+        return [(-ZMAX, 0.0), (0.0, ZMAX)]
+    if spec.scheme == "2bit":
+        w = spec.w
+        return [(-ZMAX, -w), (-w, 0.0), (0.0, w), (w, ZMAX)]
+    if spec.scheme == "uniform":
+        n_side = spec.n_bins_side
+        out = []
+        for c in range(2 * n_side):
+            v = c - n_side
+            lo = -ZMAX if c == 0 else v * spec.w
+            hi = ZMAX if c == 2 * n_side - 1 else (v + 1) * spec.w
+            out.append((lo, min(hi, ZMAX)))
+        return out
+    raise ValueError(
+        f"no shared code regions for scheme {spec.scheme!r} (the offset "
+        f"scheme's regions are per-projection); use sign/2bit/uniform")
+
+
+def cell_probs(rho, spec: CodeSpec, order: int = 64):
+    """Contingency-cell probabilities Pr(code(x)=a, code(y)=b | rho).
+
+    rho: array [...]; returns [..., n, n] with n = spec.n_codes. Cells
+    are intersections of the scheme's code regions (``region_bounds``);
+    each is a Lemma 1-style quadrature over the generalized rectangle
+    Pr(x in [a,b], y in [c,d]) under the bivariate normal with
+    correlation rho. Rows/cols follow code order, so ``cell[..., a, b]``
+    matches ``codes_a == a, codes_b == b``.
+    """
+    from repro.core.probabilities import Phi, phi
     from repro.core._quad import interval_nodes
 
-    bounds = [(-ZMAX, -w), (-w, 0.0), (0.0, w), (w, ZMAX)]
+    bounds = region_bounds(spec)
     rho = jnp.clip(jnp.asarray(rho), 0.0, 1.0 - 1e-7)
     r = rho[..., None]
     sd = jnp.sqrt(1.0 - r * r)
     rows = []
     for (a, b) in bounds:
         row = []
-        z, wz = interval_nodes(a, b, 64)
+        z, wz = interval_nodes(a, b, order)
         for (c, d) in bounds:
             inner = Phi((d - r * z) / sd) - Phi((c - r * z) / sd)
             row.append(jnp.sum(phi(z) * inner * wz, axis=-1))
         rows.append(jnp.stack(row, axis=-1))
-    return jnp.stack(rows, axis=-2)  # [..., 4, 4]
+    return jnp.stack(rows, axis=-2)  # [..., n, n]
+
+
+@dataclass
+class MleRhoEstimator:
+    """Non-linear maximum-likelihood estimator over the full contingency
+    table of a coding scheme, inverted numerically on a rho grid.
+
+    The collision estimator (§3) uses only the diagonal of the code
+    contingency table; the follow-up 1602.06577 shows the full table
+    carries most of what the 2-bit codes know about rho. This estimator
+    tabulates log cell probabilities on a dense rho grid once (host
+    side) and maximizes sum_cells count * log p_cell(rho) by grid argmax
+    — fully jittable, batched over leading axes, and monotone in the
+    data by the monotone-likelihood-ratio structure of the cell family.
+
+    Counts may be fractional (expected counts work as well as observed
+    ones); ``estimate`` builds them from raw code arrays.
+    """
+    spec: CodeSpec
+    grid_size: int = 512
+    rho_max: float = 0.99995
+    _rho_grid: jax.Array = field(init=False, repr=False)
+    _logp_t: jax.Array = field(init=False, repr=False)
+
+    def __post_init__(self):
+        n = self.spec.n_codes
+        rho = np.linspace(0.0, self.rho_max, self.grid_size)
+        probs = np.asarray(cell_probs(jnp.asarray(rho), self.spec))
+        logp = np.log(np.maximum(probs, 1e-30)).reshape(
+            self.grid_size, n * n)
+        # device-resident once; from_counts never re-uploads the table
+        self._rho_grid = jnp.asarray(rho, jnp.float32)
+        self._logp_t = jnp.asarray(logp.T, jnp.float32)  # [n*n, G]
+
+    @property
+    def n_codes(self) -> int:
+        return self.spec.n_codes
+
+    def from_counts(self, counts):
+        """Cell counts [..., n*n] (row-major (a, b), float or int) ->
+        rho_hat float [...] by grid argmax of the log-likelihood."""
+        counts = jnp.asarray(counts, jnp.float32)
+        ll = counts @ self._logp_t  # [..., G]
+        return self._rho_grid[jnp.argmax(ll, axis=-1)]
+
+    def cell_counts(self, codes_a, codes_b):
+        """int codes [..., k] pairs -> int32 cell counts [..., n*n]."""
+        n = self.n_codes
+        k = codes_a.shape[-1]
+        cell = codes_a * n + codes_b  # [..., k] in [0, n*n)
+        return jax.vmap(lambda c: jnp.bincount(c, length=n * n),
+                        in_axes=0)(cell.reshape(-1, k)).reshape(
+            codes_a.shape[:-1] + (n * n,))
+
+    def estimate(self, codes_a, codes_b):
+        """MLE rho_hat [...] from two int code arrays [..., k]."""
+        return self.from_counts(self.cell_counts(codes_a, codes_b))
+
+
+@functools.lru_cache(maxsize=8)
+def _mle_2bit_estimator(w: float, grid_size: int) -> MleRhoEstimator:
+    """Cached 2-bit estimator per (w, grid_size): the grid quadrature
+    builds once, repeated ``mle_rho_2bit`` calls reuse it."""
+    return MleRhoEstimator(CodeSpec("2bit", w), grid_size=grid_size)
 
 
 def mle_rho_2bit(codes_a, codes_b, w: float, grid_size: int = 512):
@@ -101,14 +200,7 @@ def mle_rho_2bit(codes_a, codes_b, w: float, grid_size: int = 512):
     likelihood of the 2-bit codes over a rho grid.
 
     codes_a/b: int32 [..., k] in {0,1,2,3}. Returns rho_hat [...].
+    (Thin wrapper over a cached ``MleRhoEstimator`` with a 2-bit spec.)
     """
-    k = codes_a.shape[-1]
-    # empirical 4x4 counts
-    cell = codes_a * 4 + codes_b  # [..., k] in [0,16)
-    counts = jax.vmap(lambda c: jnp.bincount(c, length=16), in_axes=0)(
-        cell.reshape(-1, k)).reshape(codes_a.shape[:-1] + (16,))
-    rho_grid = jnp.linspace(0.0, 0.99995, grid_size)
-    probs = _cell_probs_2bit(rho_grid, w).reshape(grid_size, 16)  # [G, 16]
-    logp = jnp.log(jnp.maximum(probs, 1e-30))
-    ll = counts @ logp.T  # [..., G]
-    return rho_grid[jnp.argmax(ll, axis=-1)]
+    return _mle_2bit_estimator(float(w), grid_size).estimate(codes_a,
+                                                             codes_b)

@@ -15,6 +15,12 @@ LSH mode mirrors ``AnnEngine``'s banded retrieval per segment: coarse
 matching-band scores against the segment's resident band hashes, the
 validity mask folded into the candidate filter, full packed collision
 re-rank, then the same cross-segment merge.
+
+Two-stage scored search (``scored=True``) also runs per segment: the
+masked coarse pass selects each segment's top-m live candidates by
+collision count, the fused LUT kernel (``repro.rank``) re-ranks them,
+and the cross-segment merge compares calibrated float scores — the same
+merge, float sentinel instead of -1.
 """
 from __future__ import annotations
 
@@ -23,7 +29,9 @@ import jax.numpy as jnp
 
 from repro.ann.bands import BandSpec, probe_hashes
 from repro.ann.engine import (QueryCoder, SearchConfig, _coarse_band_scores,
-                              merge_topk, run_chunked)
+                              lut_rerank_stage, merge_topk, rho_scored,
+                              run_chunked)
+from repro.rank.tables import RankTables, build_rank_tables
 from repro.core import packing as _packing
 from repro.core.sketch import CodedRandomProjection
 from repro.index.compaction import CompactionPolicy, compact
@@ -48,8 +56,10 @@ class MutableAnnEngine:
 
     def __init__(self, sketcher: CodedRandomProjection, *,
                  band_spec: BandSpec = BandSpec(), tail_rows: int = 1024,
-                 impl: str = "auto", store: SegmentLogStore = None):
+                 impl: str = "auto", store: SegmentLogStore = None,
+                 rank_tables: RankTables = None):
         self.sketcher = sketcher
+        self._rank_tables = rank_tables
         if store is None:
             store = SegmentLogStore(sketcher.cfg.k, sketcher.spec.bits,
                                     band_spec=band_spec,
@@ -65,51 +75,82 @@ class MutableAnnEngine:
     # -- mutation ------------------------------------------------------------
     @property
     def generation(self) -> int:
+        """Monotone mutation counter (result-cache invalidation key)."""
         return self.store.generation
 
     @property
     def n(self) -> int:
+        """Live (non-tombstoned) rows."""
         return self.store.n_live
 
     def add(self, x, ids=None) -> np.ndarray:
-        """Encode vectors [m, D] and append; returns external ids."""
+        """Encode vectors x float [m, D] and append (O(batch) donated
+        tail write, never O(corpus)); returns external ids int64 [m]."""
         return self.store.add_codes(self.sketcher.encode(x), ids=ids)
 
     def add_codes(self, codes, ids=None) -> np.ndarray:
+        """Append pre-encoded int codes [m, k]; returns external ids
+        int64 [m] (see ``SegmentLogStore.add_codes`` for id rules)."""
         return self.store.add_codes(codes, ids=ids)
 
     def delete(self, ids, strict: bool = True) -> int:
+        """Tombstone external ids (1-bit mask write, zero recompiles);
+        returns rows killed. Unknown ids raise iff ``strict``."""
         return self.store.delete(ids, strict=strict)
 
     def upsert(self, ids, x) -> np.ndarray:
+        """Replace-or-insert vectors x float [m, D] under stable
+        external ids int [m]; returns the ids."""
         return self.store.upsert_codes(ids, self.sketcher.encode(x))
 
     def upsert_codes(self, ids, codes) -> np.ndarray:
+        """Replace-or-insert pre-encoded int codes [m, k] under stable
+        external ids int [m]; returns the ids."""
         return self.store.upsert_codes(ids, codes)
 
     def compact(self, policy: CompactionPolicy = CompactionPolicy()) -> dict:
+        """Size-tiered compaction (drops tombstones, preserves result
+        order bit-exactly); returns the compaction report dict."""
         return compact(self.store, policy)
 
     # -- durability ----------------------------------------------------------
     def save(self, directory: str, step: int, keep: int = 3) -> str:
+        """Atomic snapshot of the store under ``directory`` at ``step``
+        (keeping ``keep`` newest); returns the snapshot path."""
         return save_index(self.store, directory, step, keep=keep)
 
     @classmethod
     def restore(cls, sketcher: CodedRandomProjection, directory: str,
                 step: int = None) -> "MutableAnnEngine":
+        """Engine over a restored store (latest snapshot, or ``step``)."""
         return cls(sketcher, store=restore_index(directory, step))
 
     # -- search --------------------------------------------------------------
+    @property
+    def rank_tables(self) -> RankTables:
+        """LUT scoring tables for scored search, built lazily from the
+        sketcher's (scheme, k) on first use (pass ``rank_tables`` to
+        ``__init__`` to override, e.g. for bf16-quantized tables)."""
+        if self._rank_tables is None:
+            self._rank_tables = build_rank_tables(self.sketcher)
+        return self._rank_tables
+
     def encode_queries(self, x, impl: str = "auto"):
+        """x float [Q, D] -> int32 codes [Q, k] (fused proj+code)."""
         return self._coder.encode(x, impl=impl)
 
     def search(self, queries, top_k: int = 10, *, mode: str = "exact",
                min_bands: int = 1, n_probes: int = 0, chunk_q: int = 256,
-               impl: str = "auto"):
-        """queries [Q, D] -> (ids int32 [Q, top_k], rho_hat [Q, top_k]);
-        ids are external item ids, -1 marks empty slots."""
+               impl: str = "auto", scored: bool = False,
+               rerank_m: int = 0):
+        """queries float [Q, D] -> (ids int32 [Q, top_k], rho_hat
+        float32 [Q, top_k]); ids are external item ids, -1 marks empty
+        slots. ``scored=True`` re-ranks each segment's coarse top-m
+        (m = ``rerank_m``, 0 = auto) with the fused LUT kernel and
+        returns rho_hat calibrated from the non-linear scores."""
         cfg = SearchConfig(top_k=top_k, mode=mode, min_bands=min_bands,
-                           n_probes=n_probes, chunk_q=chunk_q, impl=impl)
+                           n_probes=n_probes, chunk_q=chunk_q, impl=impl,
+                           scored=scored, rerank_m=rerank_m)
         return self.search_codes(self.encode_queries(queries, impl=impl),
                                  cfg)
 
@@ -127,19 +168,27 @@ class MutableAnnEngine:
         return run_chunked(q_codes, cfg, self._search_chunk)
 
     def _search_chunk(self, q_codes, cfg: SearchConfig):
+        """One padded query chunk across all segments: per-segment
+        (masked) top-k or scored two-stage, then the cross-segment
+        merge. Returns (ids int32 [c, top_k], rho float32 [c, top_k])."""
         k = self.sketcher.cfg.k
         bits = self.store.bits
         q_words = _ops.pack_codes(q_codes, bits, impl=cfg.impl)
         qh = (probe_hashes(q_codes, self.band_spec, cfg.n_probes)
               if cfg.mode == "lsh" else None)
+        # the per-query LUTs are segment-independent: build once per
+        # chunk, not once per segment (this loop runs eagerly)
+        q_tables = (self.rank_tables.query_tables(q_codes)
+                    if cfg.scored else None)
         vals_l, ids_l = [], []
         for seg in self.store.segments():
             if seg.live == 0:
                 continue
+            top = cfg.resolve_m(seg.cap) if cfg.scored else cfg.top_k
             if cfg.mode == "exact":
                 vals, rows = _ops.packed_topk_masked(
                     q_words, seg.words, seg.valid_dev(), bits, k,
-                    cfg.top_k, impl=cfg.impl)
+                    top, impl=cfg.impl)
             else:
                 counts = _ops.packed_collision_counts(
                     q_words, seg.words, bits, k, impl=cfg.impl)
@@ -147,12 +196,18 @@ class MutableAnnEngine:
                 live = _packing.unpack_bitmask(seg.valid_dev(), seg.cap)
                 counts = jnp.where(live[None, :]
                                    & (coarse >= cfg.min_bands), counts, -1)
-                vals, rows = _ref.topk_stable_ref(counts, cfg.top_k)
+                vals, rows = _ref.topk_stable_ref(counts, top)
+            if cfg.scored:
+                rows, vals = lut_rerank_stage(
+                    self.rank_tables, q_codes, rows, seg.words,
+                    cfg.top_k, impl=cfg.impl, q_tables=q_tables)
             ext = jnp.take(seg.ids_dev(),
                            jnp.clip(rows, 0, seg.cap - 1), axis=0)
             ids_l.append(jnp.where(rows < 0, -1, ext))
             vals_l.append(vals)
         vals, ids = merge_topk(vals_l, ids_l, cfg.top_k)
+        if cfg.scored:
+            return ids, rho_scored(self.rank_tables, ids, vals)
         return ids, self._rho(vals)
 
     def _rho(self, counts):

@@ -92,14 +92,19 @@ class Segment:
 
     @property
     def cap(self) -> int:
+        """Row capacity of the segment's device buffer."""
         return self.words.shape[0]
 
     def valid_dev(self):
+        """Device copy of the packed validity bitmask, uint32
+        [ceil(cap/32)] (cached until the next mutation)."""
         if self._valid_dev is None:
             self._valid_dev = jnp.asarray(self.valid)
         return self._valid_dev
 
     def ids_dev(self):
+        """Device copy of the external ids, int32 [cap] (-1 =
+        unwritten slot; cached until the next mutation)."""
         if self._ids_dev is None:
             self._ids_dev = jnp.asarray(self.ids.astype(np.int32))
         return self._ids_dev
@@ -109,6 +114,8 @@ class Segment:
         return np.flatnonzero(_np_unpack_bitmask(self.valid, self.length))
 
     def kill_row(self, row: int):
+        """Tombstone one row: clear its validity bit (host + cached
+        device mask dropped) and decrement the live count."""
         self.valid[row // 32] &= np.uint32(~np.uint32(1 << (row % 32)))
         self.live -= 1
         self._valid_dev = None
@@ -157,6 +164,7 @@ class SegmentLogStore:
     # -- geometry ------------------------------------------------------------
     @property
     def n_live(self) -> int:
+        """Live (non-tombstoned) rows across all segments."""
         return len(self._by_id)
 
     @property
@@ -166,6 +174,7 @@ class SegmentLogStore:
 
     @property
     def n_segments(self) -> int:
+        """Resident segments (sealed + the tail)."""
         return len(self.sealed) + 1
 
     @property
@@ -323,6 +332,8 @@ class SegmentLogStore:
         return _packing.unpack_codes(self.live_words(), self.bits, self.k)
 
     def stats(self) -> dict:
+        """Operational counters: rows (live/dead), segments, tail fill,
+        resident bytes, generation."""
         return {"n_live": self.n_live, "n_rows": self.n_rows,
                 "n_dead": self.n_rows - self.n_live,
                 "n_segments": self.n_segments,

@@ -7,11 +7,17 @@ packed_collision — collision counts + fused streaming top-k directly on
                    packed uint32 words (XOR/fold/popcount; ANN hot loop),
                    plus the masked top-k variant that skips tombstoned
                    rows via a packed validity bitmask (repro.index)
+packed_lut       — fused LUT scoring on packed words (repro.rank): per-
+                   query float tables selected by each b-bit field via a
+                   branchless select tree, streaming scored top-k over
+                   the corpus / a candidate gather, plus the tombstone-
+                   masked variant
 
 Each has a pure-jnp oracle in ref.py and a dispatching wrapper in ops.py;
 tests sweep shapes/dtypes in interpret mode against the oracles.
 """
 from repro.kernels.ops import (  # noqa: F401
     coded_project, pack_codes, collision_counts, packed_collision_counts,
-    packed_topk, packed_topk_masked,
+    packed_lut_rerank, packed_lut_topk, packed_lut_topk_masked, packed_topk,
+    packed_topk_masked,
 )

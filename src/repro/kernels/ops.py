@@ -20,10 +20,14 @@ from repro.kernels.pack_codes import pack_codes_pallas
 from repro.kernels.packed_collision import (
     packed_collision_counts_pallas, packed_topk_masked_pallas,
     packed_topk_pallas)
+from repro.kernels.packed_lut import (
+    packed_lut_rerank_pallas, packed_lut_topk_masked_pallas,
+    packed_lut_topk_pallas)
 from repro.kernels.proj_code import coded_project_pallas
 
 __all__ = ["coded_project", "pack_codes", "collision_counts",
-           "packed_collision_counts", "packed_topk", "packed_topk_masked"]
+           "packed_collision_counts", "packed_topk", "packed_topk_masked",
+           "packed_lut_topk", "packed_lut_topk_masked", "packed_lut_rerank"]
 
 
 def _resolve(impl: str) -> str:
@@ -89,3 +93,37 @@ def packed_topk_masked(words_q, words_db, valid_words, bits: int, k: int,
     return packed_topk_masked_pallas(words_q, words_db, valid_words, bits, k,
                                      top_k, interpret=_interpret(),
                                      **block_kwargs)
+
+
+def packed_lut_topk(q_tables, words_db, bits: int, top_k: int,
+                    impl: str = "auto", **block_kwargs):
+    """LUT-scored streaming top-k: [Q, F*P] float tables x [N, W] packed
+    words -> (scores f32, ids int32) [Q, top_k]."""
+    if _resolve(impl) == "ref":
+        return _ref.packed_lut_topk_ref(q_tables, words_db, bits, top_k)
+    return packed_lut_topk_pallas(q_tables, words_db, bits, top_k,
+                                  interpret=_interpret(), **block_kwargs)
+
+
+def packed_lut_topk_masked(q_tables, words_db, valid_words, bits: int,
+                           top_k: int, impl: str = "auto", **block_kwargs):
+    """LUT-scored streaming top-k over live rows only (packed bitmask)."""
+    if _resolve(impl) == "ref":
+        return _ref.packed_lut_topk_masked_ref(q_tables, words_db,
+                                               valid_words, bits, top_k)
+    return packed_lut_topk_masked_pallas(q_tables, words_db, valid_words,
+                                         bits, top_k,
+                                         interpret=_interpret(),
+                                         **block_kwargs)
+
+
+def packed_lut_rerank(q_tables, cand_words, cand_valid, bits: int,
+                      top_k: int, impl: str = "auto", **block_kwargs):
+    """Re-rank gathered candidates [Q, M, W] by per-query LUT scores ->
+    (scores f32, candidate positions int32) [Q, top_k]."""
+    if _resolve(impl) == "ref":
+        return _ref.packed_lut_rerank_ref(q_tables, cand_words, cand_valid,
+                                          bits, top_k)
+    return packed_lut_rerank_pallas(q_tables, cand_words, cand_valid, bits,
+                                    top_k, interpret=_interpret(),
+                                    **block_kwargs)

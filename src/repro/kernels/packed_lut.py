@@ -1,0 +1,343 @@
+"""Fused LUT scoring on bit-packed codes (the re-rank hot loop).
+
+Where ``packed_collision`` ranks by the *diagonal* of the code
+contingency table (collision counts), these kernels rank by an arbitrary
+per-cell score table (``repro.rank.RankTables``): each b-bit corpus
+field selects one of 2^b per-query float entries and the selections
+accumulate in float32 — a product-quantization-style asymmetric
+distance computation fused with streaming top-k.
+
+Three kernels, all sharing the field loop and the running-top-k merge of
+``packed_collision``:
+
+``packed_lut_topk_pallas``
+    Full-corpus scored search: streams corpus words per query tile,
+    accumulates LUT scores in-register (the [Q, N] score matrix never
+    reaches HBM), keeps a running (scores, ids) top-k in VMEM scratch.
+
+``packed_lut_topk_masked_pallas``
+    Same with a packed row-validity bitmask (tombstoned rows score -inf
+    on device; the mask is data, not shape — zero recompiles).
+
+``packed_lut_rerank_pallas``
+    The two-stage second pass: per-query *gathered* candidate rows
+    [Q, M, W] (from a coarse packed-collision top-m) plus a validity
+    matrix, streaming top-k over the candidate axis. Returned ids are
+    candidate positions; callers map them through the coarse id list.
+
+Table lookups are branchless: the 2^b entries of a field's table column
+are combined through a depth-b select tree keyed on the field's bits
+(``_lut_select``), so the gather is b vectorized selects — no dynamic
+indexing in the kernel. Tables may be stored bf16 (``RankTables
+.quantize``); they are upcast to float32 at tile load, so accumulation
+is float32 either way and matches the jnp oracle bit-for-bit.
+
+Padding: query rows pad with zero tables, corpus rows are masked to -inf
+past ``n_valid`` (or via the bitmask), candidate slots pad with validity
+0 — so padded entries can never beat the running list's -inf/-1 init
+(stable ties keep the earlier -1 entries, exactly like the count
+kernels).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.core.packing import bitmask_width
+from repro.kernels.packed_collision import _merge_running_topk, _pad
+
+__all__ = ["packed_lut_topk_pallas", "packed_lut_topk_masked_pallas",
+           "packed_lut_rerank_pallas"]
+
+_NEG_INF = float("-inf")
+
+
+def _lut_select(c, entries):
+    """Branchless 2^b-way table lookup: pick entries[c] per lane.
+
+    c: uint32 field values (any broadcastable shape); entries: list of
+    2^b arrays (the field's table column, broadcastable against c).
+    A depth-b binary select tree on c's bits; returns entries[c]
+    element-wise with no gather.
+    """
+    level = list(entries)
+    bit = 0
+    while len(level) > 1:
+        b = ((c >> jnp.uint32(bit)) & jnp.uint32(1)) != 0
+        level = [jnp.where(b, level[2 * i + 1], level[2 * i])
+                 for i in range(len(level) // 2)]
+        bit += 1
+    return level[0]
+
+
+def _accum_lut_scores(tab, words, bits: int, shape):
+    """Accumulate LUT scores over every (word, field) position.
+
+    tab: float32 [bq, F*P]; words: uint32 [bn, W] (corpus tile; fields
+    broadcast as [1, bn]) or [bq, bm, W] (candidate tile; fields are
+    [bq, bm]). Returns float32 ``shape`` scores, accumulated in (word,
+    field) order — the oracle's order, so sums are bit-identical.
+    """
+    p = 1 << bits
+    cpw = 32 // bits
+    n_words = words.shape[-1]
+    score = jnp.zeros(shape, jnp.float32)
+    for w in range(n_words):
+        if words.ndim == 2:
+            word = words[:, w][None, :]          # [1, bn]
+        else:
+            word = words[:, :, w]                # [bq, bm]
+        for f in range(cpw):
+            c = (word >> jnp.uint32(f * bits)) & jnp.uint32(p - 1)
+            col = (w * cpw + f) * p
+            entries = [tab[:, col + i][:, None] for i in range(p)]
+            score = score + _lut_select(c, entries)
+    return score
+
+
+def _init_running(vals_ref, ids_ref):
+    vals_ref[...] = jnp.full_like(vals_ref, _NEG_INF)
+    ids_ref[...] = jnp.full_like(ids_ref, -1)
+
+
+# -- full-corpus scored top-k -------------------------------------------------
+
+def _lut_topk_kernel(tab_ref, db_ref, ov_ref, oi_ref, vals_ref, ids_ref, *,
+                     bits: int, top_k: int, n_valid: int, block_n: int):
+    j = pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _init():
+        _init_running(vals_ref, ids_ref)
+
+    tab = tab_ref[...].astype(jnp.float32)
+    db = db_ref[...]
+    score = _accum_lut_scores(tab, db, bits,
+                              (tab.shape[0], block_n))
+    local = jax.lax.broadcasted_iota(jnp.int32, score.shape, 1)
+    gids = local + j * block_n
+    score = jnp.where(gids < n_valid, score, _NEG_INF)
+    _merge_running_topk(vals_ref, ids_ref, score, gids, top_k)
+
+    @pl.when(j == pl.num_programs(1) - 1)
+    def _finalize():
+        ov_ref[...] = vals_ref[...]
+        oi_ref[...] = ids_ref[...]
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("bits", "top_k", "block_q", "block_n", "interpret"))
+def packed_lut_topk_pallas(q_tables, words_db, bits: int, top_k: int, *,
+                           block_q: int = 128, block_n: int = 512,
+                           interpret: bool = False):
+    """q_tables float [Q, F*P] (``rank.RankTables.query_tables``),
+    words_db uint32 [N, W] -> (scores f32 [Q, top_k], ids int32
+    [Q, top_k]), streaming the corpus axis (HBM traffic O(Q*F*P + N*W +
+    Q*top_k), never O(Q*N)).
+
+    Bit-exact (scores and lowest-id tie-breaks) vs
+    ``ref.packed_lut_topk_ref``; empty slots surface as (-inf, -1).
+    """
+    qn, fp = q_tables.shape
+    n, w = words_db.shape
+    assert fp == w * (32 // bits) * (1 << bits), (q_tables.shape,
+                                                  words_db.shape, bits)
+    tp = _pad(q_tables, block_q, 0)
+    dbp = _pad(words_db, block_n, 0)
+    qm, nm = tp.shape[0], dbp.shape[0]
+    grid = (qm // block_q, nm // block_n)
+    kernel = functools.partial(_lut_topk_kernel, bits=bits, top_k=top_k,
+                               n_valid=n, block_n=block_n)
+    vals, ids = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_q, fp), lambda i, j: (i, 0)),
+            pl.BlockSpec((block_n, w), lambda i, j: (j, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((block_q, top_k), lambda i, j: (i, 0)),
+            pl.BlockSpec((block_q, top_k), lambda i, j: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((qm, top_k), jnp.float32),
+            jax.ShapeDtypeStruct((qm, top_k), jnp.int32),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((block_q, top_k), jnp.float32),
+            pltpu.VMEM((block_q, top_k), jnp.int32),
+        ],
+        interpret=interpret,
+    )(tp, dbp)
+    return vals[:qn], ids[:qn]
+
+
+# -- scored top-k over live rows only -----------------------------------------
+
+def _lut_topk_masked_kernel(tab_ref, db_ref, valid_ref, ov_ref, oi_ref,
+                            vals_ref, ids_ref, *, bits: int, top_k: int,
+                            block_n: int):
+    j = pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _init():
+        _init_running(vals_ref, ids_ref)
+
+    tab = tab_ref[...].astype(jnp.float32)
+    db = db_ref[...]
+    score = _accum_lut_scores(tab, db, bits, (tab.shape[0], block_n))
+    local = jax.lax.broadcasted_iota(jnp.int32, score.shape, 1)
+    gids = local + j * block_n
+    # packed validity tile -> row mask, as in packed_collision's masked
+    # kernel: bit r%32 of word r//32 is row r (wrapper zeroes bits > N)
+    v = valid_ref[...]                                  # [bn/32, 1]
+    bitpos = jax.lax.broadcasted_iota(jnp.uint32, (block_n // 32, 32), 1)
+    live = ((v >> bitpos) & jnp.uint32(1)).reshape(1, block_n)
+    score = jnp.where(live != 0, score, _NEG_INF)
+    _merge_running_topk(vals_ref, ids_ref, score, gids, top_k)
+
+    @pl.when(j == pl.num_programs(1) - 1)
+    def _finalize():
+        ov_ref[...] = vals_ref[...]
+        oi_ref[...] = ids_ref[...]
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("bits", "top_k", "block_q", "block_n", "interpret"))
+def packed_lut_topk_masked_pallas(q_tables, words_db, valid_words,
+                                  bits: int, top_k: int, *,
+                                  block_q: int = 128, block_n: int = 512,
+                                  interpret: bool = False):
+    """Scored streaming top-k over rows whose validity bit is set.
+
+    ``valid_words``: uint32 [ceil(N/32)] bitmask (``packing
+    .pack_bitmask`` layout). Dead rows score -inf on device and never
+    enter the running list; slots beyond the live count surface as
+    (-inf, -1). Bit-exact vs ``ref.packed_lut_topk_masked_ref``. The
+    mask is data — tombstone patterns never trigger a recompile.
+    """
+    qn, fp = q_tables.shape
+    n, w = words_db.shape
+    assert fp == w * (32 // bits) * (1 << bits), (q_tables.shape,
+                                                  words_db.shape, bits)
+    assert block_n % 32 == 0, block_n
+    nw = bitmask_width(n)
+    assert valid_words.shape == (nw,), (valid_words.shape, nw)
+    tp = _pad(q_tables, block_q, 0)
+    dbp = _pad(words_db, block_n, 0)
+    qm, nm = tp.shape[0], dbp.shape[0]
+    vw = valid_words.astype(jnp.uint32)
+    if n % 32:
+        vw = vw.at[-1].set(vw[-1] & jnp.uint32((1 << (n % 32)) - 1))
+    vw = jnp.pad(vw, (0, nm // 32 - nw)).reshape(nm // 32, 1)
+    grid = (qm // block_q, nm // block_n)
+    kernel = functools.partial(_lut_topk_masked_kernel, bits=bits,
+                               top_k=top_k, block_n=block_n)
+    vals, ids = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_q, fp), lambda i, j: (i, 0)),
+            pl.BlockSpec((block_n, w), lambda i, j: (j, 0)),
+            pl.BlockSpec((block_n // 32, 1), lambda i, j: (j, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((block_q, top_k), lambda i, j: (i, 0)),
+            pl.BlockSpec((block_q, top_k), lambda i, j: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((qm, top_k), jnp.float32),
+            jax.ShapeDtypeStruct((qm, top_k), jnp.int32),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((block_q, top_k), jnp.float32),
+            pltpu.VMEM((block_q, top_k), jnp.int32),
+        ],
+        interpret=interpret,
+    )(tp, dbp, vw)
+    return vals[:qn], ids[:qn]
+
+
+# -- per-query candidate re-rank (two-stage second pass) ----------------------
+
+def _lut_rerank_kernel(tab_ref, cand_ref, valid_ref, ov_ref, oi_ref,
+                       vals_ref, ids_ref, *, bits: int, top_k: int,
+                       block_m: int):
+    j = pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _init():
+        _init_running(vals_ref, ids_ref)
+
+    tab = tab_ref[...].astype(jnp.float32)
+    cand = cand_ref[...]                                # [bq, bm, W]
+    score = _accum_lut_scores(tab, cand, bits,
+                              (tab.shape[0], block_m))
+    score = jnp.where(valid_ref[...] != 0, score, _NEG_INF)
+    local = jax.lax.broadcasted_iota(jnp.int32, score.shape, 1)
+    _merge_running_topk(vals_ref, ids_ref, score, local + j * block_m,
+                        top_k)
+
+    @pl.when(j == pl.num_programs(1) - 1)
+    def _finalize():
+        ov_ref[...] = vals_ref[...]
+        oi_ref[...] = ids_ref[...]
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("bits", "top_k", "block_q", "block_m", "interpret"))
+def packed_lut_rerank_pallas(q_tables, cand_words, cand_valid, bits: int,
+                             top_k: int, *, block_q: int = 128,
+                             block_m: int = 512, interpret: bool = False):
+    """Re-rank per-query candidates: q_tables [Q, F*P], cand_words
+    uint32 [Q, M, W] (coarse-stage gather), cand_valid int32/bool
+    [Q, M] -> (scores f32 [Q, top_k], positions int32 [Q, top_k]).
+
+    Positions index the candidate axis; invalid candidates score -inf
+    and surface as (-inf, -1). Streams the M axis with the running
+    top-k in VMEM — the [Q, M] score matrix never reaches HBM.
+    Bit-exact vs ``ref.packed_lut_rerank_ref``.
+    """
+    qn, fp = q_tables.shape
+    n_q, m, w = cand_words.shape
+    assert n_q == qn and cand_valid.shape == (qn, m), (
+        q_tables.shape, cand_words.shape, cand_valid.shape)
+    assert fp == w * (32 // bits) * (1 << bits), (q_tables.shape,
+                                                  cand_words.shape, bits)
+    tp = _pad(q_tables, block_q, 0)
+    cw = _pad(_pad(cand_words, block_q, 0), block_m, 1)
+    cv = _pad(_pad(cand_valid.astype(jnp.int32), block_q, 0), block_m, 1)
+    qm, mm = cw.shape[0], cw.shape[1]
+    grid = (qm // block_q, mm // block_m)
+    kernel = functools.partial(_lut_rerank_kernel, bits=bits, top_k=top_k,
+                               block_m=block_m)
+    vals, ids = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_q, fp), lambda i, j: (i, 0)),
+            pl.BlockSpec((block_q, block_m, w), lambda i, j: (i, j, 0)),
+            pl.BlockSpec((block_q, block_m), lambda i, j: (i, j)),
+        ],
+        out_specs=[
+            pl.BlockSpec((block_q, top_k), lambda i, j: (i, 0)),
+            pl.BlockSpec((block_q, top_k), lambda i, j: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((qm, top_k), jnp.float32),
+            jax.ShapeDtypeStruct((qm, top_k), jnp.int32),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((block_q, top_k), jnp.float32),
+            pltpu.VMEM((block_q, top_k), jnp.int32),
+        ],
+        interpret=interpret,
+    )(tp, cw, cv)
+    return vals[:qn], ids[:qn]

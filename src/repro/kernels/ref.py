@@ -14,7 +14,10 @@ from repro.core.schemes import CodeSpec
 
 __all__ = ["coded_project_ref", "pack_codes_ref", "collision_counts_ref",
            "packed_collision_ref", "packed_topk_ref",
-           "packed_topk_masked_ref", "topk_blocked_ref", "topk_stable_ref"]
+           "packed_topk_masked_ref", "topk_blocked_ref", "topk_stable_ref",
+           "lut_scores_ref", "lut_scores_rowwise_ref", "topk_scored_ref",
+           "packed_lut_topk_ref", "packed_lut_topk_masked_ref",
+           "packed_lut_rerank_ref"]
 
 
 def coded_project_ref(x, r, spec: CodeSpec, q=None):
@@ -119,6 +122,109 @@ def packed_topk_ref(words_q, words_db, bits: int, k: int, top_k: int):
     """
     counts = packed_collision_ref(words_q, words_db, bits, k)
     return topk_stable_ref(counts, top_k)
+
+
+# -- LUT-scored ranking (repro.rank) ------------------------------------------
+
+def lut_scores_ref(q_tables, words_db, bits: int):
+    """LUT scores on packed words: [Q, F*P] x [N, W] -> float32 [Q, N].
+
+    q_tables is the flat per-query table of ``rank.RankTables
+    .query_tables`` (any float dtype; F = W * 32/bits field slots, P =
+    2**bits entries each); entry (w*cpw + f)*P + c scores corpus code
+    value c at field f of word w. Scores accumulate in float32 field by
+    field in (word, field) order — the exact accumulation order of the
+    fused kernel, so kernel outputs match bit-for-bit. Padded field
+    slots hold zeros, so rows with k < F real codes score correctly.
+    """
+    p = 1 << bits
+    cpw = 32 // bits
+    n_words = words_db.shape[-1]
+    assert q_tables.shape[-1] == n_words * cpw * p, (
+        q_tables.shape, words_db.shape, bits)
+    tab = q_tables.astype(jnp.float32)
+    score = jnp.zeros((q_tables.shape[0], words_db.shape[0]), jnp.float32)
+    for w in range(n_words):
+        word = words_db[:, w]
+        for f in range(cpw):
+            c = (word >> jnp.uint32(f * bits)) & jnp.uint32(p - 1)
+            col = (w * cpw + f) * p
+            score = score + jnp.take(tab[:, col:col + p],
+                                     c.astype(jnp.int32), axis=1)
+    return score
+
+
+def lut_scores_rowwise_ref(q_tables, cand_words, bits: int):
+    """Row-wise LUT scores: [Q, F*P] x per-query candidates [Q, M, W]
+    -> float32 [Q, M] (same table layout and float32 accumulation order
+    as ``lut_scores_ref``; query i scores only its own candidate rows).
+    """
+    p = 1 << bits
+    cpw = 32 // bits
+    n_words = cand_words.shape[-1]
+    assert q_tables.shape[-1] == n_words * cpw * p, (
+        q_tables.shape, cand_words.shape, bits)
+    tab = q_tables.astype(jnp.float32)
+    score = jnp.zeros(cand_words.shape[:-1], jnp.float32)
+    for w in range(n_words):
+        word = cand_words[..., w]
+        for f in range(cpw):
+            c = (word >> jnp.uint32(f * bits)) & jnp.uint32(p - 1)
+            col = (w * cpw + f) * p
+            score = score + jnp.take_along_axis(
+                tab[:, col:col + p], c.astype(jnp.int32), axis=1)
+    return score
+
+
+def topk_scored_ref(scores, top_k: int):
+    """Stable descending top-k of float scores [c, n] -> (float32
+    [c, top_k], int32 ids [c, top_k]).
+
+    -inf marks non-candidates/empty slots; such slots (and overflow when
+    top_k > n) surface as (-inf, -1). Ties resolve to the lowest index
+    (``lax.top_k`` is stable), matching the streaming kernels.
+    """
+    scores = jnp.asarray(scores, jnp.float32)
+    if top_k > scores.shape[1]:
+        scores = jnp.pad(scores, ((0, 0), (0, top_k - scores.shape[1])),
+                         constant_values=-jnp.inf)
+    vals, ids = jax.lax.top_k(scores, top_k)
+    return vals, jnp.where(jnp.isneginf(vals), -1, ids.astype(jnp.int32))
+
+
+def packed_lut_topk_ref(q_tables, words_db, bits: int, top_k: int):
+    """Full-corpus LUT-scored search: -> (scores f32 [Q, top_k], ids
+    int32 [Q, top_k]); the oracle for the fused streaming kernel
+    (``packed_lut.packed_lut_topk_pallas``), bit-exact including float
+    accumulation order and lowest-id tie-breaks."""
+    return topk_scored_ref(lut_scores_ref(q_tables, words_db, bits), top_k)
+
+
+def packed_lut_topk_masked_ref(q_tables, words_db, valid_words, bits: int,
+                               top_k: int):
+    """``packed_lut_topk_ref`` over live rows only: ``valid_words`` is
+    the packed row-validity bitmask (``packing.pack_bitmask`` layout).
+    Dead rows score -inf and never surface; empty slots are (-inf, -1).
+    """
+    scores = lut_scores_ref(q_tables, words_db, bits)
+    live = _packing.unpack_bitmask(valid_words, words_db.shape[0])
+    return topk_scored_ref(jnp.where(live[None, :], scores, -jnp.inf),
+                           top_k)
+
+
+def packed_lut_rerank_ref(q_tables, cand_words, cand_valid, bits: int,
+                          top_k: int):
+    """Per-query candidate re-rank: q_tables [Q, F*P], gathered
+    candidate rows [Q, M, W] uint32, cand_valid bool/int [Q, M] ->
+    (scores f32 [Q, top_k], positions int32 [Q, top_k]).
+
+    Positions index the candidate axis (0..M-1), NOT corpus rows —
+    callers map them through their candidate id list. Invalid candidates
+    (coarse-stage -1 slots) score -inf; empty slots are (-inf, -1).
+    """
+    scores = lut_scores_rowwise_ref(q_tables, cand_words, bits)
+    scores = jnp.where(jnp.asarray(cand_valid) != 0, scores, -jnp.inf)
+    return topk_scored_ref(scores, top_k)
 
 
 def packed_topk_masked_ref(words_q, words_db, valid_words, bits: int, k: int,

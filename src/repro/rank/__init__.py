@@ -1,0 +1,13 @@
+"""Scored re-ranking: packed codes -> calibrated similarity estimates.
+
+The ANN layers rank by raw collision counts (the diagonal of the code
+contingency table); this subsystem ranks by the full table. ``tables``
+builds product-quantization-style per-query lookup tables whose entries
+are per-code-pair log-likelihood ratios from the scheme's contingency
+model (``core.estimators.cell_probs``), with a monotone rho calibration
+inverted on a dense grid; ``kernels.packed_lut`` fuses the lookups with
+streaming top-k on device. The engines compose the two stages — coarse
+packed-collision top-m, LUT re-rank to top-k — behind ``scored=True``
+(``ann.AnnEngine`` / ``index.MutableAnnEngine`` / ``serve.AnnService``).
+"""
+from repro.rank.tables import RankTables, build_rank_tables  # noqa: F401

@@ -1,0 +1,154 @@
+"""Per-band lookup tables: packed codes -> calibrated similarity scores.
+
+The ANN engines rank candidates by raw collision counts — the diagonal
+of the code contingency table. The paper's 2-bit scheme carries more:
+an adjacent-region disagreement ((1,2): both values near zero) is weak
+evidence *against* similarity, an extreme-region disagreement ((0,3):
+opposite tails) is strong evidence. The non-linear estimators of
+1602.06577 exploit exactly this, and product-quantization-style
+asymmetric distance tables make the exploit cheap: precompute, per
+query, one float per (code position, corpus code value), and scoring a
+corpus row is a pure table-lookup accumulation — the shape the fused
+Pallas kernel (``kernels.packed_lut``) wants.
+
+Construction (``build_rank_tables``):
+
+* pair scores ``S[a, b] = log p_ab(rho_ref) - log p_ab(0)`` — the
+  per-code log-likelihood ratio of "correlated at rho_ref" vs
+  "independent", from the scheme's contingency-cell model
+  (``core.estimators.cell_probs``). Summed over the k code positions
+  this is the Neyman–Pearson optimal statistic for detecting similarity
+  at rho_ref, and a monotone-likelihood-ratio family makes the ranking
+  consistent across the whole rho range.
+* calibration: the expected total score g(rho) = k * sum_ab p_ab(rho)
+  S[a, b] is tabulated on a dense rho grid and inverted by monotone
+  interpolation — ``rho_from_scores`` maps raw LUT scores to calibrated
+  rho_hat exactly the way ``CollisionEstimator`` inverts P(rho).
+
+Layout: scoring tables are *asymmetric* (query-side specialized).
+``query_tables`` gathers S rows by the query's own codes into a flat
+float table [Q, F*P] with F = n_words * codes_per_word field slots and
+P = 2**bits entries per slot; padded field slots (k not a multiple of
+32/bits) hold zeros, so padding contributes nothing. Tables quantize to
+bf16 (``quantize``) at half the VMEM footprint; kernels accumulate in
+float32 either way.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, replace
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.core import packing as _packing
+from repro.core.estimators import cell_probs
+from repro.core.schemes import CodeSpec
+
+__all__ = ["RankTables", "build_rank_tables"]
+
+
+@dataclass(frozen=True)
+class RankTables:
+    """Immutable LUT bundle for one (scheme, k) search setup.
+
+    pair: float32 [P, P] per-code-pair scores (P = 2**bits), code pairs
+    beyond n_codes zero. rho_grid/score_grid: float32 [G] calibration
+    table, score_grid strictly increasing (monotone-enforced).
+    """
+    spec: CodeSpec
+    k: int
+    pair: jax.Array                 # f32 [P, P]
+    rho_grid: jax.Array             # f32 [G]
+    score_grid: jax.Array           # f32 [G], strictly increasing
+    dtype: jnp.dtype = jnp.float32  # storage dtype of query tables
+
+    @property
+    def bits(self) -> int:
+        """Packed field width of the scheme (bits per code)."""
+        return self.spec.bits
+
+    @property
+    def n_entries(self) -> int:
+        """Entries per field slot in the flat query table (2**bits)."""
+        return 1 << self.spec.bits
+
+    @property
+    def n_fields(self) -> int:
+        """Field slots per row: n_words * codes_per_word (>= k)."""
+        return (_packing.packed_width(self.k, self.bits)
+                * _packing.codes_per_word(self.bits))
+
+    def query_tables(self, q_codes):
+        """Specialize the pair table to queries.
+
+        q_codes: int32 [Q, k] -> ``self.dtype`` [Q, F*P] with
+        F = ``n_fields``, P = ``n_entries``: entry [i, (w*cpw + f)*P + c]
+        scores corpus code value c at code position w*cpw + f of query
+        i. Padded positions (>= k) are zero. Jittable (pure gather).
+        """
+        p = self.n_entries
+        t = jnp.take(self.pair, q_codes, axis=0)        # [Q, k, P]
+        pad = self.n_fields - self.k
+        if pad:
+            t = jnp.pad(t, ((0, 0), (0, pad), (0, 0)))
+        return t.reshape(t.shape[0], self.n_fields * p).astype(self.dtype)
+
+    def rho_from_scores(self, scores):
+        """Calibrate raw LUT scores [...] (float) to rho_hat [...] by
+        monotone inversion of the expected-score curve on the rho grid
+        (out-of-range scores clamp to the grid ends)."""
+        return jnp.interp(jnp.asarray(scores, jnp.float32),
+                          self.score_grid, self.rho_grid)
+
+    def quantize(self, dtype=jnp.bfloat16) -> "RankTables":
+        """Same tables with query-table storage dtype ``dtype`` (the
+        calibration grid stays float32; kernels accumulate float32)."""
+        return replace(self, dtype=jnp.dtype(dtype))
+
+
+def build_rank_tables(spec, k: int = None, *, rho_ref: float = 0.9,
+                      grid_size: int = 512, rho_max: float = 0.99995,
+                      floor: float = 1e-12,
+                      dtype=jnp.float32) -> RankTables:
+    """Build LUT scoring + calibration tables for one (scheme, k).
+
+    spec: a ``CodeSpec`` (then ``k`` is required) or a
+    ``CodedRandomProjection`` (spec and k taken from it). rho_ref is the
+    similarity the log-likelihood-ratio scores are tuned to detect (the
+    near-neighbor regime by default); ``floor`` clips cell probabilities
+    before the log so impossible cells stay finite. Supports the
+    'sign', '2bit' and 'uniform' schemes (the 'offset' scheme has
+    per-projection regions — ``cell_probs`` raises).
+    """
+    if k is None:
+        if isinstance(spec, CodeSpec):
+            raise TypeError("k is required when passing a bare CodeSpec "
+                            "(or pass a CodedRandomProjection)")
+        sk = spec
+        spec, k = sk.spec, sk.cfg.k
+    if not isinstance(spec, CodeSpec):
+        raise TypeError(f"spec must be CodeSpec or sketcher, got {spec!r}")
+    n = spec.n_codes
+    p_entries = 1 << spec.bits
+
+    rho = np.linspace(0.0, rho_max, grid_size)
+    probs = np.asarray(cell_probs(jnp.asarray(rho), spec), np.float64)
+    probs = np.maximum(probs, floor)                     # [G, n, n]
+    p_ref = np.maximum(
+        np.asarray(cell_probs(jnp.asarray(rho_ref), spec), np.float64),
+        floor)
+    p_null = probs[0]                                    # rho=0: p_a * p_b
+    pair = np.log(p_ref) - np.log(p_null)                # [n, n] LLR
+
+    # expected total score per rho; monotone-enforce for inversion
+    g = k * np.einsum("gab,ab->g", probs, pair)
+    g = np.maximum.accumulate(g) + 1e-9 * np.arange(grid_size)
+
+    full = np.zeros((p_entries, p_entries), np.float32)
+    full[:n, :n] = pair.astype(np.float32)
+    return RankTables(spec=spec, k=k,
+                      pair=jnp.asarray(full),
+                      rho_grid=jnp.asarray(rho, jnp.float32),
+                      score_grid=jnp.asarray(g, jnp.float32),
+                      dtype=jnp.dtype(dtype))

@@ -36,6 +36,7 @@ __all__ = ["AnnServiceConfig", "AnnService"]
 
 @dataclass(frozen=True)
 class AnnServiceConfig:
+    """Static service knobs; one engine jit cache entry per bucket."""
     top_k: int = 10
     mode: str = "exact"            # exact | lsh
     min_bands: int = 1
@@ -43,6 +44,8 @@ class AnnServiceConfig:
     buckets: tuple = (1, 8, 64, 256)   # padded batch shapes (ascending)
     cache_size: int = 256          # LRU result entries (0 disables)
     impl: str = "auto"
+    scored: bool = False           # two-stage LUT re-rank (repro.rank)
+    rerank_m: int = 0              # scored: coarse candidates (0 = auto)
 
 
 @dataclass
@@ -108,9 +111,12 @@ class AnnService:
         return self.cfg.buckets[-1]
 
     def _cache_key(self, word_row: np.ndarray):
+        """Result-cache key: the query's packed code words + every knob
+        that changes the search result (scored included — count-ranked
+        and score-ranked results never alias)."""
         cfg = self.cfg
         return (word_row.tobytes(), cfg.top_k, cfg.mode, cfg.min_bands,
-                cfg.n_probes)
+                cfg.n_probes, cfg.scored, cfg.rerank_m)
 
     def _sync_cache_generation(self):
         gen = getattr(self.engine, "generation", 0)
@@ -169,7 +175,8 @@ class AnnService:
                     sub, SearchConfig(top_k=cfg.top_k, mode=cfg.mode,
                                       min_bands=cfg.min_bands,
                                       n_probes=cfg.n_probes, chunk_q=b2,
-                                      impl=cfg.impl))
+                                      impl=cfg.impl, scored=cfg.scored,
+                                      rerank_m=cfg.rerank_m))
                 ids, rho = np.asarray(ids), np.asarray(rho)
                 for j, i in enumerate(miss):
                     res[i] = (ids[j], rho[j])
@@ -193,5 +200,6 @@ class AnnService:
             self.engine.search(
                 jnp.zeros((b, d)), self.cfg.top_k, mode=self.cfg.mode,
                 min_bands=self.cfg.min_bands,
-                n_probes=self.cfg.n_probes, chunk_q=b, impl=self.cfg.impl)
+                n_probes=self.cfg.n_probes, chunk_q=b, impl=self.cfg.impl,
+                scored=self.cfg.scored, rerank_m=self.cfg.rerank_m)
         return self

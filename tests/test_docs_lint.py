@@ -1,0 +1,26 @@
+"""Docs lint as a test: public APIs documented, no dead doc paths."""
+import os
+import sys
+
+_SCRIPTS = os.path.join(os.path.dirname(os.path.dirname(
+    os.path.abspath(__file__))), "scripts")
+sys.path.insert(0, _SCRIPTS)
+
+import check_docs  # noqa: E402
+
+
+def test_public_api_docstrings():
+    missing = check_docs.check_docstrings()
+    assert not missing, f"public symbols without docstrings: {missing}"
+
+
+def test_docs_reference_only_existing_paths():
+    dead = check_docs.check_doc_paths()
+    assert not dead, f"docs reference missing paths: {dead}"
+
+
+def test_readme_exists():
+    root = os.path.dirname(_SCRIPTS)
+    assert os.path.exists(os.path.join(root, "README.md"))
+    assert os.path.exists(os.path.join(root, "docs", "PAPER_MAP.md"))
+    assert os.path.exists(os.path.join(root, "docs", "ARCHITECTURE.md"))
