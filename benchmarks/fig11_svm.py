@@ -7,14 +7,21 @@ qualitative claims under test:
   (i)   h_w ~ h_{w,2} ~ Orig accuracy at w ~ 0.75-1;
   (ii)  h_1 noticeably worse;
   (iii) h_{w,q} degrades vs h_w as w grows (the offset hurts).
+
+Coded-feature training runs through ``repro.learn`` on the *packed*
+codes (fused gather/scatter kernels, `BENCH_learn.json` measures the
+economics) — the dense one-hot matrix is never materialized, so the
+full-paper k=256 grid runs at every dataset size. Only the "orig"
+baseline (raw float projections as features) still uses the dense
+solver, because its features genuinely are dense.
 """
 import numpy as np
 import jax
 import jax.numpy as jnp
 
-from repro.core import schemes as S
 from repro.core.sketch import CodedRandomProjection, SketchConfig
-from repro.core.svm import SVMConfig, expand_codes, svm_accuracy, train_linear_svm
+from repro.core.svm import SVMConfig, svm_accuracy, train_linear_svm
+from repro.learn import LearnConfig, feature_spec_for, fit_words
 from benchmarks._util import timed, write_csv
 
 DATASETS = {
@@ -38,14 +45,19 @@ def _make_dataset(name, key):
     return (x[:n_tr], y[:n_tr]), (x[n_tr:], y[n_tr:])
 
 
-def _feats(crp, codes):
-    return expand_codes(codes, crp.spec)
+def _packed_acc(crp, codes_tr, ytr, codes_te, yte, c, steps):
+    """Train on packed codes (repro.learn), return test accuracy."""
+    fspec = feature_spec_for(crp.spec, crp.cfg.k)
+    model = fit_words(crp.pack(codes_tr), ytr, fspec,
+                      LearnConfig(c=c, steps=steps))
+    return model.accuracy(crp.pack(codes_te), np.asarray(yte))
 
 
 def run(quick: bool = True):
-    ks = [16, 64, 256] if not quick else [16, 64, 256]
-    wgrid = [0.5, 0.75, 1.0, 2.0]
+    ks = [16, 64, 256] if not quick else [16, 64]
+    wgrid = [0.5, 0.75, 1.0, 2.0] if not quick else [0.75, 2.0]
     cgrid = [0.1, 1.0]
+    steps = 250
     rows, out = [], []
     names = list(DATASETS) if not quick else ["arcene_like", "url_like"]
     for name in names:
@@ -53,14 +65,14 @@ def run(quick: bool = True):
         d = xtr.shape[1]
         best = {}
         for k in ks:
-            # Orig: raw projections as features
+            # Orig: raw projections as features (dense solver)
             crp0 = CodedRandomProjection(SketchConfig(k=k, scheme="sign"), d)
             ztr, zte = crp0.project(xtr), crp0.project(xte)
             ztr = ztr / (jnp.linalg.norm(ztr, axis=1, keepdims=True) + 1e-9)
             zte = zte / (jnp.linalg.norm(zte, axis=1, keepdims=True) + 1e-9)
             accs = {}
             for c in cgrid:
-                w_, b_ = train_linear_svm(ztr, ytr, SVMConfig(c=c, steps=250))
+                w_, b_ = train_linear_svm(ztr, ytr, SVMConfig(c=c, steps=steps))
                 accs[c] = float(svm_accuracy(w_, b_, zte, yte))
             best[("orig", k)] = max(accs.values())
             rows += [[name, "orig", k, 0.0, c, a] for c, a in accs.items()]
@@ -70,11 +82,10 @@ def run(quick: bool = True):
                 for w in wlist:
                     crp = CodedRandomProjection(
                         SketchConfig(k=k, scheme=scheme, w=max(w, 1e-3)), d)
-                    ftr = _feats(crp, crp.encode_projected(crp0.project(xtr)))
-                    fte = _feats(crp, crp.encode_projected(crp0.project(xte)))
+                    ctr = crp.encode_projected(crp0.project(xtr))
+                    cte = crp.encode_projected(crp0.project(xte))
                     for c in cgrid:
-                        w_, b_ = train_linear_svm(ftr, ytr, SVMConfig(c=c, steps=250))
-                        acc = float(svm_accuracy(w_, b_, fte, yte))
+                        acc = _packed_acc(crp, ctr, ytr, cte, yte, c, steps)
                         rows.append([name, scheme, k, w, c, acc])
                         key = (scheme, k)
                         best[key] = max(best.get(key, 0.0), acc)

@@ -1,0 +1,198 @@
+"""Packed-code classifier training benchmark: parity and economics.
+
+Two questions, one JSON record (``BENCH_learn.json`` at the repo root):
+
+1. **Parity** — on a fig11 synthetic set, training on packed codes
+   (``repro.learn``, fused gather/scatter kernels, no one-hot matrix)
+   must reach test accuracy within 1e-3 of the dense ``expand_codes``
+   path: same objective, same optimizer, different float summation
+   order only.
+
+2. **Scale** — minibatch training over a corpus whose dense one-hot
+   expansion does not fit on a device: 1M rows × k=256 × 2-bit codes is
+   64 MB packed but ≈4 GiB as float32 one-hot (a 64× blow-up; with
+   optimizer transients the dense path busts a 16 GB part long before
+   the packed working set is visible). Measured: training rows/s (the
+   per-step donated update touches only O(batch) rows), full-corpus
+   margin (inference) rows/s, bytes on device vs bytes the dense path
+   would need.
+
+Acceptance contract: parity |Δacc| <= 1e-3, dense one-hot bytes >= 4 GiB
+while packed bytes fit in under 1/32 of that, and held-out accuracy
+beats chance by a wide margin.
+"""
+import json
+import os
+import sys
+import time
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+if __package__ in (None, ""):           # direct `python benchmarks/learn_bench.py`
+    _root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    sys.path.insert(0, _root)
+    sys.path.insert(0, os.path.join(_root, "src"))
+
+_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+from benchmarks._util import write_csv
+from repro.core import packing as PK
+from repro.core.schemes import CodeSpec, encode
+from repro.core.sketch import CodedRandomProjection, SketchConfig
+from repro.core.svm import SVMConfig, expand_codes, svm_accuracy, train_linear_svm
+from repro.learn import LearnConfig, feature_spec_for, fit_words
+from repro.learn.linear import packed_loss_and_grads, targets_pm
+
+SPEC = CodeSpec("2bit", 0.75)
+
+
+def _parity(k: int, steps: int):
+    """Dense expand_codes vs packed training on a fig11 synthetic set.
+
+    The PRNG seed is fixed (not fig11's per-process ``hash(name)``), so
+    the recorded accuracies are reproducible run to run."""
+    from benchmarks.fig11_svm import _make_dataset
+    (xtr, ytr), (xte, yte) = _make_dataset("url_like",
+                                           jax.random.PRNGKey(1105))
+    crp = CodedRandomProjection(
+        SketchConfig(k=k, scheme=SPEC.scheme, w=SPEC.w), xtr.shape[1])
+    ctr, cte = crp.encode(xtr), crp.encode(xte)
+
+    model = fit_words(crp.pack(ctr), ytr, feature_spec_for(crp.spec, k),
+                      LearnConfig(c=1.0, steps=steps))
+    acc_packed = model.accuracy(crp.pack(cte), np.asarray(yte))
+
+    ftr, fte = expand_codes(ctr, crp.spec), expand_codes(cte, crp.spec)
+    w_, b_ = train_linear_svm(ftr, ytr, SVMConfig(c=1.0, steps=steps))
+    acc_dense = float(svm_accuracy(w_, b_, fte, yte))
+    return {"dataset": "url_like", "n_train": int(xtr.shape[0]),
+            "n_test": int(xte.shape[0]), "k": k, "steps": steps,
+            "acc_packed": acc_packed, "acc_dense": acc_dense,
+            "abs_diff": abs(acc_packed - acc_dense)}
+
+
+def _make_packed_corpus(n: int, k: int, seed: int = 0, chunk: int = 65536):
+    """Planted two-class codes, generated and packed chunk by chunk so
+    the int32 code matrix never exists at full size either."""
+    rng = np.random.default_rng(seed)
+    mu = rng.normal(size=(k,)).astype(np.float32) * 0.25
+    words = np.empty((n, PK.packed_width(k, SPEC.bits)), np.uint32)
+    y = np.empty((n,), np.float32)
+    for lo in range(0, n, chunk):
+        m = min(chunk, n - lo)
+        yc = np.where(rng.random(m) < 0.5, 1.0, -1.0).astype(np.float32)
+        z = rng.normal(size=(m, k)).astype(np.float32) + yc[:, None] * mu
+        words[lo:lo + m] = np.asarray(
+            PK.pack_codes(encode(jnp.asarray(z), SPEC), SPEC.bits))
+        y[lo:lo + m] = yc
+    return jnp.asarray(words), jnp.asarray(y)
+
+
+def _scale(n: int, k: int, steps: int, batch: int, n_test: int = 16384):
+    fspec = feature_spec_for(SPEC, k)
+    words, y = _make_packed_corpus(n + n_test, k)
+    wtr, ytr = words[:n], y[:n]
+    wte, yte = words[n:], y[n:]
+
+    cfg = LearnConfig(c=1.0, steps=steps, lr=0.1, batch=batch)
+    t0 = time.perf_counter()
+    model = fit_words(wtr, ytr, fspec, cfg)
+    jax.block_until_ready(model.tables)
+    t_train = time.perf_counter() - t0
+
+    # steady-state step throughput: time the warmed jit'd gradient
+    # evaluation on a fixed batch (the per-step hot path; the end-to-end
+    # t_train above additionally pays one trace+compile and host-side
+    # batch sampling) — same warmed-measurement rules as inference below
+    probe = jax.jit(lambda p, bw, by: packed_loss_and_grads(
+        p, bw, by, fspec, c=1.0)[1])
+    params = (model.tables, model.bias)
+    bw, by = wtr[:batch], targets_pm(ytr, 1)[:, :batch]
+    jax.block_until_ready(probe(params, bw, by))
+    reps = 10
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        jax.block_until_ready(probe(params, bw, by))
+    t_step = (time.perf_counter() - t0) / reps
+
+    # inference: one streaming margin pass over the full corpus
+    m = model.margins(wtr)
+    jax.block_until_ready(m)
+    t0 = time.perf_counter()
+    jax.block_until_ready(model.margins(wtr))
+    t_fwd = time.perf_counter() - t0
+
+    packed_bytes = int(wtr.size * 4)
+    dense_bytes = int(n) * fspec.dense_dim * 4
+    return {
+        "corpus": n, "k": k, "bits": SPEC.bits, "n_codes": SPEC.n_codes,
+        "batch": batch, "steps": steps,
+        "train_time_s": t_train,
+        "train_step_s": t_step,
+        "train_rows_per_s": batch / t_step,
+        "infer_rows_per_s": n / t_fwd,
+        "test_acc": model.accuracy(wte, np.asarray(yte)),
+        "packed_bytes": packed_bytes,
+        "dense_onehot_bytes": dense_bytes,
+        "dense_blowup_x": dense_bytes / packed_bytes,
+    }
+
+
+def _rows(par, sc):
+    return [
+        ("learn_train_packed", 1e6 / sc["train_rows_per_s"],
+         f"rows/s={sc['train_rows_per_s']:.0f} acc={sc['test_acc']:.3f} "
+         f"n={sc['corpus']}"),
+        ("learn_infer_packed", 1e6 / sc["infer_rows_per_s"],
+         f"rows/s={sc['infer_rows_per_s']:.0f}"),
+        ("learn_parity", 0.0,
+         f"packed={par['acc_packed']:.4f} dense={par['acc_dense']:.4f} "
+         f"|d|={par['abs_diff']:.4f}"),
+        ("learn_dense_blowup", 0.0,
+         f"packed_MB={sc['packed_bytes'] / 2**20:.0f} "
+         f"dense_MB={sc['dense_onehot_bytes'] / 2**20:.0f} "
+         f"x{sc['dense_blowup_x']:.0f}"),
+    ]
+
+
+def run(quick: bool = True):
+    """run.py contract: (name, us_per_row, derived) rows."""
+    par = _parity(k=64, steps=150 if quick else 250)
+    sc = _scale(n=131072 if quick else 1 << 20, k=64 if quick else 256,
+                steps=40 if quick else 100, batch=2048 if quick else 4096,
+                n_test=4096 if quick else 16384)
+    rows = _rows(par, sc)
+    write_csv("learn_bench", ["name", "us_per_row", "derived"], rows)
+    return rows
+
+
+def main():
+    par = _parity(k=256, steps=250)
+    sc = _scale(n=1 << 20, k=256, steps=100, batch=4096)
+    r = {"parity": par, "scale": sc}
+    write_csv("learn_bench", ["name", "us_per_row", "derived"],
+              _rows(par, sc))
+    with open(os.path.join(_ROOT, "BENCH_learn.json"), "w") as f:
+        json.dump(r, f, indent=1)
+    print("BENCH " + json.dumps(r))
+    print(f"\nparity on {par['dataset']}: packed {par['acc_packed']:.4f} "
+          f"vs dense {par['acc_dense']:.4f} (|d|={par['abs_diff']:.4f})")
+    print(f"scale: {sc['corpus']} rows x k={sc['k']} ({sc['bits']}-bit): "
+          f"{sc['packed_bytes'] / 2**20:.0f} MB packed vs "
+          f"{sc['dense_onehot_bytes'] / 2**30:.2f} GiB dense one-hot "
+          f"(x{sc['dense_blowup_x']:.0f}); train "
+          f"{sc['train_rows_per_s']:.0f} rows/s, "
+          f"test acc {sc['test_acc']:.3f}")
+    ok = (par["abs_diff"] <= 1e-3
+          and sc["dense_onehot_bytes"] >= 2 ** 32
+          and sc["dense_onehot_bytes"] >= 32 * sc["packed_bytes"]
+          and sc["test_acc"] >= 0.8)
+    print("acceptance: " + ("PASS" if ok else "FAIL"))
+    if not ok:
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -32,6 +32,7 @@ MODULES = [
     "benchmarks.ann_bench",
     "benchmarks.ingest_bench",
     "benchmarks.rank_bench",
+    "benchmarks.learn_bench",
 ]
 
 

@@ -21,7 +21,7 @@ import re
 import sys
 
 ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
-PACKAGES = ("repro.ann", "repro.index", "repro.rank")
+PACKAGES = ("repro.ann", "repro.index", "repro.rank", "repro.learn")
 DOC_FILES = ["README.md"]
 DOC_DIRS = ["docs"]
 

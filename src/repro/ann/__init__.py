@@ -8,7 +8,9 @@ engine  — ``AnnEngine``: fused project→code→pack queries, exact and
           ``QueryCoder``/``merge_topk`` shared with the mutable layer;
           ``scored=True`` adds the two-stage LUT re-rank (``repro.rank``)
 (mutable lifecycle over this layer: ``repro.index``; serving
-front-end: ``repro.serve.ann_service``)
+front-end: ``repro.serve.ann_service``; the packed corpus also feeds
+classifier training directly — ``repro.learn.fit_store`` batches off a
+``CodeStore`` without unpacking a single code)
 """
 from repro.ann.bands import BandSpec, band_hashes, probe_hashes  # noqa: F401
 from repro.ann.engine import AnnEngine, SearchConfig  # noqa: F401

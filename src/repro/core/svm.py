@@ -1,90 +1,57 @@
-"""Linear SVM on coded random projections (paper §6).
+"""Linear SVM on coded random projections (paper §6) — compat shim.
 
-The paper trains L2-regularized linear SVMs (LIBLINEAR) on a one-hot
-expansion of the codes: with k projections and a b-bit scheme the feature
-vector has length k * 2^b with exactly k ones. We reproduce the pipeline
-with a JAX solver for the (smooth) squared-hinge L2 SVM:
+Historically this module owned the dense pipeline: materialize the full
+[n, k * 2^b] one-hot feature matrix (``expand_codes``) and solve the
+squared-hinge L2 SVM on it with full-batch Adam. Training now lives in
+``repro.learn``, which never builds that matrix — margins are
+per-projection weight-table gathers and gradients scatter straight back
+into the packed tables (``kernels.packed_linear``), so the paper's SVM
+experiments run at corpus sizes where the dense expansion cannot fit.
 
-    min_W  0.5 ||W||^2 + C sum_i max(0, 1 - y_i w.x_i)^2
-
-solved by full-batch Adam with cosine decay (deterministic; LIBLINEAR is
-not available offline — objective family is identical to its L2R_L2LOSS
-primal). Inputs are row-normalized to unit norm as the paper recommends.
+The original API survives here as thin wrappers over ``repro.learn``
+(the same move ``core.lsh`` made for search in PR 1): ``expand_codes``
+is re-exported as the parity oracle, ``train_linear_svm`` delegates to
+the shared dense solver (bit-identical trajectory to the historical
+code), ``svm_accuracy`` is unchanged. New code should use
+``repro.learn.train_packed_linear`` / ``learn.trainer.fit_store`` and
+get the packed, masked, minibatch and sharded paths.
 """
 from __future__ import annotations
 
 from dataclasses import dataclass
 from typing import Optional
 
-import jax
 import jax.numpy as jnp
 
-from repro.core.schemes import CodeSpec
+from repro.learn.features import expand_codes  # noqa: F401  (compat re-export)
+from repro.learn.linear import LearnConfig, train_dense_linear
 
 __all__ = ["expand_codes", "SVMConfig", "train_linear_svm", "svm_accuracy"]
 
 
-def expand_codes(codes, spec: CodeSpec, normalize: bool = True):
-    """One-hot expand codes [n, k] -> features [n, k * n_codes] (§6).
-
-    Each projection contributes one 1 in its n_codes-wide slot; rows are
-    scaled to unit norm (1/sqrt(k)) per the paper's recommended practice.
-    """
-    n, k = codes.shape
-    one_hot = jax.nn.one_hot(codes, spec.n_codes, dtype=jnp.float32)
-    feats = one_hot.reshape(n, k * spec.n_codes)
-    if normalize:
-        feats = feats / jnp.sqrt(jnp.asarray(float(k)))
-    return feats
-
-
 @dataclass(frozen=True)
 class SVMConfig:
+    """Knobs of the historical dense solver (see ``learn.LearnConfig``)."""
     c: float = 1.0           # L2 regularization tradeoff (LIBLINEAR's C)
     steps: int = 400
     lr: float = 0.1
     seed: int = 0
 
 
-def _objective(params, x, y, c):
-    w, b = params
-    margin = y * (x @ w + b)
-    hinge = jnp.maximum(0.0, 1.0 - margin)
-    return 0.5 * jnp.sum(w * w) + c * jnp.sum(hinge * hinge)
-
-
 def train_linear_svm(x, y, cfg: SVMConfig = SVMConfig(),
                      x_val: Optional[jnp.ndarray] = None,
                      y_val: Optional[jnp.ndarray] = None):
-    """Train binary squared-hinge SVM. y in {-1, +1}. Returns (w, b)."""
-    n, d = x.shape
-    w = jnp.zeros((d,), jnp.float32)
-    b = jnp.zeros((), jnp.float32)
-    m = (jnp.zeros_like(w), jnp.zeros_like(b))
-    v = (jnp.zeros_like(w), jnp.zeros_like(b))
-    grad_fn = jax.grad(_objective)
-
-    def step(carry, i):
-        (w, b), m, v = carry
-        g = grad_fn((w, b), x, y, cfg.c)
-        lr = cfg.lr * 0.5 * (1.0 + jnp.cos(jnp.pi * i / cfg.steps))
-        b1, b2, eps = 0.9, 0.999, 1e-8
-        m = jax.tree.map(lambda mm, gg: b1 * mm + (1 - b1) * gg, m, g)
-        v = jax.tree.map(lambda vv, gg: b2 * vv + (1 - b2) * gg * gg, v, g)
-        t = i + 1.0
-        def upd(p, mm, vv):
-            mh = mm / (1 - b1 ** t)
-            vh = vv / (1 - b2 ** t)
-            return p - lr * mh / (jnp.sqrt(vh) + eps)
-        w2, b2_ = jax.tree.map(upd, (w, b), m, v)
-        return ((w2, b2_), m, v), None
-
-    ((w, b), _, _), _ = jax.lax.scan(
-        step, ((w, b), m, v), jnp.arange(cfg.steps, dtype=jnp.float32))
-    return w, b
+    """Train a binary squared-hinge SVM on dense features x [n, d],
+    y ±1 [n]. Returns (w, b). Delegates to
+    ``learn.linear.train_dense_linear`` (same objective, same Adam +
+    cosine schedule as the historical in-module solver)."""
+    return train_dense_linear(
+        x, y, LearnConfig(loss="sq_hinge", c=cfg.c, steps=cfg.steps,
+                          lr=cfg.lr, seed=cfg.seed), x_val, y_val)
 
 
 def svm_accuracy(w, b, x, y):
+    """Accuracy of sign(x @ w + b) against ±1 labels (0 counts as +1)."""
     pred = jnp.sign(x @ w + b)
     pred = jnp.where(pred == 0, 1.0, pred)
     return jnp.mean((pred == y).astype(jnp.float32))

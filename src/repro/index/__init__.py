@@ -18,7 +18,9 @@ engine      — ``MutableAnnEngine``: batched exact/LSH search across
               immutable store of the surviving rows
 
 (serving front-end with mutation endpoints + result cache:
-``repro.serve.ann_service``)
+``repro.serve.ann_service``; classifier training over a live segment
+log — tombstones skipped on device, labels keyed by external id:
+``repro.learn.fit_log``)
 """
 from repro.index.compaction import (CompactionPolicy, compact,  # noqa: F401
                                     plan_compaction)

@@ -12,12 +12,19 @@ packed_lut       — fused LUT scoring on packed words (repro.rank): per-
                    branchless select tree, streaming scored top-k over
                    the corpus / a candidate gather, plus the tombstone-
                    masked variant
+packed_linear    — classifier training on packed words (repro.learn):
+                   forward margins via the same select-tree gathers with
+                   per-class weight tables, backward gradient scatter
+                   into the [k, 2^b] tables via in-register one-hot
+                   tiles + MXU matmul, both with tombstone-masked
+                   variants
 
 Each has a pure-jnp oracle in ref.py and a dispatching wrapper in ops.py;
 tests sweep shapes/dtypes in interpret mode against the oracles.
 """
 from repro.kernels.ops import (  # noqa: F401
     coded_project, pack_codes, collision_counts, packed_collision_counts,
-    packed_lut_rerank, packed_lut_topk, packed_lut_topk_masked, packed_topk,
-    packed_topk_masked,
+    packed_linear_bwd, packed_linear_bwd_masked, packed_linear_fwd,
+    packed_linear_fwd_masked, packed_lut_rerank, packed_lut_topk,
+    packed_lut_topk_masked, packed_topk, packed_topk_masked,
 )

@@ -20,6 +20,9 @@ from repro.kernels.pack_codes import pack_codes_pallas
 from repro.kernels.packed_collision import (
     packed_collision_counts_pallas, packed_topk_masked_pallas,
     packed_topk_pallas)
+from repro.kernels.packed_linear import (
+    packed_linear_bwd_masked_pallas, packed_linear_bwd_pallas,
+    packed_linear_fwd_masked_pallas, packed_linear_fwd_pallas)
 from repro.kernels.packed_lut import (
     packed_lut_rerank_pallas, packed_lut_topk_masked_pallas,
     packed_lut_topk_pallas)
@@ -27,7 +30,9 @@ from repro.kernels.proj_code import coded_project_pallas
 
 __all__ = ["coded_project", "pack_codes", "collision_counts",
            "packed_collision_counts", "packed_topk", "packed_topk_masked",
-           "packed_lut_topk", "packed_lut_topk_masked", "packed_lut_rerank"]
+           "packed_lut_topk", "packed_lut_topk_masked", "packed_lut_rerank",
+           "packed_linear_fwd", "packed_linear_fwd_masked",
+           "packed_linear_bwd", "packed_linear_bwd_masked"]
 
 
 def _resolve(impl: str) -> str:
@@ -115,6 +120,50 @@ def packed_lut_topk_masked(q_tables, words_db, valid_words, bits: int,
                                          bits, top_k,
                                          interpret=_interpret(),
                                          **block_kwargs)
+
+
+def packed_linear_fwd(tables, words, bits: int, impl: str = "auto",
+                      **block_kwargs):
+    """Packed-linear margins: class weight tables [C, F*P] float x
+    packed words [N, W] -> float32 [C, N] (repro.learn forward)."""
+    if _resolve(impl) == "ref":
+        return _ref.packed_linear_fwd_ref(tables, words, bits)
+    return packed_linear_fwd_pallas(tables, words, bits,
+                                    interpret=_interpret(), **block_kwargs)
+
+
+def packed_linear_fwd_masked(tables, words, valid_words, bits: int,
+                             impl: str = "auto", **block_kwargs):
+    """Packed-linear margins over live rows only (packed bitmask);
+    tombstoned rows emit margin 0.0."""
+    if _resolve(impl) == "ref":
+        return _ref.packed_linear_fwd_masked_ref(tables, words, valid_words,
+                                                 bits)
+    return packed_linear_fwd_masked_pallas(tables, words, valid_words, bits,
+                                           interpret=_interpret(),
+                                           **block_kwargs)
+
+
+def packed_linear_bwd(g, words, bits: int, impl: str = "auto",
+                      **block_kwargs):
+    """Weight-table gradients: margin gradients [C, N] float32 x packed
+    words [N, W] -> float32 [C, F*P] (repro.learn backward)."""
+    if _resolve(impl) == "ref":
+        return _ref.packed_linear_bwd_ref(g, words, bits, **block_kwargs)
+    return packed_linear_bwd_pallas(g, words, bits, interpret=_interpret(),
+                                    **block_kwargs)
+
+
+def packed_linear_bwd_masked(g, words, valid_words, bits: int,
+                             impl: str = "auto", **block_kwargs):
+    """Weight-table gradients over live rows only: tombstoned rows'
+    contributions are zeroed on device before the scatter."""
+    if _resolve(impl) == "ref":
+        return _ref.packed_linear_bwd_masked_ref(g, words, valid_words,
+                                                 bits, **block_kwargs)
+    return packed_linear_bwd_masked_pallas(g, words, valid_words, bits,
+                                           interpret=_interpret(),
+                                           **block_kwargs)
 
 
 def packed_lut_rerank(q_tables, cand_words, cand_valid, bits: int,

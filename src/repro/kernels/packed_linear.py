@@ -1,0 +1,310 @@
+"""Fused linear-classifier kernels directly on bit-packed codes.
+
+The paper's SVM application (§6, Figs 11–14) trains L2 linear models on
+the one-hot expansion of the codes: k projections × 2^b code values per
+row, exactly k ones. Materializing that [N, k·2^b] float matrix is a
+32/b × 2^b blow-up over the packed words and caps training at toy sizes.
+These kernels train **on the packed words themselves**: the one-hot dot
+product is a per-projection weight-table gather, so the forward pass is
+the ``packed_lut`` select-tree machinery with the per-query tables
+replaced by one shared weight table per output class, and the backward
+pass is its transpose — gradient contributions scattered back into the
+[k, 2^b] weight tables.
+
+Four kernels:
+
+``packed_linear_fwd_pallas``
+    Margins: weight tables float [C, F*P] × corpus words uint32 [N, W]
+    -> float32 [C, N], streaming corpus blocks; each b-bit field selects
+    one of its 2^b table entries through a branchless select tree
+    (``packed_lut._lut_select``) and selections accumulate in float32 in
+    (word, field) order. The one-hot feature matrix never exists.
+
+``packed_linear_fwd_masked_pallas``
+    Same with a packed row-validity bitmask (``packing.pack_bitmask``
+    layout): tombstoned rows emit margin 0.0 on device. The mask is
+    data, not shape — churn never recompiles.
+
+``packed_linear_bwd_pallas``
+    Gradient scatter-accumulation: upstream margin gradients float32
+    [C, N] × corpus words [N, W] -> table gradients float32 [C, F*P].
+    Each corpus block expands to its one-hot tile *in register*
+    (branchless field compares — never in HBM) and one MXU matmul
+    ``g_tile @ onehot_tile`` accumulates every per-example contribution
+    into the right (field, code) table column; blocks accumulate
+    sequentially in a VMEM scratch accumulator.
+
+``packed_linear_bwd_masked_pallas``
+    Same with the validity bitmask: dead rows' gradients are zeroed
+    before the matmul, so tombstoned examples never touch the tables.
+
+Bit-exactness: the jnp oracles (``ref.packed_linear_*_ref``) fix the
+accumulation order — (word, field) for margins, ``block_n``-blocked
+row chunks for gradients — and the kernels match them bit-for-bit.
+Phantom table columns (field slots >= k from word padding, code values
+>= n_codes from the power-of-two field width) are the *caller's*
+responsibility: the kernels faithfully gather/scatter every field slot,
+and ``repro.learn.features`` masks the phantom columns out of the
+weight tables and gradients.
+
+Padding: weight-table class rows pad with zeros (padded classes emit
+garbage margins the wrapper slices off), corpus rows pad with zero
+words *and* zero gradient columns, so padded rows contribute exact
+zeros to every gradient sum.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.core.packing import bitmask_width
+from repro.kernels.packed_collision import _pad
+from repro.kernels.packed_lut import _accum_lut_scores
+
+__all__ = ["packed_linear_fwd_pallas", "packed_linear_fwd_masked_pallas",
+           "packed_linear_bwd_pallas", "packed_linear_bwd_masked_pallas",
+           "onehot_tile"]
+
+
+def _expand_valid(valid_tile, block_n: int):
+    """Packed validity tile [block_n/32, 1] -> row mask [1, block_n]."""
+    bitpos = jax.lax.broadcasted_iota(jnp.uint32, (block_n // 32, 32), 1)
+    return ((valid_tile >> bitpos) & jnp.uint32(1)).reshape(1, block_n)
+
+
+def onehot_tile(words, bits: int):
+    """One-hot expand a packed tile in-register: uint32 [bn, W] ->
+    float32 [bn, F*P] with F = W * 32/bits field slots and P = 2**bits
+    entries per slot (the flat layout of ``rank.RankTables`` /
+    ``learn.features``). Entry [n, f*P + c] is 1.0 iff field f of row n
+    holds code value c — built from branchless field compares. The
+    oracle's ``ref._onehot_rows`` is an independent construction of the
+    same matrix (via ``packing.unpack_codes``); their equality — and
+    hence kernel/oracle bit-exactness — is pinned by
+    ``tests/test_learn.py``.
+    """
+    p = 1 << bits
+    cpw = 32 // bits
+    shifts = (jnp.arange(cpw, dtype=jnp.uint32) * jnp.uint32(bits))
+    fields = (words[..., None] >> shifts) & jnp.uint32(p - 1)   # [bn, W, cpw]
+    fields = fields.reshape(words.shape[0], -1)                  # [bn, F]
+    hot = (fields[..., None] == jnp.arange(p, dtype=jnp.uint32))
+    return hot.reshape(words.shape[0], -1).astype(jnp.float32)   # [bn, F*P]
+
+
+# -- forward: margins ---------------------------------------------------------
+
+def _fwd_kernel(tab_ref, db_ref, o_ref, *, bits: int, block_n: int):
+    tab = tab_ref[...].astype(jnp.float32)
+    o_ref[...] = _accum_lut_scores(tab, db_ref[...], bits,
+                                   (tab.shape[0], block_n))
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("bits", "block_c", "block_n", "interpret"))
+def packed_linear_fwd_pallas(tables, words, bits: int, *, block_c: int = 8,
+                             block_n: int = 512, interpret: bool = False):
+    """tables float [C, F*P] (class weight tables, flat ``RankTables``
+    layout), words uint32 [N, W] -> margins float32 [C, N].
+
+    margin[c, n] = sum over field slots f of tables[c, f*P + code(n, f)]
+    accumulated in float32 in (word, field) order — bit-exact vs
+    ``ref.packed_linear_fwd_ref``. Streams the corpus axis; the one-hot
+    feature matrix never materializes.
+    """
+    cn, fp = tables.shape
+    n, w = words.shape
+    assert fp == w * (32 // bits) * (1 << bits), (tables.shape,
+                                                  words.shape, bits)
+    tp = _pad(tables, block_c, 0)
+    dbp = _pad(words, block_n, 0)
+    cm, nm = tp.shape[0], dbp.shape[0]
+    grid = (cm // block_c, nm // block_n)
+    out = pl.pallas_call(
+        functools.partial(_fwd_kernel, bits=bits, block_n=block_n),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_c, fp), lambda i, j: (i, 0)),
+            pl.BlockSpec((block_n, w), lambda i, j: (j, 0)),
+        ],
+        out_specs=pl.BlockSpec((block_c, block_n), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((cm, nm), jnp.float32),
+        interpret=interpret,
+    )(tp, dbp)
+    return out[:cn, :n]
+
+
+def _fwd_masked_kernel(tab_ref, db_ref, valid_ref, o_ref, *, bits: int,
+                       block_n: int):
+    tab = tab_ref[...].astype(jnp.float32)
+    score = _accum_lut_scores(tab, db_ref[...], bits,
+                              (tab.shape[0], block_n))
+    live = _expand_valid(valid_ref[...], block_n)
+    o_ref[...] = jnp.where(live != 0, score, 0.0)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("bits", "block_c", "block_n", "interpret"))
+def packed_linear_fwd_masked_pallas(tables, words, valid_words, bits: int, *,
+                                    block_c: int = 8, block_n: int = 512,
+                                    interpret: bool = False):
+    """``packed_linear_fwd_pallas`` over live rows only: ``valid_words``
+    uint32 [ceil(N/32)] is the packed row-validity bitmask
+    (``packing.pack_bitmask`` layout). Dead rows emit margin 0.0 —
+    callers also exclude them from the loss, so the exact fill value is
+    load-bearing only for bit-exactness vs
+    ``ref.packed_linear_fwd_masked_ref``. The mask is data: tombstone
+    churn never triggers a recompile.
+    """
+    cn, fp = tables.shape
+    n, w = words.shape
+    assert fp == w * (32 // bits) * (1 << bits), (tables.shape,
+                                                  words.shape, bits)
+    assert block_n % 32 == 0, block_n
+    nw = bitmask_width(n)
+    assert valid_words.shape == (nw,), (valid_words.shape, nw)
+    tp = _pad(tables, block_c, 0)
+    dbp = _pad(words, block_n, 0)
+    cm, nm = tp.shape[0], dbp.shape[0]
+    vw = valid_words.astype(jnp.uint32)
+    if n % 32:
+        vw = vw.at[-1].set(vw[-1] & jnp.uint32((1 << (n % 32)) - 1))
+    vw = jnp.pad(vw, (0, nm // 32 - nw)).reshape(nm // 32, 1)
+    grid = (cm // block_c, nm // block_n)
+    out = pl.pallas_call(
+        functools.partial(_fwd_masked_kernel, bits=bits, block_n=block_n),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_c, fp), lambda i, j: (i, 0)),
+            pl.BlockSpec((block_n, w), lambda i, j: (j, 0)),
+            pl.BlockSpec((block_n // 32, 1), lambda i, j: (j, 0)),
+        ],
+        out_specs=pl.BlockSpec((block_c, block_n), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((cm, nm), jnp.float32),
+        interpret=interpret,
+    )(tp, dbp, vw)
+    return out[:cn, :n]
+
+
+# -- backward: gradient scatter-accumulation into the weight tables -----------
+
+def _bwd_kernel(g_ref, db_ref, o_ref, acc_ref, *, bits: int):
+    j = pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    hot = onehot_tile(db_ref[...], bits)                 # [bn, F*P]
+    acc_ref[...] += jnp.dot(g_ref[...], hot,
+                            preferred_element_type=jnp.float32)
+
+    @pl.when(j == pl.num_programs(1) - 1)
+    def _finalize():
+        o_ref[...] = acc_ref[...]
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("bits", "block_c", "block_n", "interpret"))
+def packed_linear_bwd_pallas(g, words, bits: int, *, block_c: int = 8,
+                             block_n: int = 512, interpret: bool = False):
+    """Backward pass of ``packed_linear_fwd_pallas``: upstream margin
+    gradients g float32 [C, N] × words uint32 [N, W] -> weight-table
+    gradients float32 [C, F*P].
+
+    dTables[c, f*P + v] = sum over rows n with code(n, f) == v of
+    g[c, n] — each block's contributions enter through one in-register
+    one-hot tile and an MXU matmul, accumulated block-sequentially in
+    VMEM. Bit-exact vs ``ref.packed_linear_bwd_ref`` at the same
+    ``block_n``. Padded rows carry zero gradient columns, so they
+    contribute exact zeros.
+    """
+    cn, n = g.shape
+    n2, w = words.shape
+    assert n == n2, (g.shape, words.shape)
+    fp = w * (32 // bits) * (1 << bits)
+    gp = _pad(_pad(g.astype(jnp.float32), block_c, 0), block_n, 1)
+    dbp = _pad(words, block_n, 0)
+    cm, nm = gp.shape[0], dbp.shape[0]
+    grid = (cm // block_c, nm // block_n)
+    out = pl.pallas_call(
+        functools.partial(_bwd_kernel, bits=bits),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_c, block_n), lambda i, j: (i, j)),
+            pl.BlockSpec((block_n, w), lambda i, j: (j, 0)),
+        ],
+        out_specs=pl.BlockSpec((block_c, fp), lambda i, j: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((cm, fp), jnp.float32),
+        scratch_shapes=[pltpu.VMEM((block_c, fp), jnp.float32)],
+        interpret=interpret,
+    )(gp, dbp)
+    return out[:cn]
+
+
+def _bwd_masked_kernel(g_ref, db_ref, valid_ref, o_ref, acc_ref, *,
+                       bits: int, block_n: int):
+    j = pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    live = _expand_valid(valid_ref[...], block_n)
+    g = jnp.where(live != 0, g_ref[...], 0.0)
+    hot = onehot_tile(db_ref[...], bits)
+    acc_ref[...] += jnp.dot(g, hot, preferred_element_type=jnp.float32)
+
+    @pl.when(j == pl.num_programs(1) - 1)
+    def _finalize():
+        o_ref[...] = acc_ref[...]
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("bits", "block_c", "block_n", "interpret"))
+def packed_linear_bwd_masked_pallas(g, words, valid_words, bits: int, *,
+                                    block_c: int = 8, block_n: int = 512,
+                                    interpret: bool = False):
+    """``packed_linear_bwd_pallas`` over live rows only: gradients of
+    rows whose validity bit is clear are zeroed on device before the
+    scatter, so tombstoned examples never move a weight. Bit-exact vs
+    ``ref.packed_linear_bwd_masked_ref`` at the same ``block_n``; the
+    mask is data, not shape.
+    """
+    cn, n = g.shape
+    n2, w = words.shape
+    assert n == n2, (g.shape, words.shape)
+    assert block_n % 32 == 0, block_n
+    nw = bitmask_width(n)
+    assert valid_words.shape == (nw,), (valid_words.shape, nw)
+    fp = w * (32 // bits) * (1 << bits)
+    gp = _pad(_pad(g.astype(jnp.float32), block_c, 0), block_n, 1)
+    dbp = _pad(words, block_n, 0)
+    cm, nm = gp.shape[0], dbp.shape[0]
+    vw = valid_words.astype(jnp.uint32)
+    if n % 32:
+        vw = vw.at[-1].set(vw[-1] & jnp.uint32((1 << (n % 32)) - 1))
+    vw = jnp.pad(vw, (0, nm // 32 - nw)).reshape(nm // 32, 1)
+    grid = (cm // block_c, nm // block_n)
+    out = pl.pallas_call(
+        functools.partial(_bwd_masked_kernel, bits=bits, block_n=block_n),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_c, block_n), lambda i, j: (i, j)),
+            pl.BlockSpec((block_n, w), lambda i, j: (j, 0)),
+            pl.BlockSpec((block_n // 32, 1), lambda i, j: (j, 0)),
+        ],
+        out_specs=pl.BlockSpec((block_c, fp), lambda i, j: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((cm, fp), jnp.float32),
+        scratch_shapes=[pltpu.VMEM((block_c, fp), jnp.float32)],
+        interpret=interpret,
+    )(gp, dbp, vw)
+    return out[:cn]

@@ -17,7 +17,9 @@ __all__ = ["coded_project_ref", "pack_codes_ref", "collision_counts_ref",
            "packed_topk_masked_ref", "topk_blocked_ref", "topk_stable_ref",
            "lut_scores_ref", "lut_scores_rowwise_ref", "topk_scored_ref",
            "packed_lut_topk_ref", "packed_lut_topk_masked_ref",
-           "packed_lut_rerank_ref"]
+           "packed_lut_rerank_ref", "packed_linear_fwd_ref",
+           "packed_linear_fwd_masked_ref", "packed_linear_bwd_ref",
+           "packed_linear_bwd_masked_ref"]
 
 
 def coded_project_ref(x, r, spec: CodeSpec, q=None):
@@ -225,6 +227,82 @@ def packed_lut_rerank_ref(q_tables, cand_words, cand_valid, bits: int,
     scores = lut_scores_rowwise_ref(q_tables, cand_words, bits)
     scores = jnp.where(jnp.asarray(cand_valid) != 0, scores, -jnp.inf)
     return topk_scored_ref(scores, top_k)
+
+
+# -- packed linear classifier (repro.learn) -----------------------------------
+
+def packed_linear_fwd_ref(tables, words_db, bits: int):
+    """Margins of a packed linear model: class weight tables float
+    [C, F*P] (flat ``learn.features`` layout) × packed words uint32
+    [N, W] -> float32 [C, N].
+
+    Identical semantics to ``lut_scores_ref`` with the per-query tables
+    replaced by per-class weight tables: margin[c, n] sums, in (word,
+    field) order, the table entry each b-bit field of row n selects.
+    The oracle for ``packed_linear.packed_linear_fwd_pallas``
+    (bit-exact, including float accumulation order).
+    """
+    return lut_scores_ref(tables, words_db, bits)
+
+
+def packed_linear_fwd_masked_ref(tables, words_db, valid_words, bits: int):
+    """``packed_linear_fwd_ref`` over live rows only: ``valid_words`` is
+    the packed row-validity bitmask (``packing.pack_bitmask`` layout);
+    dead rows emit margin 0.0 (callers also drop them from the loss)."""
+    scores = lut_scores_ref(tables, words_db, bits)
+    live = _packing.unpack_bitmask(valid_words, words_db.shape[0])
+    return jnp.where(live[None, :], scores, 0.0)
+
+
+def _onehot_rows(words, bits: int):
+    """Dense one-hot of every field slot: uint32 [n, W] -> float32
+    [n, F*P] in the flat table layout (phantom field slots included)."""
+    p = 1 << bits
+    f = words.shape[-1] * (32 // bits)
+    codes = _packing.unpack_codes(words, bits, f)          # [n, F]
+    hot = codes[..., None] == jnp.arange(p, dtype=jnp.int32)
+    return hot.reshape(words.shape[0], f * p).astype(jnp.float32)
+
+
+def packed_linear_bwd_ref(g, words_db, bits: int, *, block_c: int = 8,
+                          block_n: int = 512):
+    """Weight-table gradients: upstream margin gradients g float32
+    [C, N] × packed words [N, W] -> float32 [C, F*P].
+
+    dTables[c, f*P + v] = sum over rows n whose field f holds code v of
+    g[c, n]. The accumulation order is the contract with the fused
+    kernel (``packed_linear.packed_linear_bwd_pallas``): rows are
+    processed in ``block_n`` chunks (g zero-padded, classes padded to
+    ``block_c``, matching the kernel's tile shapes exactly), each chunk
+    enters through one one-hot matmul, and chunk results add
+    sequentially — bit-exact at equal block sizes.
+    """
+    c, n = g.shape
+    g = jnp.asarray(g, jnp.float32)
+    pad_c, pad_n = (-c) % block_c, (-n) % block_n
+    if pad_c or pad_n:
+        g = jnp.pad(g, ((0, pad_c), (0, pad_n)))
+    if pad_n:
+        words_db = jnp.pad(words_db, ((0, pad_n), (0, 0)))
+    p = 1 << bits
+    fp = words_db.shape[1] * (32 // bits) * p
+    acc = jnp.zeros((g.shape[0], fp), jnp.float32)
+    for lo in range(0, g.shape[1], block_n):
+        hot = _onehot_rows(words_db[lo:lo + block_n], bits)
+        acc = acc + jnp.dot(g[:, lo:lo + block_n], hot,
+                            preferred_element_type=jnp.float32)
+    return acc[:c]
+
+
+def packed_linear_bwd_masked_ref(g, words_db, valid_words, bits: int, *,
+                                 block_c: int = 8, block_n: int = 512):
+    """``packed_linear_bwd_ref`` over live rows only: gradient columns
+    of rows whose validity bit is clear are zeroed before the scatter,
+    so tombstoned examples contribute exactly nothing."""
+    live = _packing.unpack_bitmask(valid_words, words_db.shape[0])
+    g = jnp.where(live[None, :], jnp.asarray(g, jnp.float32), 0.0)
+    return packed_linear_bwd_ref(g, words_db, bits, block_c=block_c,
+                                 block_n=block_n)
 
 
 def packed_topk_masked_ref(words_q, words_db, valid_words, bits: int, k: int,

@@ -1,0 +1,32 @@
+"""Linear-classifier training directly on packed codes (paper §6).
+
+The paper's second headline application — linear SVMs on one-hot
+expanded coded projections — without ever materializing the one-hot
+matrix: the feature dot product is a per-projection weight-table
+gather, so training runs on the same packed words the search engines
+serve from.
+
+features — ``PackedFeatureSpec``: the flat [k, 2^b] weight-table
+          layout shared with ``rank.RankTables``, phantom-column
+          masking, row normalization as a scalar table pre-scale,
+          dense<->packed weight converters; ``expand_codes`` (the
+          dense oracle path, ex-``core.svm``)
+linear   — ``PackedLinearModel`` + ``train_packed_linear``: squared
+          hinge / logistic objectives, margins and gradients through
+          the fused ``kernels.packed_linear`` forward/backward, Adam
+          with cosine decay under one donated jit
+trainer  — streaming drivers: minibatch with donated weight buffers,
+          batches straight off ``ann.CodeStore`` (``fit_store``) and a
+          churning ``index.SegmentLogStore`` (``fit_log`` — masked
+          per-segment grads, labels keyed by external id), shard_map
+          data-parallel gradient all-reduce (``packed_grads_sharded``)
+
+(dense compat wrappers: ``repro.core.svm``; serving endpoint:
+``repro.serve.ann_service`` ``classify``)
+"""
+from repro.learn.features import (PackedFeatureSpec, expand_codes,  # noqa: F401
+                                  feature_spec_for)
+from repro.learn.linear import (LearnConfig, PackedLinearModel,  # noqa: F401
+                                train_dense_linear, train_packed_linear)
+from repro.learn.trainer import (fit_log, fit_store, fit_words,  # noqa: F401
+                                 packed_grads_sharded)

@@ -1,0 +1,157 @@
+"""Packed-code feature geometry for linear models (paper §6 features).
+
+The paper's SVM features are the one-hot expansion of the codes: row i
+is k blocks of width n_codes, one 1.0 per block, scaled to unit norm.
+``repro.learn`` never materializes that matrix — a linear model over it
+is exactly a per-projection weight-table gather over the packed words —
+but every layer still needs its geometry:
+
+* the **flat table layout** shared with ``rank.RankTables`` and the
+  ``kernels.packed_linear`` kernels: F = n_words * (32/bits) field
+  slots × P = 2**bits entries per slot. F*P >= k*n_codes because the
+  packed field width rounds up to a power of two and the word width
+  rounds k up to a multiple of 32/bits — the surplus columns are
+  **phantoms**: field slots >= k decode the zero-padding of the last
+  word, entries >= n_codes are code values no encoder emits.
+* the **row normalization**: every row has exactly k ones, so unit-norm
+  scaling is the constant 1/sqrt(k) — applied as a *pre-scale on the
+  tables/margins* (one scalar multiply), never on features.
+
+``PackedFeatureSpec`` owns both, plus the dense<->packed weight-layout
+converters the parity tests and the compat path use. Invariant (kept by
+``learn.linear``): weight tables carry exact zeros in every phantom
+column, so packed margins, L2 regularization and gradients agree with
+the dense ``expand_codes`` path to float rounding.
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+
+import jax.numpy as jnp
+
+from repro.core import packing as _packing
+from repro.core.schemes import CodeSpec
+
+__all__ = ["PackedFeatureSpec", "feature_spec_for", "expand_codes"]
+
+
+def expand_codes(codes, spec: CodeSpec, normalize: bool = True):
+    """One-hot expand codes [n, k] -> dense features [n, k * n_codes]
+    (paper §6).
+
+    Each projection contributes one 1 in its n_codes-wide slot; rows are
+    scaled to unit norm (1/sqrt(k)) per the paper's recommended
+    practice. This is the *oracle* feature path — O(n * k * n_codes)
+    floats — kept for parity checks and toy sizes; training at scale
+    goes through ``PackedFeatureSpec`` + the ``kernels.packed_linear``
+    kernels and never builds this matrix.
+    """
+    import jax
+    n, k = codes.shape
+    one_hot = jax.nn.one_hot(codes, spec.n_codes, dtype=jnp.float32)
+    feats = one_hot.reshape(n, k * spec.n_codes)
+    if normalize:
+        feats = feats / jnp.sqrt(jnp.asarray(float(k)))
+    return feats
+
+
+@dataclass(frozen=True)
+class PackedFeatureSpec:
+    """Geometry of one packed-code feature space: (k, bits, n_codes)."""
+    k: int                 # projections per row
+    bits: int              # packed field width (1/2/4/8/16)
+    n_codes: int           # real code values per projection (<= 2**bits)
+    normalize: bool = True  # unit-norm rows (1/sqrt(k) pre-scale)
+
+    def __post_init__(self):
+        if self.n_codes > (1 << self.bits):
+            raise ValueError(f"n_codes {self.n_codes} does not fit "
+                             f"{self.bits}-bit fields")
+
+    # -- layout --------------------------------------------------------------
+    @property
+    def n_words(self) -> int:
+        """uint32 words per packed row: ceil(k / (32/bits))."""
+        return _packing.packed_width(self.k, self.bits)
+
+    @property
+    def n_entries(self) -> int:
+        """Table entries per field slot (2**bits; >= n_codes)."""
+        return 1 << self.bits
+
+    @property
+    def n_fields(self) -> int:
+        """Field slots per row: n_words * (32/bits) (>= k)."""
+        return self.n_words * _packing.codes_per_word(self.bits)
+
+    @property
+    def table_width(self) -> int:
+        """Flat weight-table width F*P (phantom columns included)."""
+        return self.n_fields * self.n_entries
+
+    @property
+    def dense_dim(self) -> int:
+        """Width of the dense ``expand_codes`` feature space: k*n_codes."""
+        return self.k * self.n_codes
+
+    @property
+    def scale(self) -> float:
+        """Row-normalization constant applied as a margin pre-scale:
+        1/sqrt(k) when ``normalize`` (every row has exactly k ones)."""
+        return 1.0 / math.sqrt(self.k) if self.normalize else 1.0
+
+    def entry_mask(self):
+        """float32 [table_width] with 1.0 at real columns, 0.0 at
+        phantoms (field slot >= k, or entry >= n_codes).
+
+        Multiplied into every weight-table gradient so phantom columns
+        — which the raw backward kernel *does* touch, because padded
+        fields decode to code 0 for every row — never learn; with
+        zero-initialized tables they stay exactly zero forever, which is
+        what makes packed L2/margins equal the dense path's.
+        """
+        field = jnp.arange(self.n_fields)[:, None]
+        entry = jnp.arange(self.n_entries)[None, :]
+        m = (field < self.k) & (entry < self.n_codes)
+        return m.astype(jnp.float32).reshape(self.table_width)
+
+    # -- dense <-> packed weight layout --------------------------------------
+    def tables_from_dense(self, w_dense):
+        """Dense weights [..., k*n_codes] (``expand_codes`` layout) ->
+        flat tables [..., table_width], phantom columns zero."""
+        w = jnp.asarray(w_dense, jnp.float32)
+        lead = w.shape[:-1]
+        w = w.reshape(lead + (self.k, self.n_codes))
+        w = jnp.pad(w, [(0, 0)] * len(lead)
+                    + [(0, self.n_fields - self.k),
+                       (0, self.n_entries - self.n_codes)])
+        return w.reshape(lead + (self.table_width,))
+
+    def dense_from_tables(self, tables):
+        """Inverse of ``tables_from_dense``: drop the phantom columns."""
+        t = jnp.asarray(tables)
+        lead = t.shape[:-1]
+        t = t.reshape(lead + (self.n_fields, self.n_entries))
+        return t[..., :self.k, :self.n_codes].reshape(
+            lead + (self.dense_dim,))
+
+
+def feature_spec_for(spec, k: int = None,
+                     normalize: bool = True) -> PackedFeatureSpec:
+    """Feature spec from a ``CodeSpec`` (+ k) or a sketcher
+    (``CodedRandomProjection``: spec — and, when ``k`` is omitted, k —
+    taken from it; an explicit ``k`` wins either way)."""
+    if not isinstance(spec, CodeSpec):
+        inner = getattr(spec, "spec", None)
+        if not isinstance(inner, CodeSpec):
+            raise TypeError(f"spec must be CodeSpec or sketcher, got "
+                            f"{spec!r}")
+        if k is None:
+            k = spec.cfg.k
+        spec = inner
+    if k is None:
+        raise TypeError("k is required when passing a bare CodeSpec "
+                        "(or pass a CodedRandomProjection)")
+    return PackedFeatureSpec(k=k, bits=spec.bits, n_codes=spec.n_codes,
+                             normalize=normalize)

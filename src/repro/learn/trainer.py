@@ -1,0 +1,266 @@
+"""Training drivers: streaming batches from the stores, sharded grads.
+
+``learn.linear`` owns one gradient evaluation; this module owns where
+the rows come from and how steps are paced:
+
+``fit_words``
+    The workhorse: full-batch (one donated jit around the whole Adam
+    scan) or streaming minibatch (``cfg.batch > 0``: a per-step donated
+    update executable — weight and optimizer buffers update in place,
+    one compile for every step — fed by host-side index sampling and a
+    device gather, so only O(batch) rows are ever touched per step).
+    With a ``mesh``, every gradient runs data-parallel under
+    ``shard_map`` (``packed_grads_sharded``).
+
+``fit_store``
+    Batches straight off an ``ann.CodeStore`` — the packed corpus that
+    serves search doubles as the training set, zero extra copies.
+
+``fit_log``
+    Training over a *live mutable index* (``index.SegmentLogStore``):
+    per-segment masked forward/backward (tombstoned and unwritten rows
+    contribute exactly nothing), per-segment data grads summed in log
+    order, the L2 term added once. Labels are keyed by *external* id,
+    so churn (deletes, upserts, seals, compaction) never invalidates
+    the label map. Matches training on a fresh store of the live rows
+    up to float summation order (``tests/test_learn.py``).
+
+``packed_grads_sharded``
+    One data-parallel gradient: rows row-sharded over ``mesh[axis]``
+    (padding carried as dead validity bits, never as shapes), per-shard
+    data grads all-reduced with ``psum``, regularizer added once on the
+    replicated result — the same ``parallel.sharding`` machinery the LM
+    stack trains with.
+"""
+from __future__ import annotations
+
+import functools
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, PartitionSpec as P
+
+from repro.core import packing as _packing
+from repro.learn.features import PackedFeatureSpec, feature_spec_for
+from repro.learn.linear import (LearnConfig, PackedLinearModel,
+                                adam_cosine_train, adam_update,
+                                full_batch_fit, packed_data_grads,
+                                packed_loss_and_grads, targets_pm)
+from repro.parallel.sharding import shard_map_unchecked
+
+__all__ = ["fit_words", "fit_store", "fit_log", "packed_grads_sharded"]
+
+
+def _as_fspec(spec, k: int = None,
+              normalize: bool = True) -> PackedFeatureSpec:
+    """Accept a PackedFeatureSpec, a CodeSpec (+ k), or a sketcher."""
+    if isinstance(spec, PackedFeatureSpec):
+        return spec
+    return feature_spec_for(spec, k, normalize=normalize)
+
+
+def _zeros_params(fspec: PackedFeatureSpec, n_outputs: int):
+    return (jnp.zeros((n_outputs, fspec.table_width), jnp.float32),
+            jnp.zeros((n_outputs,), jnp.float32))
+
+
+# -- sharded gradients --------------------------------------------------------
+
+def packed_grads_sharded(params, words, y_pm, fspec: PackedFeatureSpec,
+                         mesh: Mesh, axis: str = "data", *, c: float = 1.0,
+                         loss: str = "sq_hinge", valid_words=None,
+                         impl: str = "auto"):
+    """One data-parallel full objective + gradient evaluation.
+
+    Rows of ``words`` uint32 [n, W] (and target columns of ``y_pm``
+    [C, n]) are sharded over ``mesh[axis]``; each shard runs the masked
+    fused kernels on its local block, data grads are ``psum``-reduced,
+    and the L2 term is added once to the replicated result. Row padding
+    up to 32 * mesh-size is carried as dead validity bits (data, not
+    shape). Returns (loss, (dTables, dBias)), numerically equal to the
+    unsharded ``packed_loss_and_grads`` up to float summation order.
+    """
+    n = words.shape[0]
+    n_sh = mesh.shape[axis]
+    live = (jnp.ones((n,), bool) if valid_words is None
+            else _packing.unpack_bitmask(valid_words, n))
+    pad = (-n) % (32 * n_sh)
+    if pad:
+        words = jnp.pad(words, ((0, pad), (0, 0)))
+        y_pm = jnp.pad(y_pm, ((0, 0), (0, pad)), constant_values=1.0)
+        live = jnp.pad(live, (0, pad))
+    vw = _packing.pack_bitmask(live)
+
+    def local(tab, b, w_, y_, v_):
+        dl, (dt, db) = packed_data_grads((tab, b), w_, y_, fspec, c=c,
+                                         loss=loss, valid_words=v_,
+                                         impl=impl)
+        return (jax.lax.psum(dl, axis), jax.lax.psum(dt, axis),
+                jax.lax.psum(db, axis))
+
+    fn = shard_map_unchecked(
+        local, mesh,
+        in_specs=(P(None, None), P(None), P(axis, None), P(None, axis),
+                  P(axis)),
+        out_specs=(P(), P(None, None), P(None)))
+    tables, bias = params
+    data_loss, dt, db = fn(tables, bias, words, y_pm, vw)
+    return (0.5 * jnp.sum(tables * tables) + data_loss,
+            (dt + tables, db))
+
+
+# -- fitting ------------------------------------------------------------------
+
+def _fit_full_batch(words, y_pm, fspec, cfg, valid_words, mesh, axis):
+    grad_fn = None
+    if mesh is not None:
+        def grad_fn(p):
+            return packed_grads_sharded(p, words, y_pm, fspec, mesh, axis,
+                                        c=cfg.c, loss=cfg.loss,
+                                        valid_words=valid_words,
+                                        impl=cfg.impl)[1]
+    return full_batch_fit(words, y_pm, fspec, cfg,
+                          valid_words=valid_words, grad_fn=grad_fn)
+
+
+def _fit_minibatch(words, y_pm, fspec, cfg, mesh, axis):
+    n = words.shape[0]
+    if cfg.batch > n:
+        raise ValueError(f"batch {cfg.batch} > rows {n}")
+    init = _zeros_params(fspec, y_pm.shape[0])
+
+    @functools.partial(jax.jit, donate_argnums=(0, 1, 2))
+    def step(params, m, v, i, bw, by):
+        if mesh is not None:
+            g = packed_grads_sharded(params, bw, by, fspec, mesh, axis,
+                                     c=cfg.c, loss=cfg.loss,
+                                     impl=cfg.impl)[1]
+        else:
+            g = packed_loss_and_grads(params, bw, by, fspec, c=cfg.c,
+                                      loss=cfg.loss, impl=cfg.impl)[1]
+        return adam_update(params, m, v, g, i, cfg.steps, cfg.lr)
+
+    rng = np.random.default_rng(cfg.seed)
+    params = init
+    m = jax.tree.map(jnp.zeros_like, init)
+    v = jax.tree.map(jnp.zeros_like, init)
+    for i in range(cfg.steps):
+        idx = jnp.asarray(rng.choice(n, size=cfg.batch, replace=False))
+        params, m, v = step(params, m, v, jnp.float32(i),
+                            jnp.take(words, idx, axis=0),
+                            jnp.take(y_pm, idx, axis=1))
+    return params
+
+
+def fit_words(words, y, spec, cfg: LearnConfig = LearnConfig(), *,
+              k: int = None, valid_words=None, n_outputs: int = 1,
+              normalize: bool = True, mesh: Mesh = None,
+              axis: str = "data") -> PackedLinearModel:
+    """Train a packed linear model on uint32 words [n, W].
+
+    ``spec``: PackedFeatureSpec, CodeSpec (+ ``k``), or a sketcher. y:
+    ±1 [n] (binary) or int class ids (``n_outputs`` > 1). ``cfg.batch``
+    0 trains full-batch under one donated jit'd Adam scan; > 0 streams
+    minibatches through a per-step donated update executable (weights
+    update in place, one compile total). ``valid_words`` masks
+    tombstoned rows (full-batch only); ``mesh`` runs every gradient
+    data-parallel over ``mesh[axis]``.
+    """
+    fspec = _as_fspec(spec, k, normalize=normalize)
+    y_pm = targets_pm(y, n_outputs)
+    if cfg.batch:
+        if valid_words is not None:
+            raise ValueError("minibatch + validity mask unsupported; "
+                             "train full-batch or drop dead rows")
+        tables, bias = _fit_minibatch(words, y_pm, fspec, cfg, mesh, axis)
+    else:
+        tables, bias = _fit_full_batch(words, y_pm, fspec, cfg,
+                                       valid_words, mesh, axis)
+    return PackedLinearModel(fspec=fspec, tables=tables, bias=bias,
+                             loss=cfg.loss)
+
+
+def fit_store(store, y, spec, cfg: LearnConfig = LearnConfig(), *,
+              n_outputs: int = 1, normalize: bool = True,
+              mesh: Mesh = None, axis: str = "data") -> PackedLinearModel:
+    """Train straight off an ``ann.CodeStore``: the packed corpus that
+    serves search is the training set — no unpack, no copy. ``spec``
+    supplies n_codes (a CodeSpec or sketcher; k/bits are checked
+    against the store)."""
+    fspec = _as_fspec(spec, getattr(store, "k", None),
+                      normalize=normalize)
+    if (fspec.k, fspec.bits) != (store.k, store.bits):
+        raise ValueError(f"spec k/bits {(fspec.k, fspec.bits)} != store "
+                         f"{(store.k, store.bits)}")
+    return fit_words(store.words, y, fspec, cfg, n_outputs=n_outputs,
+                     mesh=mesh, axis=axis)
+
+
+def _segment_targets(seg, labels, n_outputs: int):
+    """Per-segment ±1 targets [C, cap] from an external-id label map.
+
+    ``labels``: mapping id -> label, or callable(ids int64 [m]) ->
+    labels [m]. Only live rows are looked up (KeyError on a live id
+    missing from a mapping); dead and unwritten slots get a +1 filler
+    the validity mask zeroes out of loss and gradient anyway.
+    """
+    fill = 1
+    y = np.full(seg.cap, fill, np.int64)
+    rows = seg.live_rows()
+    if rows.size:
+        ids = seg.ids[rows]
+        if callable(labels):
+            y[rows] = np.asarray(labels(ids), np.int64)
+        else:
+            y[rows] = [int(labels[int(i)]) for i in ids]
+    return targets_pm(jnp.asarray(y), n_outputs)
+
+
+def fit_log(store, labels, spec, cfg: LearnConfig = LearnConfig(), *,
+            n_outputs: int = 1,
+            normalize: bool = True) -> PackedLinearModel:
+    """Train over a live mutable index (``index.SegmentLogStore``).
+
+    Each step runs the masked fused kernels per segment — tombstoned
+    and unwritten tail rows contribute exactly nothing — sums the
+    per-segment data grads in log order and adds the L2 term once.
+    ``labels`` maps *external* ids to labels (dict-like or
+    callable(ids) -> labels), so deletes/upserts/compaction between
+    calls never invalidate it. The segment snapshot is taken at call
+    time; mutate-then-refit to pick up churn.
+    """
+    if cfg.batch:
+        raise ValueError("fit_log trains full-batch over the segment "
+                         "snapshot; cfg.batch is unsupported (stream "
+                         "minibatches with fit_words over live_words())")
+    fspec = _as_fspec(spec, store.k, normalize=normalize)
+    if (fspec.k, fspec.bits) != (store.k, store.bits):
+        raise ValueError(f"spec k/bits {(fspec.k, fspec.bits)} != store "
+                         f"{(store.k, store.bits)}")
+    if store.n_live == 0:
+        raise ValueError("store has no live rows")
+    parts = tuple(
+        (seg.words, seg.valid_dev(), _segment_targets(seg, labels,
+                                                      n_outputs))
+        for seg in store.segments() if seg.live)
+    init = _zeros_params(fspec, n_outputs)
+
+    def run(params, parts):
+        def grad_fn(p):
+            tables, _ = p
+            dt = jnp.zeros_like(tables)
+            db = jnp.zeros_like(p[1])
+            for words, vw, y_pm in parts:
+                _, (dt_s, db_s) = packed_data_grads(
+                    p, words, y_pm, fspec, c=cfg.c, loss=cfg.loss,
+                    valid_words=vw, impl=cfg.impl)
+                dt = dt + dt_s
+                db = db + db_s
+            return (dt + tables, db)
+
+        return adam_cosine_train(params, grad_fn, cfg.steps, cfg.lr)
+
+    tables, bias = jax.jit(run, donate_argnums=(0,))(init, parts)
+    return PackedLinearModel(fspec=fspec, tables=tables, bias=bias,
+                             loss=cfg.loss)

@@ -19,6 +19,12 @@ the search knobs. Entries are valid for exactly one engine
 ``generation``: any index mutation bumps the generation and the next
 flush drops the whole cache, so a cached hit is always bit-identical to
 a fresh search.
+
+Classification: attach a trained ``repro.learn.PackedLinearModel``
+(``set_classifier``) and ``classify`` runs the same fused
+project→code→pack front end as search (the engine's shared
+``QueryCoder``), then the packed-linear forward kernel — one service,
+two workloads over one set of codes.
 """
 from __future__ import annotations
 
@@ -30,6 +36,7 @@ import jax.numpy as jnp
 
 from repro.ann.engine import SearchConfig
 from repro.core import packing as _packing
+from repro.kernels import ops as _ops
 
 __all__ = ["AnnServiceConfig", "AnnService"]
 
@@ -50,9 +57,11 @@ class AnnServiceConfig:
 
 @dataclass
 class AnnService:
-    """Queue + pad-to-bucket batching + result LRU over a shared engine."""
+    """Queue + pad-to-bucket batching + result LRU over a shared engine;
+    optionally also a classification endpoint over the same codes."""
     engine: object
     cfg: AnnServiceConfig = field(default_factory=AnnServiceConfig)
+    classifier: object = None     # learn.PackedLinearModel (optional)
 
     def __post_init__(self):
         self._queue = []          # [(ticket, vector [D])]
@@ -102,6 +111,51 @@ class AnnService:
 
     def compact(self, *args, **kwargs) -> dict:
         return self._mutable().compact(*args, **kwargs)
+
+    # -- classification endpoint ---------------------------------------------
+    def set_classifier(self, model) -> "AnnService":
+        """Attach a trained ``learn.PackedLinearModel`` (k/bits must
+        match the engine's store); returns self for chaining."""
+        store = self.engine.store
+        if (model.fspec.k, model.fspec.bits) != (store.k, store.bits):
+            raise ValueError(
+                f"classifier k/bits {(model.fspec.k, model.fspec.bits)} "
+                f"!= store {(store.k, store.bits)}")
+        self.classifier = model
+        return self
+
+    def classify(self, x):
+        """Classify vectors x [m, D] -> (labels int [m], margins f32
+        [C, m]) through the engine's shared fused query coder and the
+        packed-linear forward kernel; requires ``set_classifier``.
+
+        Batches are padded up to the service's bucket shapes (slices of
+        at most the largest bucket), so classify traffic shares the
+        search path's never-recompile property: one executable per
+        bucket, whatever m arrives.
+        """
+        if self.classifier is None:
+            raise TypeError("no classifier attached; call "
+                            "set_classifier(model) first")
+        x = jnp.asarray(x)
+        if x.ndim != 2:
+            raise ValueError(f"classify takes a batch [m, D], got {x.shape}")
+        preds, margs = [], []
+        max_b = self.cfg.buckets[-1]
+        for lo in range(0, x.shape[0], max_b):
+            sub = x[lo:lo + max_b]
+            n = sub.shape[0]
+            b = self._bucket_for(n)
+            if b > n:
+                sub = jnp.pad(sub, ((0, b - n), (0, 0)))
+            codes = self.engine.encode_queries(sub, impl=self.cfg.impl)
+            words = _ops.pack_codes(codes, self.engine.store.bits,
+                                    impl=self.cfg.impl)
+            m = self.classifier.margins(words, impl=self.cfg.impl)
+            preds.append(np.asarray(
+                self.classifier.predict_from_margins(m))[:n])
+            margs.append(np.asarray(m)[:, :n])
+        return np.concatenate(preds), np.concatenate(margs, axis=1)
 
     # -- batch execution -----------------------------------------------------
     def _bucket_for(self, n: int) -> int:

@@ -1,0 +1,450 @@
+"""repro.learn: packed-linear kernels vs oracles, dense-path parity,
+masked training over a churned segment log, sharded gradients, serving."""
+import numpy as np
+import pytest
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh
+
+from repro.core import packing as PK
+from repro.core.schemes import CodeSpec, encode
+from repro.core.svm import SVMConfig, expand_codes, svm_accuracy, \
+    train_linear_svm
+from repro.index import SegmentLogStore
+from repro.kernels import ref
+from repro.kernels.packed_linear import (onehot_tile,
+                                         packed_linear_bwd_masked_pallas,
+                                         packed_linear_bwd_pallas,
+                                         packed_linear_fwd_masked_pallas,
+                                         packed_linear_fwd_pallas)
+from repro.learn import (LearnConfig, PackedLinearModel, feature_spec_for,
+                         fit_log, fit_store, fit_words,
+                         packed_grads_sharded, train_dense_linear,
+                         train_packed_linear)
+from repro.learn.linear import (packed_loss_and_grads, packed_margins,
+                                targets_pm, _dense_objective)
+
+SPECS = [("2bit", 0.75), ("sign", 1.0), ("uniform", 1.0)]
+
+
+def _rand_problem(key, scheme, w, k, n_cls, n):
+    """Random tables/words/grads covering the full 2^bits code range."""
+    spec = CodeSpec(scheme, w)
+    p = 1 << spec.bits
+    fp = PK.packed_width(k, spec.bits) * (32 // spec.bits) * p
+    kc, kt, kg = jax.random.split(key, 3)
+    words = PK.pack_codes(jax.random.randint(kc, (n, k), 0, p), spec.bits)
+    tab = jax.random.normal(kt, (n_cls, fp))
+    g = jax.random.normal(kg, (n_cls, n))
+    return spec, tab, words, g
+
+
+# -- kernels vs oracles -------------------------------------------------------
+
+@pytest.mark.parametrize("scheme,w", SPECS)
+@pytest.mark.parametrize("n_cls,n,k", [(1, 700, 64), (3, 129, 33)])
+def test_fwd_kernel_bit_exact(scheme, w, n_cls, n, k):
+    spec, tab, words, _ = _rand_problem(jax.random.PRNGKey(n * k), scheme,
+                                        w, k, n_cls, n)
+    got = packed_linear_fwd_pallas(tab, words, spec.bits, interpret=True,
+                                   block_c=8, block_n=128)
+    want = ref.packed_linear_fwd_ref(tab, words, spec.bits)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+@pytest.mark.parametrize("density", [0.0, 0.5, 1.0])
+def test_fwd_masked_kernel_bit_exact(density):
+    n_cls, n, k = 2, 300, 48
+    key = jax.random.PRNGKey(int(density * 7))
+    spec, tab, words, _ = _rand_problem(key, "2bit", 0.75, k, n_cls, n)
+    flags = jax.random.bernoulli(jax.random.fold_in(key, 9), density, (n,))
+    vw = PK.pack_bitmask(flags)
+    got = packed_linear_fwd_masked_pallas(tab, words, vw, spec.bits,
+                                          interpret=True, block_c=8,
+                                          block_n=128)
+    want = ref.packed_linear_fwd_masked_ref(tab, words, vw, spec.bits)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+    # dead rows emit exactly 0.0
+    dead = ~np.asarray(flags)
+    assert (np.asarray(got)[:, dead] == 0.0).all()
+
+
+@pytest.mark.parametrize("scheme,w", SPECS)
+@pytest.mark.parametrize("n_cls,n,k", [(1, 700, 64), (5, 129, 24)])
+def test_bwd_kernel_bit_exact(scheme, w, n_cls, n, k):
+    spec, _, words, g = _rand_problem(jax.random.PRNGKey(n + k), scheme,
+                                      w, k, n_cls, n)
+    got = packed_linear_bwd_pallas(g, words, spec.bits, interpret=True,
+                                   block_c=8, block_n=128)
+    want = ref.packed_linear_bwd_ref(g, words, spec.bits, block_c=8,
+                                     block_n=128)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+@pytest.mark.parametrize("density", [0.0, 0.5, 1.0])
+def test_bwd_masked_kernel_bit_exact(density):
+    n_cls, n, k = 2, 420, 40
+    key = jax.random.PRNGKey(3 + int(density * 5))
+    spec, _, words, g = _rand_problem(key, "2bit", 0.75, k, n_cls, n)
+    flags = jax.random.bernoulli(jax.random.fold_in(key, 4), density, (n,))
+    vw = PK.pack_bitmask(flags)
+    got = packed_linear_bwd_masked_pallas(g, words, vw, spec.bits,
+                                          interpret=True, block_c=8,
+                                          block_n=128)
+    want = ref.packed_linear_bwd_masked_ref(g, words, vw, spec.bits,
+                                            block_c=8, block_n=128)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+    # masking == zeroing dead rows' gradients by hand
+    g0 = jnp.where(jnp.asarray(flags)[None, :], g, 0.0)
+    manual = ref.packed_linear_bwd_ref(g0, words, spec.bits, block_c=8,
+                                       block_n=128)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(manual))
+
+
+def test_onehot_tile_matches_dense_expansion():
+    """The kernel's in-register one-hot equals expand_codes on the real
+    columns and is zero-free on phantom entries only where expected."""
+    spec = CodeSpec("2bit", 0.75)
+    k, n = 30, 50
+    fspec = feature_spec_for(spec, k)
+    codes = jax.random.randint(jax.random.PRNGKey(0), (n, k), 0,
+                               spec.n_codes)
+    words = PK.pack_codes(codes, spec.bits)
+    hot = onehot_tile(words, spec.bits)
+    dense = expand_codes(codes, spec, normalize=False)
+    np.testing.assert_array_equal(
+        np.asarray(fspec.dense_from_tables(hot)), np.asarray(dense))
+    # each row sets exactly n_fields entries (phantom fields hit code 0)
+    assert (np.asarray(hot).sum(axis=1) == fspec.n_fields).all()
+
+
+# -- feature geometry ---------------------------------------------------------
+
+def test_feature_spec_layout_and_converters():
+    fspec = feature_spec_for(CodeSpec("uniform", 1.0), 30)
+    assert fspec.n_codes == 12 and fspec.bits == 4
+    assert fspec.n_fields >= fspec.k and fspec.n_entries >= fspec.n_codes
+    assert fspec.table_width == fspec.n_fields * fspec.n_entries
+    w = jax.random.normal(jax.random.PRNGKey(1), (2, fspec.dense_dim))
+    t = fspec.tables_from_dense(w)
+    assert t.shape == (2, fspec.table_width)
+    np.testing.assert_array_equal(np.asarray(fspec.dense_from_tables(t)),
+                                  np.asarray(w))
+    # phantom columns land exactly where entry_mask is zero
+    mask = np.asarray(fspec.entry_mask())
+    assert (np.asarray(t)[:, mask == 0.0] == 0.0).all()
+    assert mask.sum() == fspec.dense_dim
+
+
+def test_feature_spec_rejects_overflow():
+    with pytest.raises(ValueError):
+        from repro.learn import PackedFeatureSpec
+        PackedFeatureSpec(k=8, bits=1, n_codes=4)
+
+
+# -- gradients and margins vs the dense path ----------------------------------
+
+def _planted(key, spec, k, n, sep=0.4):
+    y = jnp.where(jax.random.uniform(key, (n,)) < 0.5, 1.0, -1.0)
+    mu = jax.random.normal(jax.random.fold_in(key, 1), (k,)) * sep
+    z = jax.random.normal(jax.random.fold_in(key, 2), (n, k)) \
+        + y[:, None] * mu
+    codes = encode(z, spec)
+    return codes, PK.pack_codes(codes, spec.bits), y
+
+
+@pytest.mark.parametrize("loss", ["sq_hinge", "logistic"])
+def test_packed_grads_match_dense_autodiff(loss):
+    """The fused analytic gradient equals jax.grad through the explicit
+    one-hot feature matrix (same objective, float tolerance)."""
+    spec = CodeSpec("2bit", 0.75)
+    k, n = 48, 300
+    fspec = feature_spec_for(spec, k)
+    codes, words, y = _planted(jax.random.PRNGKey(0), spec, k, n)
+    wt = jax.random.normal(jax.random.PRNGKey(5),
+                           (1, fspec.table_width)) * fspec.entry_mask()
+    b = jnp.asarray([0.3])
+    lp, (dt, db) = packed_loss_and_grads((wt, b), words, targets_pm(y, 1),
+                                         fspec, c=1.0, loss=loss)
+    x = expand_codes(codes, spec)
+    wd = fspec.dense_from_tables(wt)[0]
+    ld = _dense_objective((wd, b[0]), x, y, 1.0, loss)
+    gd = jax.grad(_dense_objective)((wd, b[0]), x, y, 1.0, loss)
+    np.testing.assert_allclose(float(lp), float(ld), rtol=1e-5)
+    np.testing.assert_allclose(np.asarray(fspec.dense_from_tables(dt)[0]),
+                               np.asarray(gd[0]), rtol=1e-4, atol=1e-5)
+    np.testing.assert_allclose(float(db[0]), float(gd[1]), rtol=1e-4,
+                               atol=1e-5)
+    # phantom columns never receive gradient
+    mask = np.asarray(fspec.entry_mask())
+    assert (np.asarray(dt)[:, mask == 0.0] == 0.0).all()
+
+
+def test_packed_margins_equal_dense_matmul():
+    spec = CodeSpec("uniform", 1.0)
+    k, n = 40, 200
+    fspec = feature_spec_for(spec, k)
+    codes, words, _ = _planted(jax.random.PRNGKey(2), spec, k, n)
+    wt = jax.random.normal(jax.random.PRNGKey(3),
+                           (2, fspec.table_width)) * fspec.entry_mask()
+    b = jnp.asarray([0.1, -0.2])
+    m = packed_margins(wt, b, words, fspec)
+    x = expand_codes(codes, spec)           # includes the 1/sqrt(k) norm
+    md = x @ fspec.dense_from_tables(wt).T + b[None, :]
+    np.testing.assert_allclose(np.asarray(m), np.asarray(md).T, rtol=1e-5,
+                               atol=1e-5)
+
+
+@pytest.mark.parametrize("scheme,w", SPECS)
+def test_training_parity_dense_vs_packed(scheme, w):
+    """Acceptance contract: packed-code training reaches accuracy within
+    1e-3 of the dense expand_codes path (same objective/optimizer)."""
+    spec = CodeSpec(scheme, w)
+    k, n = 32, 500
+    fspec = feature_spec_for(spec, k)
+    codes, words, y = _planted(jax.random.PRNGKey(7), spec, k, n, sep=0.3)
+    cfg = LearnConfig(c=1.0, steps=120)
+    model = train_packed_linear(words[:400], y[:400], fspec, cfg)
+    x = expand_codes(codes, spec)
+    w_, b_ = train_dense_linear(x[:400], y[:400], cfg)
+    acc_p = model.accuracy(words[400:], np.asarray(y[400:]))
+    acc_d = float(svm_accuracy(w_, b_, x[400:], y[400:]))
+    assert abs(acc_p - acc_d) <= 1e-3, (acc_p, acc_d)
+    assert acc_p >= acc_d - 1e-3
+    # trained weights live on the same trajectory up to float rounding
+    # (accumulated over cfg.steps Adam steps, hence the loose atol)
+    np.testing.assert_allclose(np.asarray(model.margins(words)[0]),
+                               np.asarray(x @ w_ + b_), atol=5e-3)
+
+
+def test_compat_svm_wrapper_unchanged():
+    """core.svm keeps the historical API and solver behavior."""
+    x = jax.random.normal(jax.random.PRNGKey(0), (80, 12))
+    y = jnp.where(x[:, 0] > 0, 1.0, -1.0)
+    w_, b_ = train_linear_svm(x, y, SVMConfig(c=1.0, steps=80))
+    assert float(svm_accuracy(w_, b_, x, y)) > 0.9
+
+
+# -- training over stores -----------------------------------------------------
+
+def test_fit_store_trains_off_code_store():
+    from repro.ann import CodeStore
+    spec = CodeSpec("2bit", 0.75)
+    k = 32
+    codes, _, y = _planted(jax.random.PRNGKey(11), spec, k, 400)
+    store = CodeStore.from_codes(codes, k, spec.bits)
+    model = fit_store(store, y, spec, LearnConfig(steps=80))
+    assert model.accuracy(store.words, np.asarray(y)) > 0.9
+    with pytest.raises(ValueError):
+        fit_store(store, y, CodeSpec("sign", 1.0), LearnConfig(steps=2))
+
+
+def test_fit_store_accepts_sketcher():
+    """fit_store/fit_log docstrings promise 'a CodeSpec or sketcher' —
+    the sketcher path must survive an explicit k (regression)."""
+    from repro.ann import CodeStore
+    from repro.core.sketch import CodedRandomProjection, SketchConfig
+    k = 16
+    crp = CodedRandomProjection(SketchConfig(k=k, scheme="2bit", w=0.75),
+                                32)
+    codes, _, y = _planted(jax.random.PRNGKey(61), crp.spec, k, 96)
+    store = CodeStore.from_codes(codes, k, crp.spec.bits)
+    model = fit_store(store, y, crp, LearnConfig(steps=10))
+    assert model.fspec.k == k
+    log = SegmentLogStore(k, crp.spec.bits, tail_rows=32)
+    ids = log.add_codes(codes)
+    labels = dict(zip((int(i) for i in ids),
+                      np.where(np.asarray(y) > 0, 1, -1)))
+    assert fit_log(log, labels, crp, LearnConfig(steps=5)).fspec.k == k
+
+
+def test_masked_training_on_churned_log_matches_fresh_store():
+    """fit_log over a store full of tombstones/upserts == fit_words on a
+    fresh store holding only the live rows (float-order tolerance,
+    identical predictions)."""
+    spec = CodeSpec("2bit", 0.75)
+    k = 32
+    fspec = feature_spec_for(spec, k)
+    codes, _, y = _planted(jax.random.PRNGKey(13), spec, k, 700)
+    store = SegmentLogStore(k, spec.bits, tail_rows=256)
+    ids = store.add_codes(codes)
+    labels = {int(i): (1 if float(y[j]) > 0 else -1)
+              for j, i in enumerate(ids)}
+    # churn: delete a stripe, upsert another with fresh codes + labels
+    dead = [int(i) for i in ids[::5]]
+    store.delete(dead)
+    for i in dead:
+        labels.pop(i)
+    up_ids = ids[3::50]
+    new_codes = encode(jax.random.normal(jax.random.PRNGKey(17),
+                                         (len(up_ids), k)), spec)
+    store.upsert_codes(up_ids, new_codes)
+    for i in up_ids:
+        labels[int(i)] = -1
+    cfg = LearnConfig(steps=60)
+    m_log = fit_log(store, labels, spec, cfg)
+
+    live_words = store.live_words()
+    y_live = jnp.asarray([labels[int(i)] for i in store.live_ids()],
+                         jnp.float32)
+    m_fresh = fit_words(live_words, y_live, fspec, cfg)
+    np.testing.assert_allclose(np.asarray(m_log.tables),
+                               np.asarray(m_fresh.tables), rtol=1e-4,
+                               atol=1e-5)
+    np.testing.assert_array_equal(np.asarray(m_log.predict(live_words)),
+                                  np.asarray(m_fresh.predict(live_words)))
+    assert m_log.accuracy(live_words, np.asarray(y_live)) > 0.9
+
+
+def test_fit_log_callable_labels_and_empty_store():
+    spec = CodeSpec("2bit", 0.75)
+    store = SegmentLogStore(16, spec.bits, tail_rows=32)
+    with pytest.raises(ValueError):
+        fit_log(store, {}, spec, LearnConfig(steps=2))
+    codes, _, y = _planted(jax.random.PRNGKey(19), spec, 16, 48)
+    ids = store.add_codes(codes)
+    by_id = dict(zip((int(i) for i in ids),
+                     np.where(np.asarray(y) > 0, 1, -1)))
+    m1 = fit_log(store, by_id, spec, LearnConfig(steps=20))
+    m2 = fit_log(store, lambda q: [by_id[int(i)] for i in q], spec,
+                 LearnConfig(steps=20))
+    np.testing.assert_array_equal(np.asarray(m1.tables),
+                                  np.asarray(m2.tables))
+
+
+def test_sharded_grads_match_unsharded():
+    spec = CodeSpec("2bit", 0.75)
+    k, n = 32, 257          # deliberately not a multiple of 32
+    fspec = feature_spec_for(spec, k)
+    _, words, y = _planted(jax.random.PRNGKey(23), spec, k, n)
+    wt = jax.random.normal(jax.random.PRNGKey(29),
+                           (1, fspec.table_width)) * fspec.entry_mask()
+    b = jnp.zeros((1,))
+    y_pm = targets_pm(y, 1)
+    mesh = Mesh(np.asarray(jax.devices()[:1]), ("data",))
+    ls, (dts, dbs) = packed_grads_sharded((wt, b), words, y_pm, fspec,
+                                          mesh)
+    lu, (dtu, dbu) = packed_loss_and_grads((wt, b), words, y_pm, fspec)
+    np.testing.assert_allclose(float(ls), float(lu), rtol=1e-6)
+    np.testing.assert_allclose(np.asarray(dts), np.asarray(dtu),
+                               rtol=1e-5, atol=1e-6)
+    np.testing.assert_allclose(np.asarray(dbs), np.asarray(dbu),
+                               rtol=1e-5, atol=1e-6)
+
+
+def test_sharded_training_runs():
+    spec = CodeSpec("2bit", 0.75)
+    k = 32
+    _, words, y = _planted(jax.random.PRNGKey(31), spec, k, 320)
+    mesh = Mesh(np.asarray(jax.devices()[:1]), ("data",))
+    model = fit_words(words, y, feature_spec_for(spec, k),
+                      LearnConfig(steps=40), mesh=mesh)
+    assert model.accuracy(words, np.asarray(y)) > 0.9
+
+
+def test_multiclass_one_vs_rest():
+    spec = CodeSpec("2bit", 0.75)
+    k, n, n_cls = 32, 600, 3
+    key = jax.random.PRNGKey(37)
+    y = jax.random.randint(key, (n,), 0, n_cls)
+    mu = jax.random.normal(jax.random.fold_in(key, 1), (n_cls, k)) * 0.6
+    z = jax.random.normal(jax.random.fold_in(key, 2), (n, k)) + mu[y]
+    words = PK.pack_codes(encode(z, spec), spec.bits)
+    model = fit_words(words, y, feature_spec_for(spec, k),
+                      LearnConfig(steps=80), n_outputs=n_cls)
+    assert model.n_outputs == n_cls
+    assert model.accuracy(words, np.asarray(y)) > 0.8
+    with pytest.raises(ValueError):
+        model.decision(words)
+
+
+def test_learn_config_validation():
+    with pytest.raises(ValueError):
+        LearnConfig(loss="hinge")
+    spec = CodeSpec("2bit", 0.75)
+    _, words, y = _planted(jax.random.PRNGKey(41), spec, 16, 64)
+    with pytest.raises(ValueError):
+        fit_words(words, y, feature_spec_for(spec, 16),
+                  LearnConfig(steps=2, batch=32),
+                  valid_words=PK.pack_bitmask(jnp.ones(64, bool)))
+    with pytest.raises(ValueError):
+        fit_words(words, y, feature_spec_for(spec, 16),
+                  LearnConfig(steps=2, batch=128))
+    store = SegmentLogStore(16, spec.bits, tail_rows=32)
+    store.add_codes(encode(jax.random.normal(jax.random.PRNGKey(1),
+                                             (8, 16)), spec))
+    with pytest.raises(ValueError):
+        fit_log(store, lambda ids: [1] * len(ids), spec,
+                LearnConfig(steps=2, batch=4))
+
+
+@pytest.mark.slow
+def test_streaming_minibatch_training_long():
+    """Long haul: streaming minibatch training over a corpus two orders
+    larger than any batch, donated per-step updates, held-out accuracy."""
+    spec = CodeSpec("2bit", 0.75)
+    k, n = 64, 40960
+    fspec = feature_spec_for(spec, k)
+    _, words, y = _planted(jax.random.PRNGKey(43), spec, k, n + 2048,
+                           sep=0.25)
+    model = fit_words(words[:n], y[:n], fspec,
+                      LearnConfig(steps=120, batch=1024))
+    assert model.accuracy(words[n:], np.asarray(y[n:])) > 0.95
+
+
+def test_minibatch_quick():
+    spec = CodeSpec("2bit", 0.75)
+    k = 32
+    _, words, y = _planted(jax.random.PRNGKey(47), spec, k, 512)
+    model = fit_words(words, y, feature_spec_for(spec, k),
+                      LearnConfig(steps=50, batch=128))
+    assert model.accuracy(words, np.asarray(y)) > 0.9
+
+
+def test_logistic_loss_trains():
+    spec = CodeSpec("2bit", 0.75)
+    k = 32
+    _, words, y = _planted(jax.random.PRNGKey(53), spec, k, 400)
+    model = train_packed_linear(words, y, feature_spec_for(spec, k),
+                                LearnConfig(loss="logistic", steps=80))
+    assert model.loss == "logistic"
+    assert model.accuracy(words, np.asarray(y)) > 0.9
+
+
+# -- serving ------------------------------------------------------------------
+
+def test_service_classify_endpoint():
+    from repro.ann import AnnEngine, BandSpec
+    from repro.core.sketch import CodedRandomProjection, SketchConfig
+    from repro.serve.ann_service import AnnService
+
+    d, k, n = 64, 32, 300
+    key = jax.random.PRNGKey(59)
+    crp = CodedRandomProjection(SketchConfig(k=k, scheme="2bit", w=0.75), d)
+    x = jax.random.normal(key, (n, d))
+    y = jnp.where(x[:, 0] > 0, 1.0, -1.0)
+    engine = AnnEngine.build(crp, x, BandSpec(n_tables=4, band_width=4))
+    svc = AnnService(engine)
+    with pytest.raises(TypeError):
+        svc.classify(x[:4])
+    codes = crp.encode(x)
+    words = crp.pack(codes)
+    model = fit_words(words, y, feature_spec_for(crp.spec, k),
+                      LearnConfig(steps=60))
+    svc.set_classifier(model)
+    pred, margins = svc.classify(x[:32])
+    assert pred.shape == (32,) and margins.shape == (1, 32)
+    np.testing.assert_array_equal(pred,
+                                  np.asarray(model.predict(words[:32])))
+    # batches beyond the largest bucket split into bucket-shaped slices
+    pred_all, marg_all = svc.classify(x)
+    assert pred_all.shape == (n,) and marg_all.shape == (1, n)
+    np.testing.assert_array_equal(pred_all,
+                                  np.asarray(model.predict(words)))
+    with pytest.raises(ValueError):
+        svc.classify(x[0])
+    # k/bits mismatch rejected
+    other = PackedLinearModel.zeros(feature_spec_for(CodeSpec("sign", 1.0),
+                                                     k))
+    with pytest.raises(ValueError):
+        svc.set_classifier(other)
