@@ -1,0 +1,189 @@
+"""Encode benchmark: fused-packed ingest vs project→encode→pack.
+
+Four measurements over the same corpus:
+
+* **fused dense encode** — ``repro.encode.StreamingEncoder``: one fused
+  project→code→pack call; the only corpus-sized HBM write-back is the
+  packed words (4·W bytes/row).
+* **staged baseline** — the pre-encode-subsystem pipeline: a projection
+  call materializing z f32 [n, k], an encode call materializing int32
+  codes [n, k], a pack call — 4·k + 4·k + 4·W written bytes/row, three
+  kernel round-trips.
+* **sparse CSR encode** — the matrix-free gather path on a sparse
+  corpus vs densify-then-fused, same packed output.
+* **pipeline ingest** — chunked ``IngestPipeline`` into a
+  ``SegmentLogStore`` (donated O(batch) tail writes) at rows/s.
+
+Emits run.py CSV rows, a detailed CSV, and ``BENCH_encode.json`` (repo
+root) with every number, including the analytic HBM bytes/row of each
+path.
+"""
+import json
+import os
+import sys
+import time
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+if __package__ in (None, ""):        # direct `python benchmarks/encode_bench.py`
+    _root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    sys.path.insert(0, _root)
+    sys.path.insert(0, os.path.join(_root, "src"))
+
+from benchmarks._util import timed, write_csv
+from repro.core.packing import packed_width
+from repro.core.sketch import CodedRandomProjection, SketchConfig
+from repro.encode import CsrMatrix, IngestPipeline, StreamingEncoder
+from repro.index import SegmentLogStore
+
+_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def _sparse_corpus(rng, n, d, density):
+    x = np.zeros((n, d), np.float32)
+    nz = rng.random((n, d)) < density
+    x[nz] = rng.normal(size=int(nz.sum())).astype(np.float32)
+    return x
+
+
+def _bytes_per_row(k, w_words, fused: bool) -> int:
+    """Analytic corpus-sized HBM write-back of one encoded row."""
+    packed = 4 * w_words
+    return packed if fused else 4 * k + 4 * k + packed
+
+
+def _bench_dense(crp, enc, x):
+    n, k = x.shape[0], crp.cfg.k
+    w_words = packed_width(k, crp.spec.bits)
+    fused_j = jax.jit(lambda v: enc.encode_packed(v))   # one executable
+    _, us_fused = timed(fused_j, x)
+
+    proj = jax.jit(lambda v: crp.project(v))
+    enc_j = jax.jit(lambda z: crp.encode_projected(z))
+    pack_j = jax.jit(lambda c: crp.pack(c))
+
+    def staged(v):
+        return pack_j(enc_j(proj(v)))
+
+    want, us_staged = timed(staged, x)
+    got = fused_j(x)
+    # full-R dot vs unit-streamed accumulation: floor() at a bin edge can
+    # flip one ulp apart — tolerate a vanishing fraction of fields
+    from repro.core.packing import unpack_codes
+    mism = int(jnp.sum(unpack_codes(got, crp.spec.bits, k)
+                       != unpack_codes(want, crp.spec.bits, k)))
+    assert mism <= max(4, int(1e-4 * n * k)), f"{mism} fields differ"
+    return {
+        "rows": n, "k": k, "w_words": w_words,
+        "fused": {"us": us_fused, "rows_per_s": n / (us_fused / 1e6),
+                  "hbm_bytes_per_row": _bytes_per_row(k, w_words, True)},
+        "staged": {"us": us_staged, "rows_per_s": n / (us_staged / 1e6),
+                   "hbm_bytes_per_row": _bytes_per_row(k, w_words, False)},
+        "speedup": us_staged / us_fused,
+        "write_traffic_ratio": _bytes_per_row(k, w_words, False)
+        / _bytes_per_row(k, w_words, True)}
+
+
+def _bench_sparse(crp, x_dense, density):
+    n = x_dense.shape[0]
+    enc = StreamingEncoder(crp, r_cap_elems=1)      # force matrix-free
+    csr = CsrMatrix.from_dense(x_dense)
+    _, us_sparse = timed(lambda: enc.encode_packed(csr))
+    xd = jnp.asarray(x_dense)
+    _, us_dense = timed(lambda: enc.encode_packed(xd))
+    got = enc.encode_packed(csr)
+    want = enc.encode_packed(xd)
+    from repro.core.packing import unpack_codes
+    k = crp.cfg.k
+    mism = int(jnp.sum(unpack_codes(got, crp.spec.bits, k)
+                       != unpack_codes(want, crp.spec.bits, k)))
+    assert mism <= max(4, int(1e-4 * n * k)), f"{mism} fields differ"
+    return {"rows": n, "nnz": csr.nnz, "density": density,
+            "csr": {"us": us_sparse, "rows_per_s": n / (us_sparse / 1e6)},
+            "densified": {"us": us_dense,
+                          "rows_per_s": n / (us_dense / 1e6)},
+            "speedup": us_dense / us_sparse}
+
+
+def _bench_pipeline(crp, x, chunk_rows, tail_rows):
+    enc = StreamingEncoder(crp)
+    n = x.shape[0]
+    log = SegmentLogStore(crp.cfg.k, crp.spec.bits, tail_rows=tail_rows)
+    IngestPipeline(enc, log, chunk_rows=chunk_rows).ingest(x[:chunk_rows])
+    t0 = time.perf_counter()
+    pipe = IngestPipeline(enc, log, chunk_rows=chunk_rows)
+    pipe.ingest(x)
+    jax.block_until_ready(log.tail.words)
+    dt = time.perf_counter() - t0
+    return {"rows": n, "chunk_rows": chunk_rows,
+            "rows_per_s": n / dt, "seconds": dt,
+            "packed_bytes": pipe.stats["packed_bytes"],
+            "n_segments": log.n_segments}
+
+
+def _bench(n, d, k, density, chunk_rows):
+    rng = np.random.default_rng(0)
+    crp = CodedRandomProjection(
+        SketchConfig(k=k, scheme="2bit", w=0.75, seed=0), d)
+    x = jnp.asarray(rng.normal(size=(n, d)).astype(np.float32))
+    enc = StreamingEncoder(crp)
+    dense = _bench_dense(crp, enc, x)
+    sparse = _bench_sparse(crp, _sparse_corpus(rng, n // 2, d, density),
+                           density)
+    pipe = _bench_pipeline(crp, x, chunk_rows, tail_rows=1024)
+    r = {"n": n, "d": d, "k": k, "bits": crp.spec.bits,
+         "density": density, "backend": jax.default_backend(),
+         "dense": dense, "sparse": sparse, "pipeline": pipe}
+    with open(os.path.join(_ROOT, "BENCH_encode.json"), "w") as f:
+        json.dump(r, f, indent=1)
+    return r
+
+
+def _rows(r):
+    de, sp, pi = r["dense"], r["sparse"], r["pipeline"]
+    return [
+        ("encode_fused_packed", de["fused"]["us"],
+         f"rows/s={de['fused']['rows_per_s']:.0f} "
+         f"hbm_bytes/row={de['fused']['hbm_bytes_per_row']}"),
+        ("encode_staged_baseline", de["staged"]["us"],
+         f"rows/s={de['staged']['rows_per_s']:.0f} "
+         f"hbm_bytes/row={de['staged']['hbm_bytes_per_row']} "
+         f"fused_speedup={de['speedup']:.2f}x "
+         f"traffic_ratio={de['write_traffic_ratio']:.1f}x"),
+        ("encode_csr_sparse", sp["csr"]["us"],
+         f"rows/s={sp['csr']['rows_per_s']:.0f} "
+         f"vs_densified={sp['speedup']:.2f}x nnz={sp['nnz']}"),
+        ("encode_pipeline_ingest", 1e6 / pi["rows_per_s"],
+         f"rows/s={pi['rows_per_s']:.0f} chunks={pi['chunk_rows']}"),
+    ]
+
+
+def run(quick: bool = True):
+    """run.py contract: (name, us_per_op, derived) rows."""
+    r = _bench(n=1024 if quick else 8192, d=4096 if quick else 65536,
+               k=128, density=0.005, chunk_rows=256)
+    rows = _rows(r)
+    write_csv("encode_bench", ["name", "us_per_op", "derived"], rows)
+    return rows
+
+
+def main():
+    r = _bench(n=8192, d=65536, k=128, density=0.002, chunk_rows=1024)
+    write_csv("encode_bench", ["name", "us_per_op", "derived"], _rows(r))
+    print("BENCH " + json.dumps(r))
+    de, sp = r["dense"], r["sparse"]
+    print(f"\nfused project→code→pack: {de['fused']['rows_per_s']:.0f} "
+          f"rows/s at {de['fused']['hbm_bytes_per_row']} written bytes/row; "
+          f"staged baseline: {de['staged']['rows_per_s']:.0f} rows/s at "
+          f"{de['staged']['hbm_bytes_per_row']} bytes/row -> "
+          f"{de['speedup']:.2f}x faster, "
+          f"{de['write_traffic_ratio']:.1f}x less write traffic")
+    print(f"CSR sparse encode at density {sp['density']}: "
+          f"{sp['csr']['rows_per_s']:.0f} rows/s vs densified "
+          f"{sp['densified']['rows_per_s']:.0f} -> {sp['speedup']:.2f}x")
+
+
+if __name__ == "__main__":
+    main()

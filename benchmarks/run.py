@@ -30,6 +30,7 @@ MODULES = [
     "benchmarks.kernel_bench",
     "benchmarks.grad_compression_bench",
     "benchmarks.ann_bench",
+    "benchmarks.encode_bench",
     "benchmarks.ingest_bench",
     "benchmarks.rank_bench",
     "benchmarks.learn_bench",

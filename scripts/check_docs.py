@@ -21,7 +21,8 @@ import re
 import sys
 
 ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
-PACKAGES = ("repro.ann", "repro.index", "repro.rank", "repro.learn")
+PACKAGES = ("repro.ann", "repro.index", "repro.rank", "repro.learn",
+            "repro.encode")
 DOC_FILES = ["README.md"]
 DOC_DIRS = ["docs"]
 

@@ -77,28 +77,32 @@ class SearchConfig:
 
 class QueryCoder:
     """Fused query encoder shared by the immutable engine and the mutable
-    segment-log engine (``repro.index``): materializes the sketcher's
-    projection once and runs the fused proj+code kernel per batch."""
+    segment-log engine (``repro.index``): a thin facade over
+    ``repro.encode.StreamingEncoder`` — fused proj+code kernel over the
+    cached R below the residency cap, matrix-free unit streaming above
+    it, so a D = 3.2M index never materializes [D, k] for queries
+    either."""
 
     def __init__(self, sketcher: CodedRandomProjection):
         self.sketcher = sketcher
-        self._rmat = None
+        self._encoder = sketcher.stream_encoder()   # shared per-sketcher
 
     def r_matrix(self):
-        """Materialized projection [D, k]; the sketcher regenerates it
-        from the seed, block by block."""
-        if self._rmat is None:
-            s = self.sketcher
-            bd = s.cfg.block_d
-            blocks = [s._block_r(b, min(bd, s.d - b * bd))
-                      for b in range((s.d + bd - 1) // bd)]
-            self._rmat = jnp.concatenate(blocks, axis=0)
-        return self._rmat
+        """Materialized projection [D, k] (cached), regenerated from the
+        seed unit by unit.  Raises above the encoder's residency cap —
+        large-D callers must stream (``encode`` does, transparently)."""
+        return self._encoder.r_matrix()
 
     def encode(self, x, impl: str = "auto"):
-        """x [Q, D] -> int32 codes [Q, k] via the fused proj+code kernel."""
-        return _ops.coded_project(x, self.r_matrix(), self.sketcher.spec,
-                                  self.sketcher._offsets, impl=impl)
+        """x [Q, D] (dense or ``encode.CsrMatrix``) -> int32 codes
+        [Q, k]: fused proj+code kernel when R is resident, streaming
+        projection + scheme encode otherwise."""
+        return self._encoder.encode_codes(x, impl=impl)
+
+    def encode_packed(self, x, impl: str = "auto"):
+        """x [Q, D] (dense or ``encode.CsrMatrix``) -> packed uint32
+        [Q, W] via the fused project→code→pack ingest path."""
+        return self._encoder.encode_packed(x, impl=impl)
 
 
 def merge_topk(vals_list, ids_list, top_k: int):
@@ -225,8 +229,10 @@ class AnnEngine:
     @classmethod
     def build(cls, sketcher: CodedRandomProjection, corpus,
               band_spec: BandSpec = BandSpec(), impl: str = "auto"):
-        """Index a corpus [n, D]: fused project+code, pack, band-hash."""
-        codes = sketcher.encode(corpus)
+        """Index a corpus [n, D]: fused project+code, pack, band-hash —
+        through the sketcher's shared ``repro.encode`` encoder, the
+        same numerics queries use."""
+        codes = sketcher.stream_encoder().encode_codes(corpus, impl=impl)
         return cls.from_codes(sketcher, codes, band_spec, impl=impl)
 
     @classmethod
@@ -239,8 +245,9 @@ class AnnEngine:
                    db_band_hashes=band_hashes(codes, band_spec))
 
     def add(self, x, impl: str = "auto") -> "AnnEngine":
-        """New engine with corpus rows appended (ids continue from n)."""
-        codes = self.sketcher.encode(x)
+        """New engine with corpus rows appended (ids continue from n);
+        encoded through the shared query coder's fused path."""
+        codes = self._coder.encode(x, impl=impl)
         store = self.store.add(codes, impl=impl)
         hashes = jnp.concatenate(
             [self.db_band_hashes, band_hashes(codes, self.band_spec)])

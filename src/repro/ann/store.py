@@ -58,6 +58,11 @@ class CodeStore:
         return self.merge(CodeStore.from_codes(codes, self.k, self.bits,
                                                impl=impl))
 
+    def add_words(self, words) -> "CodeStore":
+        """New store with already-packed rows [m, W] appended — the
+        fused-ingest path (``repro.encode``): int32 codes never exist."""
+        return self.merge(CodeStore.from_words(words, self.k, self.bits))
+
     def merge(self, other: "CodeStore") -> "CodeStore":
         """New store: self's rows then other's (same k/bits required)."""
         if (self.k, self.bits) != (other.k, other.bits):

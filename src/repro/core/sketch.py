@@ -5,10 +5,20 @@
               --(bit packing)-->                      uint32 [n, k*b/32]
 
 The projection matrix is never materialized for large D: it is generated
-block-by-block from a counter-based PRNG key (``fold_in``), so sketching a
-D = 3.2M-dim corpus (the paper's URL dataset) streams R in O(block) memory
-and the sketch is reproducible from the seed alone — on a cluster every
-host regenerates the same R without any broadcast.
+in fixed-width **units** from a counter-based PRNG key (``fold_in``), so
+sketching a D = 3.2M-dim corpus (the paper's URL dataset) streams R in
+O(unit) memory and the sketch is reproducible from the seed alone — on a
+cluster every host regenerates the same R without any broadcast.
+
+Generation is canonical: R is a pure function of ``(seed, r_unit, k,
+dtype)``.  Streaming knobs (``block_d``, chunk sizes, device counts)
+group *whole units* per step and therefore never change a single bit of
+the sketch — the reproducibility contract ``tests/test_encode.py`` pins.
+
+This module is the **oracle path**: plain jnp, one readable step per
+stage.  The production ingest path (fused project→code→pack kernels,
+CSR-sparse inputs, chunked streaming into stores) lives in
+``repro.encode`` and must match these semantics bit-for-bit.
 """
 from __future__ import annotations
 
@@ -24,7 +34,16 @@ from repro.core import packing as _packing
 from repro.core.estimators import CollisionEstimator
 from repro.core.schemes import CodeSpec
 
-__all__ = ["SketchConfig", "CodedRandomProjection"]
+__all__ = ["SketchConfig", "CodedRandomProjection", "OFFSET_KEY_TAG"]
+
+# Key domain split: projection unit u draws from fold_in(key, u) with
+# u in [0, n_units); the offset vector draws from fold_in(key, 2^32-1).
+# n_units is capped strictly below the tag (a D that large is ~17.6 TB
+# of f32 per row anyway), so a unit key can NEVER collide with the
+# offset key.  The old scheme used fold_in(key, 0xFFFF), which collided
+# with projection unit 65535 once ceil(D / unit) > 65535 — at unit 4096
+# that is D > 268M, squarely in sparse-corpus territory.
+OFFSET_KEY_TAG = 2 ** 32 - 1
 
 
 @dataclass(frozen=True)
@@ -34,8 +53,14 @@ class SketchConfig:
     w: float = 0.75                 # paper-recommended first bin width (§8)
     cutoff: float = 6.0
     seed: int = 0
-    block_d: int = 4096             # streaming block size over input dim
+    block_d: int = 4096             # retained for config compat: superseded
+                                    # by r_unit (generation) and the encode
+                                    # pipeline's chunking; never read, and
+                                    # never changes the sketch bits (pinned
+                                    # by tests/test_encode.py)
     dtype: str = "float32"
+    r_unit: int = 4096              # canonical R generation granularity:
+                                    # part of the sketch identity
 
     @property
     def code_spec(self) -> CodeSpec:
@@ -48,33 +73,72 @@ class CodedRandomProjection:
     def __init__(self, cfg: SketchConfig, d: int):
         self.cfg = cfg
         self.d = int(d)
+        if cfg.r_unit <= 0:
+            raise ValueError(f"r_unit must be positive, got {cfg.r_unit}")
+        if self.n_units >= OFFSET_KEY_TAG:
+            raise ValueError(f"D={d} needs {self.n_units} projection units; "
+                             f"key domain holds < {OFFSET_KEY_TAG}")
         self.spec = cfg.code_spec
         self._key = jax.random.PRNGKey(cfg.seed)
         self._offsets = None
         if cfg.scheme == "offset":
             self._offsets = _schemes.sample_offsets(
-                jax.random.fold_in(self._key, 0xFFFF), cfg.k, cfg.w,
-                dtype=jnp.dtype(cfg.dtype))
+                self.offset_key(), cfg.k, cfg.w, dtype=jnp.dtype(cfg.dtype))
         self._estimator = CollisionEstimator(cfg.scheme, cfg.w)
 
     # -- projection ---------------------------------------------------------
-    def _block_r(self, b: int, width: int):
-        """Regenerable Gaussian block R[b*block : b*block+width, :k]."""
-        key = jax.random.fold_in(self._key, b)
+    @property
+    def n_units(self) -> int:
+        """Number of canonical R generation units: ceil(D / r_unit)."""
+        return (self.d + self.cfg.r_unit - 1) // self.cfg.r_unit
+
+    def unit_width(self, u: int) -> int:
+        """Rows of unit ``u``: r_unit except a ragged final unit."""
+        return min(self.cfg.r_unit, self.d - u * self.cfg.r_unit)
+
+    def offset_key(self):
+        """PRNG key for the offset vector q — a tag fold disjoint from
+        every projection-unit key (see ``OFFSET_KEY_TAG``)."""
+        return jax.random.fold_in(self._key, OFFSET_KEY_TAG)
+
+    def _block_r(self, u, width: int):
+        """Regenerable Gaussian unit R[u*r_unit : u*r_unit+width, :k].
+
+        ``u`` may be a traced int32 (``fold_in`` traces), ``width`` must
+        be static.  This is the ONLY generator of projection entries —
+        the fused/streamed paths in ``repro.encode`` call exactly this.
+        """
+        key = jax.random.fold_in(self._key, u)
         return jax.random.normal(key, (width, self.cfg.k),
                                  dtype=jnp.dtype(self.cfg.dtype))
 
     @functools.partial(jax.jit, static_argnums=0)
     def project(self, x):
-        """x [n, D] -> [n, k], streaming over D in blocks."""
+        """x [n, D] -> [n, k], streaming R unit-by-unit over D.
+
+        Accumulation is unit-ordered: acc += x_u @ R_u for u = 0.. — the
+        float summation order every other encode path reproduces. Full
+        units run under ``lax.scan`` (compile cost is O(1) in D; at the
+        paper's D = 3.2M an unrolled loop would trace ~800 dots), the
+        ragged tail unit as a final step.
+        """
         n = x.shape[0]
-        bd = self.cfg.block_d
-        n_blocks = (self.d + bd - 1) // bd
+        ru = self.cfg.r_unit
+        n_full = self.d // ru
         acc = jnp.zeros((n, self.cfg.k), dtype=jnp.dtype(self.cfg.dtype))
-        for b in range(n_blocks):
-            lo = b * bd
-            hi = min(lo + bd, self.d)
-            acc = acc + x[:, lo:hi].astype(acc.dtype) @ self._block_r(b, hi - lo)
+        if n_full:
+            xf = jnp.moveaxis(
+                x[:, :n_full * ru].reshape(n, n_full, ru), 1, 0)
+
+            def body(a, inp):
+                u, xb = inp
+                return a + xb.astype(a.dtype) @ self._block_r(u, ru), None
+
+            acc, _ = jax.lax.scan(
+                body, acc, (jnp.arange(n_full, dtype=jnp.int32), xf))
+        if self.d % ru:
+            acc = acc + x[:, n_full * ru:].astype(acc.dtype) @ \
+                self._block_r(jnp.int32(n_full), self.d - n_full * ru)
         return acc
 
     # -- coding -------------------------------------------------------------
@@ -89,8 +153,33 @@ class CodedRandomProjection:
     def pack(self, codes):
         return _packing.pack_codes(codes, self.spec.bits)
 
-    def sketch(self, x):
-        """x [n, D] -> packed uint32 sketch [n, k*bits/32]."""
+    def stream_encoder(self):
+        """The per-sketcher ``repro.encode.StreamingEncoder``, built
+        lazily and cached — shared by ``sketch`` and every
+        ``ann.QueryCoder`` over this sketcher, so R and the streaming
+        executables are cached exactly once per sketcher."""
+        from repro.encode.encoder import StreamingEncoder  # lazy: no cycle
+        if getattr(self, "_stream_encoder", None) is None:
+            self._stream_encoder = StreamingEncoder(self)
+        return self._stream_encoder
+
+    def sketch(self, x, impl: str = "auto"):
+        """x [n, D] -> packed uint32 sketch [n, k*bits/32].
+
+        Runs the production ingest path (``repro.encode``): fused
+        project→code→pack below the R-residency cap, matrix-free unit
+        streaming above it. Agrees with ``pack(encode(x))`` up to
+        accumulation-order ulp flips at bin edges (see
+        ``StreamingEncoder.encode_packed``).
+        """
+        return self.stream_encoder().encode_packed(x, impl=impl)
+
+    def sketch_oracle(self, x):
+        """Reference sketch: unfused project → encode → pack in jnp.
+
+        The semantics oracle for ``sketch`` and for everything in
+        ``repro.encode`` (each intermediate is materialized — fine at
+        test scale, the thing the fused path exists to avoid)."""
         return self.pack(self.encode(x))
 
     # -- estimation ---------------------------------------------------------

@@ -1,0 +1,27 @@
+"""Matrix-free fused ingestion: raw vectors -> packed codes -> stores.
+
+The front door of the system, closing the paper's economy end-to-end:
+the b-bit packed words that search/rank/learn serve from are *produced*
+without ever materializing the [D, k] projection matrix (regenerated in
+canonical units from the seed), the [n, k] f32 projections, or the
+[n, k] int32 codes in HBM — the only corpus-sized write-back is the
+packed words themselves.
+
+encoder  — ``StreamingEncoder``: fused one-kernel encode below the
+           R-residency cap (``kernels.encode_fused``), donated-slab
+           unit streaming above it (D = 3.2M in O(unit) memory), CSR
+           gather projection for sparse corpora; ``encode_codes`` for
+           the query-side int32 contract
+sparse   — ``CsrMatrix`` host CSR container + per-unit nonzero
+           bucketing (``unit_buckets``)
+pipeline — ``IngestPipeline``: chunked host→device bulk load straight
+           into ``index.SegmentLogStore.add_words`` /
+           ``ann.CodeStore``; ``encode_sharded`` shard_map
+           data-parallel encode, bit-identical at any device count
+
+(oracle semantics: ``core.sketch`` — unit-ordered accumulation,
+``sketch_oracle``; serving entry: ``serve.ann_service`` ``bulk_load``)
+"""
+from repro.encode.encoder import R_CAP_ELEMS, StreamingEncoder  # noqa: F401
+from repro.encode.pipeline import IngestPipeline, encode_sharded  # noqa: F401
+from repro.encode.sparse import CsrMatrix, unit_buckets  # noqa: F401

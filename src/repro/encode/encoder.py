@@ -1,0 +1,174 @@
+"""Matrix-free streaming encoder: raw vectors -> packed words, O(unit) memory.
+
+The ingest front door of the system.  A ``StreamingEncoder`` wraps a
+``core.sketch.CodedRandomProjection`` and produces the same packed
+uint32 words as the oracle ``pack(encode(x))`` while never holding more
+than one projection unit of R and never writing f32 projections or
+int32 codes for the corpus to HBM:
+
+* **R-resident regime** (``d * k <= r_cap_elems``): R is concatenated
+  from its canonical units once, cached, and every batch runs the
+  one-kernel fused path (``kernels.encode_fused``) — GEMM, coding and
+  packing in a single pallas_call whose only HBM write-back is the
+  packed words.
+* **Matrix-free regime** (above the cap — the paper's URL scale, where
+  R would be ~3.3 GB): batches stream over D unit by unit.  Each step
+  regenerates one R unit from the counter-based seed *inside* the jit
+  trace (it lives only as an XLA temporary) and accumulates into a
+  donated [chunk, k] f32 slab — the donation makes the update in-place,
+  so peak memory is O(chunk·k + unit·k) however large D grows.  The
+  finalize is the fused code+pack epilogue kernel.
+* **CSR regime**: sparse chunks bucket their nonzeros by unit
+  (``encode.sparse``) and scatter ``vals · R[cols]`` into the same
+  donated slab — O(nnz·k) work, untouched units skipped (their
+  contribution is an exact float zero).
+
+The streaming and CSR regimes accumulate in canonical unit order and so
+match the ``core.sketch`` oracle (and each other, and ``encode_sharded``
+at any device count) bit-for-bit at the same seed.  The fused kernel
+accumulates its GEMM in ``block_d`` slabs instead; integer outputs are
+bit-exact against its own oracle (``ref.encode_fused_ref``), and
+cross-path agreement holds except on projections within one float ulp
+of a coding bin edge — a vanishing fraction, pinned exactly at tier-1
+scales/seeds (``tests/test_encode.py``) and bounded at 1e-4 of fields
+in ``benchmarks/encode_bench.py``.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.encode.sparse import CsrMatrix, unit_buckets
+from repro.kernels import ops as _ops
+
+__all__ = ["StreamingEncoder", "R_CAP_ELEMS"]
+
+# Default R-residency cap: d * k f32 elements (64 MB) — far below one
+# device's HBM, far above every query-side working set.  The paper-scale
+# URL corpus (D = 3.2M, k = 256 -> 8.2e8 elements) lands two orders of
+# magnitude above it and always streams.
+R_CAP_ELEMS = 1 << 24
+
+
+class StreamingEncoder:
+    """Raw dense [n, D] / ``CsrMatrix`` input -> packed uint32 [n, W]."""
+
+    def __init__(self, sketcher, *, r_cap_elems: int = R_CAP_ELEMS):
+        self.sketcher = sketcher
+        self.r_cap_elems = int(r_cap_elems)
+        self._rmat = None
+
+    # -- R residency ---------------------------------------------------------
+    @property
+    def r_resident(self) -> bool:
+        """Whether R may be materialized (``d * k`` under the cap)."""
+        s = self.sketcher
+        return s.d * s.cfg.k <= self.r_cap_elems
+
+    @property
+    def r_slab_elems(self) -> int:
+        """Peak R elements held by the matrix-free path: one unit."""
+        s = self.sketcher
+        return s.cfg.r_unit * s.cfg.k
+
+    def r_matrix(self):
+        """Materialized projection [D, k], cached; concatenated from the
+        canonical units.  Raises above ``r_cap_elems`` — at that point
+        the whole point is to never build this array (stream instead).
+        """
+        s = self.sketcher
+        if not self.r_resident:
+            raise ValueError(
+                f"R is {s.d} x {s.cfg.k} = {s.d * s.cfg.k} elements, over "
+                f"the residency cap {self.r_cap_elems}; use the streaming "
+                f"encode path instead of materializing")
+        if self._rmat is None:
+            self._rmat = jnp.concatenate(
+                [s._block_r(u, s.unit_width(u)) for u in range(s.n_units)])
+        return self._rmat
+
+    # -- streaming steps (one executable per shape, donated accumulator) -----
+    @functools.partial(jax.jit, static_argnums=(0, 4), donate_argnums=1)
+    def _dense_step(self, acc, x_blk, u, width: int):
+        """acc [n, k] += x_blk [n, width] @ R_unit(u); u is traced data
+        (one executable covers every full-width unit), acc donated."""
+        r = self.sketcher._block_r(u, width)
+        return acc + x_blk.astype(acc.dtype) @ r
+
+    @functools.partial(jax.jit, static_argnums=(0, 6), donate_argnums=1)
+    def _sparse_step(self, acc, rows, lcols, vals, u, width: int):
+        """acc [n, k] += segment-sum of vals · R_unit(u)[lcols] over
+        ``rows`` — the CSR gather projection; padding entries carry
+        val 0 and scatter an exact zero."""
+        r = self.sketcher._block_r(u, width)
+        contrib = vals[:, None] * jnp.take(r, lcols, axis=0)
+        return acc + jax.ops.segment_sum(contrib, rows,
+                                         num_segments=acc.shape[0])
+
+    def project(self, x):
+        """Streaming projection x -> z [n, k] f32 without materializing
+        R: dense rows stream unit-by-unit through the donated slab, CSR
+        rows gather/scatter only their nonzeros."""
+        s = self.sketcher
+        ru = s.cfg.r_unit
+        if isinstance(x, CsrMatrix):
+            if x.d != s.d:
+                raise ValueError(f"csr d={x.d} != sketcher d={s.d}")
+            acc = jnp.zeros((x.n, s.cfg.k), jnp.dtype(s.cfg.dtype))
+            if x.nnz == 0:
+                return acc
+            units, rows, lcols, vals = unit_buckets(x, ru)
+            for i, u in enumerate(units):
+                acc = self._sparse_step(
+                    acc, jnp.asarray(rows[i]), jnp.asarray(lcols[i]),
+                    jnp.asarray(vals[i]), jnp.int32(u), s.unit_width(u))
+            return acc
+        if x.ndim != 2 or x.shape[1] != s.d:
+            raise ValueError(f"x {x.shape} != [n, {s.d}]")
+        # host-resident inputs (np.ndarray, memmaps) are sliced on the
+        # host and shipped one unit slab at a time — device memory stays
+        # O(chunk·unit + chunk·k) even for dense corpora at huge D;
+        # device-resident inputs slice in place
+        acc = jnp.zeros((x.shape[0], s.cfg.k), jnp.dtype(s.cfg.dtype))
+        for u in range(s.n_units):
+            lo = u * ru
+            w = s.unit_width(u)
+            acc = self._dense_step(acc, jnp.asarray(x[:, lo:lo + w]),
+                                   jnp.int32(u), w)
+        return acc
+
+    # -- encoding ------------------------------------------------------------
+    def encode_packed(self, x, impl: str = "auto"):
+        """x dense [n, D] or ``CsrMatrix`` -> packed uint32 [n, W].
+
+        R-resident dense input takes the one-kernel fused path; all
+        other regimes stream the projection in unit order (bit-identical
+        to ``sketcher.sketch_oracle``) and run the fused code+pack
+        epilogue.  The fused path's full-R accumulation can differ from
+        the oracle on values one ulp from a bin edge (see the module
+        docstring)."""
+        s = self.sketcher
+        if not isinstance(x, CsrMatrix) and self.r_resident:
+            return _ops.encode_fused(jnp.asarray(x), self.r_matrix(),
+                                     s.spec, s._offsets, impl=impl)
+        return _ops.code_pack(self.project(x), s.spec, s._offsets,
+                              impl=impl)
+
+    def encode_codes(self, x, impl: str = "auto"):
+        """x dense [n, D] or ``CsrMatrix`` -> int32 codes [n, k] (the
+        query-side contract: engines band-hash and LUT-index unpacked
+        codes).  Fused project+code kernel when R is resident, streaming
+        projection + scheme encode otherwise."""
+        s = self.sketcher
+        if not isinstance(x, CsrMatrix) and self.r_resident:
+            return _ops.coded_project(jnp.asarray(x), self.r_matrix(),
+                                      s.spec, s._offsets, impl=impl)
+        return s.encode_projected(self.project(x))
+
+    @property
+    def n_words(self) -> int:
+        """uint32 words per packed row: ceil(k / (32/bits))."""
+        from repro.core.packing import packed_width
+        return packed_width(self.sketcher.cfg.k, self.sketcher.spec.bits)

@@ -1,0 +1,134 @@
+"""CSR-sparse input support for the streaming encoder.
+
+The paper's near-neighbor corpora (journal version, arXiv 1403.8144) are
+extremely sparse and extremely high-dimensional — URL is D = 3.2M with a
+few hundred nonzeros per row.  Densifying a chunk just to project it
+would turn ~115 multiplies per row into 3.2M; instead the projection of
+a CSR chunk is a gather/segment-sum over the nonzeros:
+
+    z[i] = sum_{nz j of row i} vals[j] * R[cols[j], :]
+
+R stays matrix-free: entries are regenerated per canonical unit
+(``CodedRandomProjection._block_r``) exactly as on the dense path, the
+nonzeros of a chunk are bucketed by unit on the host
+(``unit_buckets``), and only *occupied* units are touched — the
+gather/scatter work is O(nnz·k), not O(D·k).  Unit-order accumulation
+matches the dense streaming loop term placement, so dense and CSR
+inputs produce identical packed words at the same seed
+(``tests/test_encode.py``).
+
+``CsrMatrix`` is a deliberately small host-side container (numpy
+arrays, no scipy dependency): enough to chunk rows for the ingest
+pipeline and to densify for oracles at test scale.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import numpy as np
+
+__all__ = ["CsrMatrix", "unit_buckets"]
+
+
+@dataclass(frozen=True)
+class CsrMatrix:
+    """Host-side CSR matrix [n, d]: ``indptr`` int64 [n+1], ``indices``
+    int32 [nnz] (column ids, any order within a row), ``data`` float32
+    [nnz], ``shape`` (n, d)."""
+    indptr: np.ndarray
+    indices: np.ndarray
+    data: np.ndarray
+    shape: tuple
+
+    def __post_init__(self):
+        n, d = self.shape
+        if self.indptr.shape != (n + 1,):
+            raise ValueError(f"indptr {self.indptr.shape} != ({n + 1},)")
+        if self.indices.shape != self.data.shape:
+            raise ValueError(f"indices {self.indices.shape} != data "
+                             f"{self.data.shape}")
+        if int(self.indptr[-1]) != self.indices.size:
+            raise ValueError(f"indptr[-1]={int(self.indptr[-1])} != "
+                             f"nnz={self.indices.size}")
+        if self.indices.size and (self.indices.min() < 0
+                                  or self.indices.max() >= d):
+            raise ValueError(f"column ids out of range [0, {d})")
+
+    # -- geometry ------------------------------------------------------------
+    @property
+    def n(self) -> int:
+        """Rows."""
+        return self.shape[0]
+
+    @property
+    def d(self) -> int:
+        """Columns (the projection input dimensionality D)."""
+        return self.shape[1]
+
+    @property
+    def nnz(self) -> int:
+        """Stored nonzeros."""
+        return self.indices.size
+
+    # -- construction --------------------------------------------------------
+    @classmethod
+    def from_dense(cls, x) -> "CsrMatrix":
+        """Dense [n, d] array -> CSR of its nonzero entries (test/oracle
+        helper; real sparse corpora arrive already in CSR)."""
+        x = np.asarray(x, np.float32)
+        rows, cols = np.nonzero(x)
+        counts = np.bincount(rows, minlength=x.shape[0])
+        indptr = np.concatenate([[0], np.cumsum(counts)]).astype(np.int64)
+        return cls(indptr=indptr, indices=cols.astype(np.int32),
+                   data=x[rows, cols].astype(np.float32), shape=x.shape)
+
+    # -- views ---------------------------------------------------------------
+    def row_slice(self, lo: int, hi: int) -> "CsrMatrix":
+        """Rows [lo, hi) as a standalone CSR (the pipeline's chunk view;
+        O(chunk nnz) copy of the index/data slices)."""
+        lo, hi = max(lo, 0), min(hi, self.n)
+        a, b = int(self.indptr[lo]), int(self.indptr[hi])
+        return CsrMatrix(indptr=(self.indptr[lo:hi + 1] - a).astype(np.int64),
+                         indices=self.indices[a:b], data=self.data[a:b],
+                         shape=(hi - lo, self.d))
+
+    def densify(self) -> np.ndarray:
+        """Dense float32 [n, d] (oracle path only — at paper scale this
+        is the allocation the sparse path exists to avoid)."""
+        out = np.zeros(self.shape, np.float32)
+        rows = np.repeat(np.arange(self.n), np.diff(self.indptr))
+        out[rows, self.indices] = self.data
+        return out
+
+
+def unit_buckets(csr: CsrMatrix, r_unit: int):
+    """Bucket a CSR chunk's nonzeros by canonical projection unit.
+
+    Returns ``(units, rows, lcols, vals)``: ``units`` int list of
+    occupied unit ids (ascending); the arrays are lists of per-unit
+    entries, EACH padded to its own power-of-two length (padding has
+    ``vals`` 0 / ``rows`` 0 / ``lcols`` 0, i.e. it scatter-adds an
+    exact zero).  ``rows`` index the chunk's rows, ``lcols`` are
+    unit-local column offsets.  Per-unit power-of-two caps keep the
+    jit'd scatter step at O(log nnz) executables across chunks while
+    keeping padded work near zero even on skewed data (a shared
+    chunk-wide cap would amplify one hot unit across every other one).
+    """
+    rows = np.repeat(np.arange(csr.n, dtype=np.int32),
+                     np.diff(csr.indptr))
+    cols = csr.indices
+    unit_id = cols // r_unit
+    order = np.argsort(unit_id, kind="stable")
+    rows, cols, vals = rows[order], cols[order], csr.data[order]
+    units, counts = np.unique(unit_id, return_counts=True)
+    b_rows, b_lcol, b_vals = [], [], []
+    starts = np.concatenate([[0], np.cumsum(counts)])
+    for i in range(units.size):
+        a, b = int(starts[i]), int(starts[i + 1])
+        m = b - a
+        cap = 1 << (m - 1).bit_length() if m else 1
+        b_rows.append(np.pad(rows[a:b], (0, cap - m)).astype(np.int32))
+        b_lcol.append(np.pad(cols[a:b] - units[i] * r_unit,
+                             (0, cap - m)).astype(np.int32))
+        b_vals.append(np.pad(vals[a:b], (0, cap - m)).astype(np.float32))
+    return [int(u) for u in units], b_rows, b_lcol, b_vals

@@ -85,13 +85,37 @@ class MutableAnnEngine:
 
     def add(self, x, ids=None) -> np.ndarray:
         """Encode vectors x float [m, D] and append (O(batch) donated
-        tail write, never O(corpus)); returns external ids int64 [m]."""
-        return self.store.add_codes(self.sketcher.encode(x), ids=ids)
+        tail write, never O(corpus)); returns external ids int64 [m].
+        Encoding runs through the shared ``repro.encode`` encoder — the
+        same numerics as queries and ``ingest``."""
+        return self.store.add_codes(self.encoder.encode_codes(x), ids=ids)
 
     def add_codes(self, codes, ids=None) -> np.ndarray:
         """Append pre-encoded int codes [m, k]; returns external ids
         int64 [m] (see ``SegmentLogStore.add_codes`` for id rules)."""
         return self.store.add_codes(codes, ids=ids)
+
+    def add_words(self, words, ids=None) -> np.ndarray:
+        """Append already-packed uint32 rows [m, W] (fused-ingest path);
+        returns external ids int64 [m]."""
+        return self.store.add_words(words, ids=ids)
+
+    @property
+    def encoder(self):
+        """The shared ``repro.encode.StreamingEncoder`` behind the query
+        coder — also the bulk-ingest encoder (one R cache, one seed)."""
+        return self._coder._encoder
+
+    def ingest(self, x, ids=None, *, chunk_rows: int = 2048,
+               impl: str = "auto") -> np.ndarray:
+        """Bulk-load raw vectors (dense [m, D] or ``encode.CsrMatrix``)
+        through the fused project→code→pack pipeline straight into the
+        segment log — no [m, k] f32/int32 intermediates, O(batch) tail
+        writes; returns the external ids int64 [m]."""
+        from repro.encode.pipeline import IngestPipeline
+        return IngestPipeline(self.encoder, self.store,
+                              chunk_rows=chunk_rows, impl=impl).ingest(
+                                  x, ids=ids)
 
     def delete(self, ids, strict: bool = True) -> int:
         """Tombstone external ids (1-bit mask write, zero recompiles);
@@ -100,8 +124,9 @@ class MutableAnnEngine:
 
     def upsert(self, ids, x) -> np.ndarray:
         """Replace-or-insert vectors x float [m, D] under stable
-        external ids int [m]; returns the ids."""
-        return self.store.upsert_codes(ids, self.sketcher.encode(x))
+        external ids int [m]; returns the ids (same shared-encoder
+        numerics as ``add``/``ingest``/queries)."""
+        return self.store.upsert_codes(ids, self.encoder.encode_codes(x))
 
     def upsert_codes(self, ids, codes) -> np.ndarray:
         """Replace-or-insert pre-encoded int codes [m, k] under stable

@@ -202,10 +202,42 @@ class SegmentLogStore:
         not collide with a live id (use ``upsert_codes`` to replace).
         O(batch) device copy via the donated tail write.
         """
+        shape = np.shape(codes)          # no copy/transfer, any array type
+        if len(shape) != 2 or shape[1] != self.k:
+            raise ValueError(f"codes {shape} != [m, {self.k}]")
+        ids = self._prepare_ids(ids, shape[0])
+        if shape[0] == 0:
+            return ids
         codes = jnp.asarray(codes)
-        if codes.ndim != 2 or codes.shape[1] != self.k:
-            raise ValueError(f"codes {codes.shape} != [m, {self.k}]")
-        m = codes.shape[0]
+        words = _ops.pack_codes(codes, self.bits, impl=self.impl)
+        hashes = (band_hashes(codes, self.band_spec)
+                  if self.band_spec else None)
+        return self._append(words, hashes, ids)
+
+    def add_words(self, words, ids=None) -> np.ndarray:
+        """Append already-packed uint32 rows [m, W] (the fused-ingest
+        path, ``repro.encode``): same id rules and O(batch) donated tail
+        write as ``add_codes``, but int32 codes for the batch never
+        exist on device — except, with a ``band_spec``, a chunk-local
+        unpack to compute the band hashes (O(batch), never O(corpus))."""
+        shape = np.shape(words)          # no copy/transfer, any array type
+        if len(shape) != 2 or shape[1] != self.n_words:
+            raise ValueError(f"words {shape} != [m, {self.n_words}]")
+        ids = self._prepare_ids(ids, shape[0])
+        if shape[0] == 0:
+            return ids
+        words = jnp.asarray(words, jnp.uint32)
+        if self.band_spec:
+            hashes = band_hashes(
+                _packing.unpack_codes(words, self.bits, self.k),
+                self.band_spec)
+        else:
+            hashes = None
+        return self._append(words, hashes, ids)
+
+    def _prepare_ids(self, ids, m: int) -> np.ndarray:
+        """Validate/auto-assign a batch's external ids — runs before any
+        device work so bad batches are rejected for free."""
         if ids is None:
             ids = np.arange(self.next_id, self.next_id + m, dtype=np.int64)
         else:
@@ -220,11 +252,12 @@ class SegmentLogStore:
                                  f"{clash[:5]}")
         if m and (ids.min() < 0 or ids.max() >= 2 ** 31 - 1):
             raise ValueError("ids must fit int32 (device id gather)")
-        if m == 0:
-            return ids
-        words = _ops.pack_codes(codes, self.bits, impl=self.impl)
-        hashes = (band_hashes(codes, self.band_spec)
-                  if self.band_spec else None)
+        return ids
+
+    def _append(self, words, hashes, ids) -> np.ndarray:
+        """Shared append tail: chunked donated tail writes (ids already
+        validated), seal-on-full, generation bump."""
+        m = words.shape[0]
         pos = 0
         while pos < m:
             t = min(self.tail_rows - self.tail.length, m - pos)

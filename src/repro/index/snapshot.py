@@ -37,8 +37,13 @@ def save_index(store: SegmentLogStore, directory: str, step: int,
                keep: int = 3) -> str:
     """Write the store as checkpoint ``directory/step_<step>``."""
     segs = store.segments()
+    # version 2: packed codes produced by the canonical r_unit-keyed R
+    # generation with the tagged offset key (repro.encode / core.sketch).
+    # Version-1 snapshots hold codes from the old block_d-keyed schedule:
+    # a new sketcher would disagree with them silently, so restore
+    # rejects them loudly instead.
     meta = {
-        "version": 1, "k": store.k, "bits": store.bits,
+        "version": 2, "k": store.k, "bits": store.bits,
         "tail_rows": store.tail_rows, "tail_len": store.tail.length,
         "next_id": store.next_id, "n_segments": len(segs),
         "impl": store.impl,
@@ -78,8 +83,11 @@ def restore_index(directory: str, step: int = None) -> SegmentLogStore:
                               _like_from_manifest(read_manifest(directory,
                                                                 step)))
     meta = json.loads(bytes(np.asarray(tree["meta"])).decode())
-    if meta.get("version") != 1:
-        raise ValueError(f"unknown snapshot version {meta.get('version')}")
+    if meta.get("version") != 2:
+        raise ValueError(
+            f"unsupported snapshot version {meta.get('version')} (v1 codes "
+            f"predate the canonical r_unit key schedule and would silently "
+            f"disagree with a current sketcher; re-ingest the corpus)")
     band = (BandSpec(n_tables=meta["band"][0], band_width=meta["band"][1])
             if meta["band"] else None)
     store = SegmentLogStore(meta["k"], meta["bits"], band_spec=band,

@@ -26,9 +26,11 @@ from repro.kernels.packed_linear import (
 from repro.kernels.packed_lut import (
     packed_lut_rerank_pallas, packed_lut_topk_masked_pallas,
     packed_lut_topk_pallas)
+from repro.kernels.encode_fused import code_pack_pallas, encode_fused_pallas
 from repro.kernels.proj_code import coded_project_pallas
 
-__all__ = ["coded_project", "pack_codes", "collision_counts",
+__all__ = ["coded_project", "encode_fused", "code_pack", "pack_codes",
+           "collision_counts",
            "packed_collision_counts", "packed_topk", "packed_topk_masked",
            "packed_lut_topk", "packed_lut_topk_masked", "packed_lut_rerank",
            "packed_linear_fwd", "packed_linear_fwd_masked",
@@ -52,6 +54,27 @@ def coded_project(x, r, spec: CodeSpec, q: Optional[jax.Array] = None,
         return _ref.coded_project_ref(x, r, spec, q)
     return coded_project_pallas(x, r, spec, q, interpret=_interpret(),
                                 **block_kwargs)
+
+
+def encode_fused(x, r, spec: CodeSpec, q: Optional[jax.Array] = None,
+                 impl: str = "auto", **block_kwargs):
+    """Fused pack(encode(x @ r)): [M, D] x [D, K] -> packed uint32
+    [M, ceil(K·b/32)] — the one-kernel ingest path (projections and
+    int32 codes never reach HBM)."""
+    if _resolve(impl) == "ref":
+        return _ref.encode_fused_ref(x, r, spec, q)
+    return encode_fused_pallas(x, r, spec, q, interpret=_interpret(),
+                               **block_kwargs)
+
+
+def code_pack(z, spec: CodeSpec, q: Optional[jax.Array] = None,
+              impl: str = "auto", **block_kwargs):
+    """Fused pack(encode(z)) of pre-projected values: [M, K] float ->
+    packed uint32 [M, ceil(K·b/32)] (the streaming encode finalize)."""
+    if _resolve(impl) == "ref":
+        return _ref.code_pack_ref(z, spec, q)
+    return code_pack_pallas(z, spec, q, interpret=_interpret(),
+                            **block_kwargs)
 
 
 def pack_codes(codes, bits: int, impl: str = "auto", **block_kwargs):

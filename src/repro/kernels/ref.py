@@ -12,7 +12,8 @@ from repro.core import packing as _packing
 from repro.core import schemes as _schemes
 from repro.core.schemes import CodeSpec
 
-__all__ = ["coded_project_ref", "pack_codes_ref", "collision_counts_ref",
+__all__ = ["coded_project_ref", "pack_codes_ref", "code_pack_ref",
+           "encode_fused_ref", "collision_counts_ref",
            "packed_collision_ref", "packed_topk_ref",
            "packed_topk_masked_ref", "topk_blocked_ref", "topk_stable_ref",
            "lut_scores_ref", "lut_scores_rowwise_ref", "topk_scored_ref",
@@ -35,6 +36,26 @@ def coded_project_ref(x, r, spec: CodeSpec, q=None):
 def pack_codes_ref(codes, bits: int):
     """codes int [M, K] -> uint32 words [M, ceil(K/(32/bits))]."""
     return _packing.pack_codes(codes, bits)
+
+
+def code_pack_ref(z, spec: CodeSpec, q=None):
+    """Projected z [M, K] float -> packed uint32 [M, ceil(K·b/32)].
+
+    Coding scheme + b-bit pack (the fused-encode epilogue); the oracle
+    for ``encode_fused.code_pack_pallas``, bit-exact including the
+    zero-padded fields past K."""
+    return _packing.pack_codes(
+        _schemes.encode(jnp.asarray(z, jnp.float32), spec, q), spec.bits)
+
+
+def encode_fused_ref(x, r, spec: CodeSpec, q=None):
+    """x [M, D] @ r [D, K] -> packed uint32 [M, ceil(K·b/32)].
+
+    Full fused-ingest oracle: f32-accumulated projection, coding under
+    ``spec``, bit-pack — the semantics contract of
+    ``encode_fused.encode_fused_pallas`` (packed words bit-exact)."""
+    return code_pack_ref(
+        jnp.dot(x, r, preferred_element_type=jnp.float32), spec, q)
 
 
 def collision_counts_ref(codes_q, codes_db):

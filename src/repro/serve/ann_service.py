@@ -103,6 +103,16 @@ class AnnService:
         cache invalidates on the next flush (generation bump)."""
         return self._mutable().add(x, ids=ids)
 
+    def bulk_load(self, x, ids=None, chunk_rows: int = 2048):
+        """Stream a whole corpus (dense [m, D] or ``encode.CsrMatrix``)
+        into the index through the fused matrix-free ingest pipeline
+        (``repro.encode``): chunked project→code→pack with only packed
+        words written back, O(batch) tail appends. Returns the external
+        ids int64 [m]; the result cache invalidates on the next flush.
+        """
+        return self._mutable().ingest(x, ids=ids, chunk_rows=chunk_rows,
+                                      impl=self.cfg.impl)
+
     def delete(self, ids, strict: bool = True) -> int:
         return self._mutable().delete(ids, strict=strict)
 

@@ -1,0 +1,406 @@
+"""repro.encode: fused ingest kernels, matrix-free streaming, CSR inputs,
+pipeline/bulk-load, and the sketch reproducibility invariants."""
+import numpy as np
+import pytest
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh
+
+from repro.ann import AnnEngine, BandSpec, CodeStore
+from repro.core import packing as _packing
+from repro.core.schemes import CodeSpec, sample_offsets
+from repro.core.sketch import (CodedRandomProjection, OFFSET_KEY_TAG,
+                               SketchConfig)
+from repro.encode import (CsrMatrix, IngestPipeline, StreamingEncoder,
+                          encode_sharded, unit_buckets)
+from repro.index import MutableAnnEngine, SegmentLogStore
+from repro.kernels import ops, ref
+from repro.kernels.encode_fused import code_pack_pallas, encode_fused_pallas
+from repro.serve.ann_service import AnnService, AnnServiceConfig
+
+SCHEMES = [("uniform", 1.0), ("2bit", 0.75), ("sign", 1.0), ("offset", 1.0)]
+SHAPES = [(8, 64, 32), (33, 700, 77), (100, 513, 128), (5, 100, 17)]
+
+
+def _unpacked_mismatches(got, want, bits, k):
+    ga = _packing.unpack_codes(got, bits, k)
+    wa = _packing.unpack_codes(want, bits, k)
+    return int(jnp.sum(ga != wa))
+
+
+# -- fused kernels vs oracles -------------------------------------------------
+
+@pytest.mark.parametrize("m,d,k", SHAPES)
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16],
+                         ids=["f32", "bf16"])
+@pytest.mark.parametrize("scheme,w", SCHEMES)
+def test_encode_fused_matches_ref(m, d, k, dtype, scheme, w):
+    key = jax.random.PRNGKey(m * 13 + k)
+    x = jax.random.normal(key, (m, d), dtype)
+    r = jax.random.normal(jax.random.fold_in(key, 1), (d, k), dtype)
+    q = sample_offsets(jax.random.fold_in(key, 2), k, w)
+    spec = CodeSpec(scheme, w)
+    got = encode_fused_pallas(x, r, spec, q, interpret=True,
+                              block_m=32, block_d=64)
+    want = ref.encode_fused_ref(x, r, spec, q)
+    assert got.shape == want.shape == (m, _packing.packed_width(k, spec.bits))
+    if dtype == jnp.float32:
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+    else:
+        # floor() at bin boundaries can flip one ulp between accumulation
+        # orders for bf16 inputs; allow a vanishing fraction of fields
+        mism = _unpacked_mismatches(got, want, spec.bits, k)
+        assert mism <= max(2, int(0.001 * m * k)), mism
+
+
+@pytest.mark.parametrize("m,k", [(5, 17), (64, 256), (130, 100)])
+@pytest.mark.parametrize("scheme,w", SCHEMES)
+def test_code_pack_matches_ref(m, k, scheme, w):
+    key = jax.random.PRNGKey(m + k)
+    z = jax.random.normal(key, (m, k)) * 2.0
+    q = sample_offsets(jax.random.fold_in(key, 1), k, w)
+    spec = CodeSpec(scheme, w)
+    got = code_pack_pallas(z, spec, q, interpret=True, block_m=32)
+    want = ref.code_pack_ref(z, spec, q)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_ops_dispatch_agrees():
+    key = jax.random.PRNGKey(7)
+    x = jax.random.normal(key, (20, 130))
+    r = jax.random.normal(jax.random.fold_in(key, 1), (130, 33))
+    spec = CodeSpec("2bit", 0.75)
+    np.testing.assert_array_equal(
+        np.asarray(ops.encode_fused(x, r, spec, impl="ref")),
+        np.asarray(ops.encode_fused(x, r, spec, impl="pallas",
+                                    block_m=16, block_d=32)))
+    z = x[:, :33]
+    np.testing.assert_array_equal(
+        np.asarray(ops.code_pack(z, spec, impl="ref")),
+        np.asarray(ops.code_pack(z, spec, impl="pallas", block_m=16)))
+
+
+# -- reproducibility invariants ----------------------------------------------
+
+def _sparse_corpus(rng, n, d, density=0.01):
+    x = np.zeros((n, d), np.float32)
+    nz = rng.random((n, d)) < density
+    x[nz] = rng.normal(size=int(nz.sum())).astype(np.float32)
+    return x
+
+
+@pytest.mark.parametrize("scheme,w", SCHEMES)
+def test_streaming_paths_bit_identical(rng, scheme, w):
+    """Same seed => identical packed words: oracle vs fused-kernel path
+    vs forced matrix-free streaming vs CSR input, at multi-unit D."""
+    d, k = 5000, 32
+    crp = CodedRandomProjection(
+        SketchConfig(k=k, scheme=scheme, w=w, seed=11, r_unit=2048), d)
+    x = jnp.asarray(_sparse_corpus(rng, 24, d, 0.02))
+    oracle = crp.sketch_oracle(x)
+    fused = StreamingEncoder(crp).encode_packed(x)
+    streamed = StreamingEncoder(crp, r_cap_elems=1).encode_packed(x)
+    csr = StreamingEncoder(crp).encode_packed(
+        CsrMatrix.from_dense(np.asarray(x)))
+    for got in (fused, streamed, csr):
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(oracle))
+    np.testing.assert_array_equal(np.asarray(crp.sketch(x)),
+                                  np.asarray(oracle))
+
+
+def test_block_d_is_not_part_of_sketch_identity(rng):
+    """block_d is a streaming knob only: any choice yields the same R,
+    codes and packed words (generation is keyed per r_unit)."""
+    d, k = 9000, 16
+    x = jnp.asarray(rng.normal(size=(8, d)).astype(np.float32))
+    base = None
+    for block_d in (512, 4096, 16384):
+        crp = CodedRandomProjection(
+            SketchConfig(k=k, scheme="2bit", w=0.75, seed=2,
+                         block_d=block_d), d)
+        words = np.asarray(crp.sketch_oracle(x))
+        if base is None:
+            base = words
+        else:
+            np.testing.assert_array_equal(words, base)
+
+
+def test_encode_sharded_matches_unsharded(rng):
+    d, k = 5000, 32
+    crp = CodedRandomProjection(
+        SketchConfig(k=k, scheme="2bit", w=0.75, seed=4, r_unit=2048), d)
+    enc = StreamingEncoder(crp)
+    x = jnp.asarray(rng.normal(size=(16, d)).astype(np.float32))
+    mesh = Mesh(np.asarray(jax.devices()[:1]), ("data",))
+    got = encode_sharded(enc, x, mesh)
+    np.testing.assert_array_equal(np.asarray(got),
+                                  np.asarray(crp.sketch_oracle(x)))
+
+
+def test_offset_key_disjoint_from_unit_keys():
+    """Regression: offsets used fold_in(key, 0xFFFF), colliding with
+    projection unit 65535; the offset key now lives at a tag strictly
+    above every admissible unit index."""
+    crp = CodedRandomProjection(SketchConfig(k=8, scheme="offset", w=1.0),
+                                256)
+    off = np.asarray(crp.offset_key())
+    # the old collision: unit 65535's key IS fold_in(key, 0xFFFF)
+    old = np.asarray(jax.random.fold_in(crp._key, 0xFFFF))
+    unit_65535 = np.asarray(jax.random.fold_in(crp._key, 65535))
+    np.testing.assert_array_equal(old, unit_65535)
+    for u in (0, 1, 65535, 2 ** 20, OFFSET_KEY_TAG - 1):
+        assert not np.array_equal(
+            off, np.asarray(jax.random.fold_in(crp._key, u))), u
+
+
+def test_unit_key_guard_rejects_absurd_d():
+    with pytest.raises(ValueError):
+        CodedRandomProjection(SketchConfig(k=4, r_unit=1), OFFSET_KEY_TAG)
+
+
+# -- never materialize R at large D ------------------------------------------
+
+def test_large_d_encode_never_builds_r(rng):
+    """D ≥ 1M: R would be d*k = 8.4M elements; the encoder streams it in
+    r_unit slabs (capped buffer), never concatenating the full matrix."""
+    d, k = 1 << 20, 8
+    crp = CodedRandomProjection(
+        SketchConfig(k=k, scheme="2bit", w=0.75, seed=9), d)
+    enc = StreamingEncoder(crp, r_cap_elems=1 << 22)
+    assert not enc.r_resident
+    with pytest.raises(ValueError):
+        enc.r_matrix()
+    x = jnp.asarray(rng.normal(size=(2, d)).astype(np.float32))
+    words = enc.encode_packed(x)
+    assert enc._rmat is None           # nothing cached, nothing built
+    assert enc.r_slab_elems == crp.cfg.r_unit * k
+    assert enc.r_slab_elems * 256 <= d * k   # slab is >=256x below full R
+    np.testing.assert_array_equal(np.asarray(words),
+                                  np.asarray(crp.sketch_oracle(x)))
+
+
+def test_query_coder_streams_above_cap(rng):
+    """QueryCoder at large D: r_matrix refuses, encode still serves."""
+    d, k = 1 << 20, 8
+    crp = CodedRandomProjection(
+        SketchConfig(k=k, scheme="2bit", w=0.75, seed=9), d)
+    from repro.ann.engine import QueryCoder
+    coder = QueryCoder(crp)
+    coder._encoder.r_cap_elems = 1 << 22
+    with pytest.raises(ValueError):
+        coder.r_matrix()
+    x = jnp.asarray(rng.normal(size=(2, d)).astype(np.float32))
+    np.testing.assert_array_equal(np.asarray(coder.encode(x)),
+                                  np.asarray(crp.encode(x)))
+
+
+# -- CSR container ------------------------------------------------------------
+
+def test_csr_roundtrip_and_slicing(rng):
+    x = _sparse_corpus(rng, 17, 200, 0.05)
+    csr = CsrMatrix.from_dense(x)
+    np.testing.assert_array_equal(csr.densify(), x)
+    np.testing.assert_array_equal(csr.row_slice(3, 11).densify(), x[3:11])
+    assert csr.row_slice(0, 0).nnz == 0
+    units, rows, lcols, vals = unit_buckets(csr, 64)
+    assert len(units) == len(rows) == len(lcols) == len(vals)
+    for r, c, v in zip(rows, lcols, vals):
+        assert r.shape == c.shape == v.shape
+        assert r.size == 1 << (r.size - 1).bit_length()   # pow2 per unit
+    assert all(0 <= u < 200 // 64 + 1 for u in units)
+
+
+def test_csr_empty_rows_and_empty_matrix():
+    d, k = 3000, 16
+    crp = CodedRandomProjection(
+        SketchConfig(k=k, scheme="2bit", w=0.75, r_unit=1024), d)
+    enc = StreamingEncoder(crp, r_cap_elems=1)
+    x = np.zeros((5, d), np.float32)
+    x[2, 7] = 1.5                       # rows 0,1,3,4 are all-zero
+    got = enc.encode_packed(CsrMatrix.from_dense(x))
+    np.testing.assert_array_equal(
+        np.asarray(got), np.asarray(crp.sketch_oracle(jnp.asarray(x))))
+    empty = CsrMatrix.from_dense(np.zeros((3, d), np.float32))
+    got0 = enc.encode_packed(empty)
+    np.testing.assert_array_equal(
+        np.asarray(got0),
+        np.asarray(crp.sketch_oracle(jnp.zeros((3, d)))))
+
+
+def test_csr_validation():
+    with pytest.raises(ValueError):
+        CsrMatrix(indptr=np.array([0, 1], np.int64),
+                  indices=np.array([5], np.int32),
+                  data=np.array([1.0], np.float32), shape=(1, 4))
+    with pytest.raises(ValueError):
+        CsrMatrix(indptr=np.array([0, 2], np.int64),
+                  indices=np.array([0], np.int32),
+                  data=np.array([1.0], np.float32), shape=(1, 4))
+
+
+# -- pipeline / stores --------------------------------------------------------
+
+def _corpus(rng, n, d):
+    x = rng.normal(size=(n, d)).astype(np.float32)
+    return x / np.linalg.norm(x, axis=1, keepdims=True)
+
+
+def test_pipeline_into_code_store(rng):
+    d, k = 300, 64
+    crp = CodedRandomProjection(SketchConfig(k=k, scheme="2bit", w=0.75), d)
+    x = _corpus(rng, 500, d)
+    oracle = crp.sketch_oracle(jnp.asarray(x))
+    store = CodeStore.from_words(
+        jnp.zeros((0, oracle.shape[1]), jnp.uint32), k, crp.spec.bits)
+    pipe = IngestPipeline(StreamingEncoder(crp), store, chunk_rows=128)
+    ids = pipe.ingest(x)
+    assert pipe.store.n == 500 and pipe.stats["chunks"] == 4
+    np.testing.assert_array_equal(np.asarray(ids), np.arange(500))
+    np.testing.assert_array_equal(np.asarray(pipe.store.words),
+                                  np.asarray(oracle))
+
+
+def test_pipeline_into_segment_log_matches_add_codes(rng):
+    d, k = 300, 64
+    crp = CodedRandomProjection(SketchConfig(k=k, scheme="2bit", w=0.75), d)
+    x = _corpus(rng, 300, d)
+    log_a = SegmentLogStore(k, crp.spec.bits, band_spec=BandSpec(8, 4),
+                            tail_rows=128)
+    log_a.add_codes(crp.encode(jnp.asarray(x)))
+    log_b = SegmentLogStore(k, crp.spec.bits, band_spec=BandSpec(8, 4),
+                            tail_rows=128)
+    IngestPipeline(StreamingEncoder(crp), log_b, chunk_rows=100).ingest(x)
+    np.testing.assert_array_equal(np.asarray(log_a.live_words()),
+                                  np.asarray(log_b.live_words()))
+    for sa, sb in zip(log_a.segments(), log_b.segments()):
+        if sa.hashes is not None:
+            np.testing.assert_array_equal(np.asarray(sa.hashes),
+                                          np.asarray(sb.hashes))
+
+
+def test_mutable_engine_ingest_search_matches_add(rng):
+    d, k = 200, 64
+    crp = CodedRandomProjection(SketchConfig(k=k, scheme="2bit", w=0.75), d)
+    x = _corpus(rng, 400, d)
+    eng_a = MutableAnnEngine(crp, tail_rows=128)
+    eng_a.add(jnp.asarray(x))
+    eng_b = MutableAnnEngine(crp, tail_rows=128)
+    ids = eng_b.ingest(x, chunk_rows=150)
+    assert ids.shape == (400,)
+    q = jnp.asarray(x[:20])
+    ids_a, rho_a = eng_a.search(q, top_k=5)
+    ids_b, rho_b = eng_b.search(q, top_k=5)
+    np.testing.assert_array_equal(np.asarray(ids_a), np.asarray(ids_b))
+    np.testing.assert_allclose(np.asarray(rho_a), np.asarray(rho_b))
+
+
+def test_ingest_bad_ids_is_atomic(rng):
+    """A cross-chunk id clash must be rejected before ANY chunk lands —
+    a mid-loop failure would leave the store partially mutated."""
+    d, k = 100, 64
+    crp = CodedRandomProjection(SketchConfig(k=k, scheme="2bit", w=0.75), d)
+    x = _corpus(rng, 8, d)
+    eng = MutableAnnEngine(crp, tail_rows=32)
+    bad = np.array([0, 1, 2, 3, 0, 5, 6, 7])       # dup across chunks
+    with pytest.raises(ValueError):
+        eng.ingest(x, ids=bad, chunk_rows=4)
+    assert eng.store.n_live == 0 and eng.generation == 0
+    eng.ingest(x[:4], ids=np.arange(4), chunk_rows=4)
+    with pytest.raises(ValueError):                 # clash with live ids
+        eng.ingest(x[4:], ids=np.array([3, 8, 9, 10]), chunk_rows=2)
+    assert eng.store.n_live == 4
+
+
+def test_service_bulk_load(rng):
+    d, k = 200, 64
+    crp = CodedRandomProjection(SketchConfig(k=k, scheme="2bit", w=0.75), d)
+    x = _corpus(rng, 300, d)
+    eng = MutableAnnEngine(crp, tail_rows=128)
+    svc = AnnService(eng, AnnServiceConfig(top_k=5))
+    gen0 = eng.generation
+    ids = svc.bulk_load(x, chunk_rows=128)
+    assert ids.shape == (300,) and eng.generation > gen0
+    t = svc.submit(x[7])
+    res = svc.flush()
+    assert int(res[t][0][0]) == 7          # self-neighbor retrieved
+    # immutable engines have no mutation endpoints
+    store = CodeStore.from_codes(crp.encode(jnp.asarray(x)), k,
+                                 crp.spec.bits)
+    svc2 = AnnService(AnnEngine(crp, store))
+    with pytest.raises(TypeError):
+        svc2.bulk_load(x)
+
+
+def test_add_words_matches_add_codes_with_bands(rng):
+    d, k = 100, 32
+    crp = CodedRandomProjection(SketchConfig(k=k, scheme="2bit", w=0.75), d)
+    codes = crp.encode(jnp.asarray(_corpus(rng, 64, d)))
+    words = crp.pack(codes)
+    log_a = SegmentLogStore(k, 2, band_spec=BandSpec(4, 4), tail_rows=32)
+    log_a.add_codes(codes)
+    log_b = SegmentLogStore(k, 2, band_spec=BandSpec(4, 4), tail_rows=32)
+    log_b.add_words(words)
+    for sa, sb in zip(log_a.segments(), log_b.segments()):
+        np.testing.assert_array_equal(np.asarray(sa.words),
+                                      np.asarray(sb.words))
+        np.testing.assert_array_equal(np.asarray(sa.hashes),
+                                      np.asarray(sb.hashes))
+    with pytest.raises(ValueError):
+        log_b.add_words(words[:, :-1])
+
+
+def test_code_store_add_words(rng):
+    d, k = 100, 32
+    crp = CodedRandomProjection(SketchConfig(k=k, scheme="2bit", w=0.75), d)
+    codes = crp.encode(jnp.asarray(_corpus(rng, 48, d)))
+    words = crp.pack(codes)
+    s = CodeStore.from_codes(codes[:16], k, 2).add_words(words[16:])
+    np.testing.assert_array_equal(np.asarray(s.words), np.asarray(words))
+
+
+# -- paper-scale sparse ingest (slow) ----------------------------------------
+
+@pytest.mark.slow
+def test_url_scale_sparse_ingest():
+    """D = 3.2M CSR ingest (the paper's §7 URL regime): matrix-free
+    streaming into a segment log — [D, k] never exists, packed words
+    are chunking-invariant, and a dense single-row oracle (touched
+    units only; untouched units contribute an exact float zero) pins
+    bit-exactness at full scale."""
+    rng = np.random.default_rng(0)
+    d, k, n, nnz_row = 3_200_000, 16, 48, 24
+    crp = CodedRandomProjection(
+        SketchConfig(k=k, scheme="2bit", w=0.75, seed=1), d)
+    cols = np.sort(rng.choice(d, size=(n, nnz_row), replace=True), axis=1)
+    vals = rng.normal(size=(n, nnz_row)).astype(np.float32)
+    # dedupe columns within a row (choice may repeat): keep first
+    keep = np.concatenate([np.ones((n, 1), bool),
+                           np.diff(cols, axis=1) != 0], axis=1)
+    indptr = np.concatenate([[0], np.cumsum(keep.sum(1))]).astype(np.int64)
+    csr = CsrMatrix(indptr=indptr, indices=cols[keep].astype(np.int32),
+                    data=vals[keep], shape=(n, d))
+    enc = StreamingEncoder(crp)
+    assert not enc.r_resident          # 51.2M elements >> cap
+    with pytest.raises(ValueError):
+        enc.r_matrix()
+    log = SegmentLogStore(k, crp.spec.bits, tail_rows=32)
+    IngestPipeline(enc, log, chunk_rows=32).ingest(csr)
+    got = np.asarray(log.live_words())
+    assert got.shape == (n, _packing.packed_width(k, crp.spec.bits))
+    # chunking invariance: a different chunk size, same packed words
+    log2 = SegmentLogStore(k, crp.spec.bits, tail_rows=32)
+    IngestPipeline(enc, log2, chunk_rows=16).ingest(csr)
+    np.testing.assert_array_equal(got, np.asarray(log2.live_words()))
+    # dense oracle for one row, eagerly unit-by-unit over touched units
+    i = 0
+    sl = slice(int(csr.indptr[i]), int(csr.indptr[i + 1]))
+    ru = crp.cfg.r_unit
+    z = jnp.zeros((1, k))
+    for u in sorted(set(int(c) // ru for c in csr.indices[sl])):
+        width = crp.unit_width(u)
+        xe = np.zeros((1, width), np.float32)
+        inu = (csr.indices[sl] // ru) == u
+        xe[0, csr.indices[sl][inu] - u * ru] = csr.data[sl][inu]
+        z = z + jnp.asarray(xe) @ crp._block_r(u, width)
+    want = np.asarray(crp.pack(crp.encode_projected(z)))[0]
+    np.testing.assert_array_equal(got[i], want)
