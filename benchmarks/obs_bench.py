@@ -1,0 +1,197 @@
+"""Observability overhead benchmark: what the measuring layer costs.
+
+An observability layer that taxes the hot path gets turned off, and an
+unmeasured system drifts; this bench keeps ``repro.obs`` honest on both
+counts. Measured:
+
+  * end-to-end QPS of the exact-search serving hot path
+    (``serve.AnnService`` submit→flush, cache disabled so every query
+    does device work) with metrics ENABLED vs DISABLED — the acceptance
+    contract is <= 3% QPS overhead enabled;
+  * microbenchmarks of the primitives: counter ``inc``, histogram
+    ``observe`` (log-bucket math), disabled-registry no-op metrics, and
+    a ``span(...)`` enter/exit with no tracer installed;
+  * a real trace artifact: one ingest → search → delete → compact cycle
+    over the mutable engine recorded under a ``Tracer`` and dumped as
+    Chrome-trace/Perfetto JSON next to the BENCH files (load it at
+    https://ui.perfetto.dev).
+
+Wall-clock numbers are median-of-N with ``block_until_ready`` (the
+serving flush syncs via its own host transfer).
+
+``BENCH_obs.json`` (repo root) records the QPS pair, the overhead
+fraction, the primitive costs and the trace path.
+"""
+import json
+import os
+import sys
+import time
+
+import numpy as np
+import jax
+
+if __package__ in (None, ""):            # direct `python benchmarks/obs_bench.py`
+    _root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    sys.path.insert(0, _root)
+    sys.path.insert(0, os.path.join(_root, "src"))
+
+_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+from benchmarks._util import write_csv
+from repro.ann import AnnEngine, BandSpec
+from repro.core.sketch import CodedRandomProjection, SketchConfig
+from repro.index import MutableAnnEngine
+from repro.obs import (MetricsRegistry, Tracer, no_tracing,
+                       set_default_registry, span)
+from repro.serve import AnnService, AnnServiceConfig
+
+K = 64
+
+
+def _median_qps(svc, queries, repeat):
+    """Median submit-all+flush QPS over ``repeat`` rounds (the flush's
+    host transfer of results is the device sync)."""
+    nq = queries.shape[0]
+    for x in queries:                     # warm every jit + bucket
+        svc.submit(x)
+    svc.flush()
+    ts = []
+    for _ in range(repeat):
+        t0 = time.perf_counter()
+        for x in queries:
+            svc.submit(x)
+        svc.flush()
+        ts.append(time.perf_counter() - t0)
+    return nq / float(np.median(ts))
+
+
+def _ns_per(fn, n=100_000):
+    fn()                                  # touch once outside the timer
+    t0 = time.perf_counter()
+    for _ in range(n):
+        fn()
+    return 1e9 * (time.perf_counter() - t0) / n
+
+
+def _trace_cycle(d, rows, path):
+    """Record one ingest → search → delete → compact cycle and dump the
+    Chrome trace; returns (path, n_events)."""
+    crp = CodedRandomProjection(SketchConfig(k=K, scheme="2bit", w=0.75), d)
+    eng = MutableAnnEngine(crp, tail_rows=256)
+    rng = np.random.default_rng(0)
+    x = rng.standard_normal((rows, d)).astype(np.float32)
+    with Tracer() as tr:
+        ids = eng.ingest(x, chunk_rows=256)
+        eng.search(x[:32], 10, mode="exact", chunk_q=32)
+        eng.delete(ids[: rows // 3])
+        eng.compact()
+    tr.dump(path)
+    return path, len(tr.events)
+
+
+def _bench(d, n, nq, repeat):
+    rng = np.random.default_rng(0)
+    corpus = rng.standard_normal((n, d)).astype(np.float32)
+    queries = corpus[:nq] + 0.1 * rng.standard_normal(
+        (nq, d)).astype(np.float32)
+    crp = CodedRandomProjection(SketchConfig(k=K, scheme="2bit", w=0.75), d)
+    engine = AnnEngine.build(crp, corpus, BandSpec(n_tables=8, band_width=4))
+    cfg = AnnServiceConfig(top_k=10, mode="exact", cache_size=0,
+                           buckets=(nq,))
+
+    # the enabled-vs-disabled pair isolates the *metrics* cost: span
+    # recording is a separate knob, so any tracer the harness installed
+    # (run.py --profile) is suspended for both measurements
+    prev = set_default_registry(MetricsRegistry(enabled=True))
+    try:
+        with no_tracing():
+            svc_on = AnnService(engine, cfg,
+                                registry=MetricsRegistry(enabled=True))
+            qps_on = _median_qps(svc_on, queries, repeat)
+            set_default_registry(MetricsRegistry(enabled=False))
+            svc_off = AnnService(engine, cfg,
+                                 registry=MetricsRegistry(enabled=False))
+            qps_off = _median_qps(svc_off, queries, repeat)
+    finally:
+        set_default_registry(prev)
+
+    reg_on = MetricsRegistry(enabled=True)
+    reg_off = MetricsRegistry(enabled=False)
+    c_on, c_off = reg_on.counter("bench.c"), reg_off.counter("bench.c")
+    h_on, h_off = reg_on.histogram("bench.h"), reg_off.histogram("bench.h")
+
+    def _span_noop():
+        with span("bench.span"):
+            pass
+
+    trace_path, trace_events = _trace_cycle(
+        d, 1024, os.path.join(_ROOT, "TRACE_obs_cycle.json"))
+
+    # the span microbench measures the NO-tracer cost — suspend any
+    # tracer the harness (run.py --profile) may have installed
+    with no_tracing():
+        ns_span = _ns_per(_span_noop)
+
+    overhead = 1.0 - qps_on / qps_off
+    return {
+        "corpus": n, "queries": nq, "k": K, "bits": 2,
+        "qps_metrics_enabled": qps_on,
+        "qps_metrics_disabled": qps_off,
+        "overhead_frac": overhead,
+        "ns_counter_inc": _ns_per(lambda: c_on.inc()),
+        "ns_counter_inc_disabled": _ns_per(lambda: c_off.inc()),
+        "ns_histogram_observe": _ns_per(lambda: h_on.observe(3e-4)),
+        "ns_histogram_observe_disabled": _ns_per(
+            lambda: h_off.observe(3e-4)),
+        "ns_span_no_tracer": ns_span,
+        "trace_file": os.path.basename(trace_path),
+        "trace_events": trace_events,
+        "timing": "median-of-%d, device-synced flush" % repeat,
+    }
+
+
+def _rows(r):
+    return [
+        ("obs_serve_enabled", 1e6 / r["qps_metrics_enabled"],
+         f"qps={r['qps_metrics_enabled']:.0f}"),
+        ("obs_serve_disabled", 1e6 / r["qps_metrics_disabled"],
+         f"qps={r['qps_metrics_disabled']:.0f} "
+         f"overhead={100 * r['overhead_frac']:.2f}%"),
+        ("obs_counter_inc", 1e-3 * r["ns_counter_inc"],
+         f"disabled_ns={r['ns_counter_inc_disabled']:.0f}"),
+        ("obs_histogram_observe", 1e-3 * r["ns_histogram_observe"],
+         f"disabled_ns={r['ns_histogram_observe_disabled']:.0f}"),
+        ("obs_span_no_tracer", 1e-3 * r["ns_span_no_tracer"],
+         f"trace_events={r['trace_events']}"),
+    ]
+
+
+def run(quick: bool = True):
+    """run.py contract: (name, us_per_call, derived) rows."""
+    r = _bench(d=64, n=4096 if quick else 65536, nq=64,
+               repeat=5 if quick else 9)
+    rows = _rows(r)
+    write_csv("obs_bench", ["name", "us_per_call", "derived"], rows)
+    return rows
+
+
+def main():
+    r = _bench(d=64, n=65536, nq=64, repeat=9)
+    write_csv("obs_bench", ["name", "us_per_call", "derived"], _rows(r))
+    with open(os.path.join(_ROOT, "BENCH_obs.json"), "w") as f:
+        json.dump(r, f, indent=1)
+    print("BENCH " + json.dumps(r))
+    print(f"\nmetrics-enabled hot path: {r['qps_metrics_enabled']:.0f} qps "
+          f"vs disabled {r['qps_metrics_disabled']:.0f} qps "
+          f"({100 * r['overhead_frac']:.2f}% overhead)")
+    print(f"primitives: counter {r['ns_counter_inc']:.0f} ns, histogram "
+          f"{r['ns_histogram_observe']:.0f} ns, span(no tracer) "
+          f"{r['ns_span_no_tracer']:.0f} ns")
+    ok = r["overhead_frac"] <= 0.03
+    print("acceptance: " + ("PASS" if ok else "FAIL"))
+    if not ok:
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -3,6 +3,11 @@
 Prints ``name,us_per_call,derived`` CSV per row (scaffold contract) and
 writes detailed tables to benchmarks/out/*.csv.
 
+``--profile`` records every module's run under a ``repro.obs.Tracer``
+and writes one Chrome-trace/Perfetto JSON per module next to the BENCH
+files (repo root, ``TRACE_<module>.json``) — load at
+https://ui.perfetto.dev for the flame view.
+
 ``python benchmarks/run.py lint`` runs the docs/docstring lint
 (``scripts/check_docs.py``) instead of the benchmarks.
 """
@@ -34,6 +39,7 @@ MODULES = [
     "benchmarks.ingest_bench",
     "benchmarks.rank_bench",
     "benchmarks.learn_bench",
+    "benchmarks.obs_bench",
 ]
 
 
@@ -44,12 +50,16 @@ def main() -> None:
                     help="bench (default) or lint (docs/docstring checks)")
     ap.add_argument("--full", action="store_true", help="bigger sizes")
     ap.add_argument("--only", default="", help="substring filter")
+    ap.add_argument("--profile", action="store_true",
+                    help="trace each module; write TRACE_<module>.json "
+                         "(Perfetto) next to the BENCH files")
     args = ap.parse_args()
     if args.cmd == "lint":
         root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
         sys.path.insert(0, os.path.join(root, "scripts"))
         import check_docs
         raise SystemExit(check_docs.main())
+    root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
     print("name,us_per_call,derived")
     failed = 0
     for modname in MODULES:
@@ -57,7 +67,17 @@ def main() -> None:
             continue
         try:
             mod = importlib.import_module(modname)
-            for name, us, derived in mod.run(quick=not args.full):
+            if args.profile:
+                from repro.obs import Tracer
+                short = modname.rsplit(".", 1)[-1]
+                with Tracer() as tr:
+                    rows = mod.run(quick=not args.full)
+                path = tr.dump(os.path.join(root, f"TRACE_{short}.json"))
+                print(f"# trace: {path} ({len(tr.events)} events)",
+                      file=sys.stderr, flush=True)
+            else:
+                rows = mod.run(quick=not args.full)
+            for name, us, derived in rows:
                 print(f"{name},{us:.1f},{derived}", flush=True)
         except Exception:
             failed += 1

@@ -63,7 +63,7 @@ def main():
     tickets = [svc.submit(corpus[i]) for i in range(5)]
     svc.flush()
     ids0, _ = svc.result(tickets[0])
-    print(f"\nservice: {svc.stats}, ticket0 top ids {np.asarray(ids0)}")
+    print(f"\nservice: {dict(svc.stats)}, ticket0 top ids {np.asarray(ids0)}")
 
     # legacy wrapper still answers one query at a time
     index = LSHIndex(crp, n_tables=16, band_width=6).build(corpus)

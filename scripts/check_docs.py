@@ -22,7 +22,7 @@ import sys
 
 ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 PACKAGES = ("repro.ann", "repro.index", "repro.rank", "repro.learn",
-            "repro.encode")
+            "repro.encode", "repro.obs")
 DOC_FILES = ["README.md"]
 DOC_DIRS = ["docs"]
 

@@ -49,6 +49,7 @@ from repro.core import packing as _packing
 from repro.core.sketch import CodedRandomProjection
 from repro.kernels import ops as _ops
 from repro.kernels import ref as _ref
+from repro.obs import span, tracing_active
 from repro.rank.tables import RankTables, build_rank_tables
 
 __all__ = ["SearchConfig", "AnnEngine", "QueryCoder", "merge_topk",
@@ -224,6 +225,7 @@ class AnnEngine:
         self._coder = QueryCoder(sketcher)
         self._rank_tables = rank_tables
         self._search_fns = {}
+        self._stage_fns = {}      # cfg -> (jit coarse, jit rerank)
 
     # -- construction / ingestion -------------------------------------------
     @classmethod
@@ -296,13 +298,22 @@ class AnnEngine:
         return self.search_codes(self.encode_queries(queries, impl=impl), cfg)
 
     def search_codes(self, q_codes, cfg: SearchConfig):
-        """Search pre-encoded queries [Q, k] (chunked, padded to one shape)."""
+        """Search pre-encoded queries [Q, k] (chunked, padded to one shape).
+
+        When a ``repro.obs.Tracer`` is installed, every chunk runs under
+        device-synced spans — two-stage scored searches as a
+        ``search.coarse`` / ``search.rerank`` pair (the two stages jit
+        separately at a chunk boundary; same kernels, same results), so
+        a trace attributes coarse and re-rank wall time honestly.
+        """
         if cfg.mode not in ("exact", "lsh"):
             raise ValueError(f"unknown mode {cfg.mode!r}")
         q = q_codes.shape[0]
         if q == 0:
             return (jnp.zeros((0, cfg.top_k), jnp.int32),
                     jnp.zeros((0, cfg.top_k), jnp.float32))
+        if tracing_active():
+            return run_chunked(q_codes, cfg, self._traced_chunk)
         return run_chunked(q_codes, cfg,
                            lambda chunk, c: self._chunk_fn(c)(chunk))
 
@@ -318,6 +329,37 @@ class AnnEngine:
             self._search_fns[cfg] = fn
         return fn
 
+    def _stage_fn_pair(self, cfg: SearchConfig):
+        """jit'd (coarse, rerank) stage pair for span-split scored
+        search; cached per SearchConfig like ``_chunk_fn``."""
+        fns = self._stage_fns.get(cfg)
+        if fns is None:
+            self.rank_tables            # host-side build, outside the trace
+            body = (self._exact_coarse if cfg.mode == "exact"
+                    else self._lsh_coarse)
+            coarse = jax.jit(functools.partial(body, cfg=cfg))
+            rerank = jax.jit(lambda qc, ids: self._rerank(qc, ids, cfg))
+            fns = self._stage_fns[cfg] = (coarse, rerank)
+        return fns
+
+    def _traced_chunk(self, chunk, cfg: SearchConfig):
+        """One chunk under spans (tracer installed). Non-scored chunks
+        get one ``search.chunk`` span; scored chunks split into
+        device-synced ``search.coarse`` + ``search.rerank``."""
+        if not cfg.scored:
+            with span("search.chunk", mode=cfg.mode,
+                      q=int(chunk.shape[0])) as sp:
+                out = sp.sync(self._chunk_fn(cfg)(chunk))
+            return out
+        coarse, rerank = self._stage_fn_pair(cfg)
+        with span("search.coarse", mode=cfg.mode,
+                  q=int(chunk.shape[0]),
+                  m=cfg.resolve_m(self.store.n)) as sp:
+            _, cand_ids = sp.sync(coarse(chunk))
+        with span("search.rerank", top_k=cfg.top_k) as sp:
+            out = sp.sync(rerank(chunk, cand_ids))
+        return out
+
     def _rho(self, counts):
         """Collision counts -> rho_hat via the paper's estimator; empty
         slots (count < 0) surface as rho = -1."""
@@ -332,18 +374,24 @@ class AnnEngine:
                                        impl=cfg.impl)
         return ids, rho_scored(self.rank_tables, ids, scores)
 
-    def _exact_chunk(self, q_codes, *, cfg: SearchConfig):
+    def _exact_coarse(self, q_codes, *, cfg: SearchConfig):
+        """Coarse pass of one exact chunk -> (vals, ids) at top-m (scored)
+        or top-k (counts-only)."""
         q_words = _ops.pack_codes(q_codes, self.store.bits, impl=cfg.impl)
         top = cfg.resolve_m(self.store.n) if cfg.scored else cfg.top_k
         vals, ids = _ops.packed_topk(
             q_words, self.store.words, self.store.bits, self.sketcher.cfg.k,
             top, impl=cfg.impl)
-        ids = jnp.where(vals < 0, -1, ids)
+        return vals, jnp.where(vals < 0, -1, ids)
+
+    def _exact_chunk(self, q_codes, *, cfg: SearchConfig):
+        vals, ids = self._exact_coarse(q_codes, cfg=cfg)
         if cfg.scored:
             return self._rerank(q_codes, ids, cfg)
         return ids, self._rho(vals)
 
-    def _lsh_chunk(self, q_codes, *, cfg: SearchConfig):
+    def _lsh_coarse(self, q_codes, *, cfg: SearchConfig):
+        """Coarse pass of one lsh chunk -> (vals, ids), band-filtered."""
         q_words = _ops.pack_codes(q_codes, self.store.bits, impl=cfg.impl)
         qh = probe_hashes(q_codes, self.band_spec, cfg.n_probes)
         coarse = _coarse_band_scores(qh, self.db_band_hashes)
@@ -353,7 +401,10 @@ class AnnEngine:
         # non-candidates (too few matching bands) are unretrievable
         counts = jnp.where(coarse >= cfg.min_bands, counts, -1)
         top = cfg.resolve_m(self.store.n) if cfg.scored else cfg.top_k
-        vals, ids = _ref.topk_stable_ref(counts, top)
+        return _ref.topk_stable_ref(counts, top)
+
+    def _lsh_chunk(self, q_codes, *, cfg: SearchConfig):
+        vals, ids = self._lsh_coarse(q_codes, cfg=cfg)
         if cfg.scored:
             return self._rerank(q_codes, ids, cfg)
         return ids, self._rho(vals)

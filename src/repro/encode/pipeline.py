@@ -16,6 +16,9 @@ words are bit-identical to a single-device encode at any device count.
 """
 from __future__ import annotations
 
+import time
+from types import MappingProxyType
+
 import numpy as np
 import jax
 import jax.numpy as jnp
@@ -24,6 +27,7 @@ from jax.sharding import Mesh, PartitionSpec as P
 from repro.encode.encoder import StreamingEncoder
 from repro.encode.sparse import CsrMatrix
 from repro.kernels import ops as _ops
+from repro.obs import MetricsRegistry, span
 from repro.parallel.sharding import shard_map_unchecked
 
 __all__ = ["IngestPipeline", "encode_sharded"]
@@ -36,19 +40,34 @@ class IngestPipeline:
     ``add_codes``/``add_words`` with external-id support; mutated in
     place) or a ``CodeStore``-like object (has ``merge``/``from_words``;
     rebound on ``self.store`` per chunk — read it back after
-    ``ingest``).  ``stats`` accumulates rows, chunks and packed bytes
-    across calls.
+    ``ingest``).  ``stats`` is a read-only view of the ``repro.obs``
+    counters accumulating rows, chunks and packed bytes across calls;
+    per-chunk encode latency lands in the ``encode.chunk_s`` histogram
+    and each chunk opens an ``encode.chunk`` span when tracing.
     """
 
     def __init__(self, encoder: StreamingEncoder, store, *,
-                 chunk_rows: int = 2048, impl: str = "auto"):
+                 chunk_rows: int = 2048, impl: str = "auto",
+                 registry: MetricsRegistry = None):
         if chunk_rows <= 0:
             raise ValueError(f"chunk_rows must be positive: {chunk_rows}")
         self.encoder = encoder
         self.store = store
         self.chunk_rows = int(chunk_rows)
         self.impl = impl
-        self.stats = {"rows": 0, "chunks": 0, "packed_bytes": 0}
+        self.registry = registry if registry is not None \
+            else MetricsRegistry(enabled=True)
+        self._c_rows = self.registry.counter("encode.rows")
+        self._c_chunks = self.registry.counter("encode.chunks")
+        self._c_bytes = self.registry.counter("encode.packed_bytes")
+        self._h_chunk = self.registry.histogram("encode.chunk_s")
+
+    @property
+    def stats(self):
+        """Read-only compat view of the ingest counters."""
+        return MappingProxyType({"rows": self._c_rows.value,
+                                 "chunks": self._c_chunks.value,
+                                 "packed_bytes": self._c_bytes.value})
 
     def _encode_chunk(self, x, lo: int, hi: int):
         """Rows [lo, hi) -> packed words [hi-lo, W]; the chunk is padded
@@ -102,21 +121,26 @@ class IngestPipeline:
                 raise ValueError(f"ids already live (upsert instead): "
                                  f"{clash[:5]}")
         out_ids = []
-        for lo in range(0, n, self.chunk_rows):
-            hi = min(lo + self.chunk_rows, n)
-            words = self._encode_chunk(x, lo, hi)
-            chunk_ids = None if ids is None else ids[lo:hi]
-            if hasattr(self.store, "add_codes"):        # mutable log
-                out_ids.append(np.asarray(
-                    self.store.add_words(words, ids=chunk_ids)))
-            else:                                       # immutable store
-                start = self.store.n
-                self.store = self.store.add_words(words)
-                out_ids.append(np.arange(start, start + (hi - lo),
-                                         dtype=np.int64))
-            self.stats["rows"] += hi - lo
-            self.stats["chunks"] += 1
-            self.stats["packed_bytes"] += int(words.size) * 4
+        with span("encode.ingest", rows=n) as sp:
+            for lo in range(0, n, self.chunk_rows):
+                hi = min(lo + self.chunk_rows, n)
+                t0 = time.perf_counter()
+                with span("encode.chunk", rows=hi - lo) as csp:
+                    words = csp.sync(self._encode_chunk(x, lo, hi))
+                self._h_chunk.observe(time.perf_counter() - t0)
+                chunk_ids = None if ids is None else ids[lo:hi]
+                if hasattr(self.store, "add_codes"):        # mutable log
+                    out_ids.append(np.asarray(
+                        self.store.add_words(words, ids=chunk_ids)))
+                else:                                       # immutable store
+                    start = self.store.n
+                    self.store = self.store.add_words(words)
+                    out_ids.append(np.arange(start, start + (hi - lo),
+                                             dtype=np.int64))
+                self._c_rows.inc(hi - lo)
+                self._c_chunks.inc()
+                self._c_bytes.inc(int(words.size) * 4)
+            sp.set(chunks=self._c_chunks.value)
         return (np.concatenate(out_ids) if out_ids
                 else np.zeros(0, np.int64))
 

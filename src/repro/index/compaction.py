@@ -32,6 +32,7 @@ import jax.numpy as jnp
 
 from repro.index.segment_log import Segment, SegmentLogStore, \
     _np_pack_bitmask
+from repro.obs import span
 
 __all__ = ["CompactionPolicy", "plan_compaction", "compact"]
 
@@ -93,31 +94,42 @@ def _rewrite_run(store: SegmentLogStore, run: list[Segment]) -> Segment:
 def compact(store: SegmentLogStore,
             policy: CompactionPolicy = CompactionPolicy()) -> dict:
     """Rewrite planned runs in place. Iteration order of live rows — and
-    therefore every search result — is unchanged."""
-    runs = plan_compaction(store, policy)
-    before = len(store.sealed)
-    dropped = 0
-    copied_bytes = 0
-    run_at = {run[0]: run for run in runs}
-    in_run = {i for run in runs for i in run}
-    new_sealed: list[Segment] = []
-    for i, seg in enumerate(store.sealed):
-        if i not in in_run:
-            new_sealed.append(seg)
-            continue
-        if i not in run_at:
-            continue            # consumed by the run starting earlier
-        run = [store.sealed[j] for j in run_at[i]]
-        merged = _rewrite_run(store, run)
-        dropped += sum(s.length for s in run) - merged.length
-        copied_bytes += merged.words.size * 4
-        for row in range(merged.length):
-            store._by_id[int(merged.ids[row])] = (merged, row)
-        if merged.length:       # an all-dead run just vanishes
-            new_sealed.append(merged)
-    store.sealed = new_sealed
-    if runs:
-        store.generation += 1
+    therefore every search result — is unchanged. Reports through the
+    store's ``repro.obs`` registry (``index.compactions`` /
+    ``index.compact_rows_dropped`` / ``index.compact_bytes_copied``) and
+    opens an ``index.compact`` span when tracing."""
+    with span("index.compact") as sp:
+        runs = plan_compaction(store, policy)
+        before = len(store.sealed)
+        dropped = 0
+        copied_bytes = 0
+        run_at = {run[0]: run for run in runs}
+        in_run = {i for run in runs for i in run}
+        new_sealed: list[Segment] = []
+        for i, seg in enumerate(store.sealed):
+            if i not in in_run:
+                new_sealed.append(seg)
+                continue
+            if i not in run_at:
+                continue            # consumed by the run starting earlier
+            run = [store.sealed[j] for j in run_at[i]]
+            merged = _rewrite_run(store, run)
+            sp.sync(merged.words)     # Segment is not a pytree
+            dropped += sum(s.length for s in run) - merged.length
+            copied_bytes += merged.words.size * 4
+            for row in range(merged.length):
+                store._by_id[int(merged.ids[row])] = (merged, row)
+            if merged.length:       # an all-dead run just vanishes
+                new_sealed.append(merged)
+        store.sealed = new_sealed
+        if runs:
+            store.generation += 1
+        reg = store.registry
+        reg.counter("index.compactions").inc()
+        reg.counter("index.compact_rows_dropped").inc(dropped)
+        reg.counter("index.compact_bytes_copied").inc(copied_bytes)
+        store._update_gauges()
+        sp.set(runs=len(runs), rows_dropped=dropped)
     return {"runs": len(runs), "segments_before": before,
             "segments_after": len(store.sealed),
             "rows_dropped": dropped, "bytes_copied": copied_bytes}

@@ -39,6 +39,7 @@ from repro.index.segment_log import SegmentLogStore
 from repro.index.snapshot import restore_index, save_index
 from repro.kernels import ops as _ops
 from repro.kernels import ref as _ref
+from repro.obs import span
 
 __all__ = ["MutableAnnEngine"]
 
@@ -206,26 +207,36 @@ class MutableAnnEngine:
         q_tables = (self.rank_tables.query_tables(q_codes)
                     if cfg.scored else None)
         vals_l, ids_l = [], []
-        for seg in self.store.segments():
+        # the span syncs below are passthrough no-ops unless a tracer is
+        # installed, so the eager segment loop only serializes the
+        # device pipeline while a trace is actually being recorded
+        for i, seg in enumerate(self.store.segments()):
             if seg.live == 0:
                 continue
             top = cfg.resolve_m(seg.cap) if cfg.scored else cfg.top_k
-            if cfg.mode == "exact":
-                vals, rows = _ops.packed_topk_masked(
-                    q_words, seg.words, seg.valid_dev(), bits, k,
-                    top, impl=cfg.impl)
-            else:
-                counts = _ops.packed_collision_counts(
-                    q_words, seg.words, bits, k, impl=cfg.impl)
-                coarse = _coarse_band_scores(qh, seg.hashes)
-                live = _packing.unpack_bitmask(seg.valid_dev(), seg.cap)
-                counts = jnp.where(live[None, :]
-                                   & (coarse >= cfg.min_bands), counts, -1)
-                vals, rows = _ref.topk_stable_ref(counts, top)
+            with span("search.coarse", mode=cfg.mode, segment=i,
+                      rows=seg.cap) as sp:
+                if cfg.mode == "exact":
+                    vals, rows = _ops.packed_topk_masked(
+                        q_words, seg.words, seg.valid_dev(), bits, k,
+                        top, impl=cfg.impl)
+                else:
+                    counts = _ops.packed_collision_counts(
+                        q_words, seg.words, bits, k, impl=cfg.impl)
+                    coarse = _coarse_band_scores(qh, seg.hashes)
+                    live = _packing.unpack_bitmask(seg.valid_dev(), seg.cap)
+                    counts = jnp.where(live[None, :]
+                                       & (coarse >= cfg.min_bands),
+                                       counts, -1)
+                    vals, rows = _ref.topk_stable_ref(counts, top)
+                sp.sync(rows)
             if cfg.scored:
-                rows, vals = lut_rerank_stage(
-                    self.rank_tables, q_codes, rows, seg.words,
-                    cfg.top_k, impl=cfg.impl, q_tables=q_tables)
+                with span("search.rerank", segment=i,
+                          top_k=cfg.top_k) as sp:
+                    rows, vals = lut_rerank_stage(
+                        self.rank_tables, q_codes, rows, seg.words,
+                        cfg.top_k, impl=cfg.impl, q_tables=q_tables)
+                    sp.sync(vals)
             ext = jnp.take(seg.ids_dev(),
                            jnp.clip(rows, 0, seg.cap - 1), axis=0)
             ids_l.append(jnp.where(rows < 0, -1, ext))

@@ -42,6 +42,7 @@ import jax.numpy as jnp
 from repro.ann.bands import BandSpec, band_hashes
 from repro.core import packing as _packing
 from repro.kernels import ops as _ops
+from repro.obs import MetricsRegistry
 
 __all__ = ["Segment", "SegmentLogStore"]
 
@@ -140,7 +141,8 @@ class SegmentLogStore:
     """
 
     def __init__(self, k: int, bits: int, *, band_spec: BandSpec = None,
-                 tail_rows: int = 1024, impl: str = "auto"):
+                 tail_rows: int = 1024, impl: str = "auto",
+                 registry: MetricsRegistry = None):
         if tail_rows % 32:
             raise ValueError(f"tail_rows must be a multiple of 32, "
                              f"got {tail_rows}")
@@ -155,6 +157,27 @@ class SegmentLogStore:
         self.next_id = 0
         self.generation = 0
         self._by_id: dict[int, tuple[Segment, int]] = {}
+        self.registry = registry if registry is not None \
+            else MetricsRegistry(enabled=True)
+        self._c_appended = self.registry.counter("index.rows_appended")
+        self._c_deleted = self.registry.counter("index.rows_deleted")
+        self._c_seals = self.registry.counter("index.seals")
+        self._g_live = self.registry.gauge("index.live_rows")
+        self._g_dead = self.registry.gauge("index.dead_rows")
+        self._g_livefrac = self.registry.gauge("index.live_fraction")
+        self._g_segments = self.registry.gauge("index.segments")
+        self._g_tail = self.registry.gauge("index.tail_fill")
+        self._g_bytes = self.registry.gauge("index.resident_bytes")
+
+    def _update_gauges(self):
+        """Refresh the store-shape gauges after any mutation."""
+        self._g_live.set(self.n_live)
+        self._g_dead.set(self.n_rows - self.n_live)
+        self._g_livefrac.set(self.n_live / self.n_rows
+                             if self.n_rows else 1.0)
+        self._g_segments.set(self.n_segments)
+        self._g_tail.set(self.tail.length / self.tail_rows)
+        self._g_bytes.set(self.nbytes)
 
     def _new_tail(self) -> Segment:
         return _empty_segment(
@@ -267,6 +290,8 @@ class SegmentLogStore:
                 self._seal_tail()
         self.next_id = max(self.next_id, int(ids.max()) + 1)
         self.generation += 1
+        self._c_appended.inc(m)
+        self._update_gauges()
         return ids
 
     def _write_tail(self, words, hashes, ids, pos: int, t: int):
@@ -303,6 +328,7 @@ class SegmentLogStore:
         map keys on the Segment object, which just moves lists)."""
         self.sealed.append(self.tail)
         self.tail = self._new_tail()
+        self._c_seals.inc()
 
     # -- deletes / upserts ---------------------------------------------------
     def delete(self, ids, strict: bool = True) -> int:
@@ -325,6 +351,8 @@ class SegmentLogStore:
             killed += 1
         if killed:
             self.generation += 1
+            self._c_deleted.inc(killed)
+            self._update_gauges()
         return killed
 
     def upsert_codes(self, ids, codes) -> np.ndarray:

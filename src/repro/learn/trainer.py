@@ -35,6 +35,7 @@ the rows come from and how steps are paced:
 from __future__ import annotations
 
 import functools
+import time
 
 import numpy as np
 import jax
@@ -47,6 +48,7 @@ from repro.learn.linear import (LearnConfig, PackedLinearModel,
                                 adam_cosine_train, adam_update,
                                 full_batch_fit, packed_data_grads,
                                 packed_loss_and_grads, targets_pm)
+from repro.obs import default_registry, span, tracing_active
 from repro.parallel.sharding import shard_map_unchecked
 
 __all__ = ["fit_words", "fit_store", "fit_log", "packed_grads_sharded"]
@@ -145,11 +147,20 @@ def _fit_minibatch(words, y_pm, fspec, cfg, mesh, axis):
     params = init
     m = jax.tree.map(jnp.zeros_like, init)
     v = jax.tree.map(jnp.zeros_like, init)
+    # per-step device-true timing only while a tracer is installed: the
+    # span sync would otherwise serialize the donated-update pipeline
+    h_step = default_registry().histogram("learn.step_s")
+    traced = tracing_active()
     for i in range(cfg.steps):
         idx = jnp.asarray(rng.choice(n, size=cfg.batch, replace=False))
-        params, m, v = step(params, m, v, jnp.float32(i),
-                            jnp.take(words, idx, axis=0),
-                            jnp.take(y_pm, idx, axis=1))
+        t0 = time.perf_counter()
+        with span("learn.step", step=i) as sp:
+            params, m, v = step(params, m, v, jnp.float32(i),
+                                jnp.take(words, idx, axis=0),
+                                jnp.take(y_pm, idx, axis=1))
+            sp.sync(params)
+        if traced:
+            h_step.observe(time.perf_counter() - t0)
     return params
 
 
@@ -169,14 +180,25 @@ def fit_words(words, y, spec, cfg: LearnConfig = LearnConfig(), *,
     """
     fspec = _as_fspec(spec, k, normalize=normalize)
     y_pm = targets_pm(y, n_outputs)
-    if cfg.batch:
-        if valid_words is not None:
-            raise ValueError("minibatch + validity mask unsupported; "
-                             "train full-batch or drop dead rows")
-        tables, bias = _fit_minibatch(words, y_pm, fspec, cfg, mesh, axis)
-    else:
-        tables, bias = _fit_full_batch(words, y_pm, fspec, cfg,
-                                       valid_words, mesh, axis)
+    n = int(np.shape(words)[0])
+    t0 = time.perf_counter()
+    with span("learn.fit", rows=n, steps=cfg.steps) as sp:
+        if cfg.batch:
+            if valid_words is not None:
+                raise ValueError("minibatch + validity mask unsupported; "
+                                 "train full-batch or drop dead rows")
+            tables, bias = _fit_minibatch(words, y_pm, fspec, cfg, mesh,
+                                          axis)
+        else:
+            tables, bias = _fit_full_batch(words, y_pm, fspec, cfg,
+                                           valid_words, mesh, axis)
+        # the fit is over either way: blocking here makes learn.fit_s an
+        # execution time, not a dispatch time
+        jax.block_until_ready(sp.sync((tables, bias)))
+    reg = default_registry()
+    reg.counter("learn.rows").inc(n)
+    reg.counter("learn.steps").inc(cfg.steps)
+    reg.histogram("learn.fit_s").observe(time.perf_counter() - t0)
     return PackedLinearModel(fspec=fspec, tables=tables, bias=bias,
                              loss=cfg.loss)
 
@@ -261,6 +283,13 @@ def fit_log(store, labels, spec, cfg: LearnConfig = LearnConfig(), *,
 
         return adam_cosine_train(params, grad_fn, cfg.steps, cfg.lr)
 
-    tables, bias = jax.jit(run, donate_argnums=(0,))(init, parts)
+    t0 = time.perf_counter()
+    with span("learn.fit", rows=store.n_live, steps=cfg.steps) as sp:
+        tables, bias = jax.jit(run, donate_argnums=(0,))(init, parts)
+        jax.block_until_ready(sp.sync((tables, bias)))
+    reg = default_registry()
+    reg.counter("learn.rows").inc(store.n_live)
+    reg.counter("learn.steps").inc(cfg.steps)
+    reg.histogram("learn.fit_s").observe(time.perf_counter() - t0)
     return PackedLinearModel(fspec=fspec, tables=tables, bias=bias,
                              loss=cfg.loss)

@@ -1,0 +1,37 @@
+"""End-to-end observability: metrics, traces, kernel stats, exporters.
+
+Every budget the paper trades in — bits per projection vs. estimation
+accuracy, HBM bytes vs. recall, coarse-pass vs. re-rank compute — is
+only governable if it is *measured*; this subsystem is the measuring
+layer the other six report through.
+
+registry    — ``MetricsRegistry``: counters, gauges, fixed-log-bucket
+              histograms (p50/p95/p99 without storing samples);
+              process-global default + injectable instances; a disabled
+              registry hands out no-op metrics
+trace       — ``Tracer``/``span``: nestable spans with device-sync-
+              correct timing (``sp.sync`` = ``block_until_ready`` at
+              the boundary; unsynced spans are *marked* async — the
+              sync-boundary invariant) and Chrome-trace/Perfetto export
+kernelstats — per-kernel-family dispatch counts + modeled FLOPs/HBM
+              bytes recorded at the ``kernels/ops.py`` chokepoint; live
+              roofline table against ``launch.roofline.HW``
+export      — one-call JSON snapshot + Prometheus text format
+
+Instrumented layers: ``serve.ann_service`` (endpoint latencies, ticket
+age, cache + padding economics), ``encode.pipeline`` (chunk spans,
+rows/bytes), ``index.segment_log``/``index.compaction`` (churn counters,
+live-fraction gauge), ``ann.engine``/``index.engine`` (coarse vs.
+re-rank span split), ``learn.trainer`` (step time, rows/s). Overhead is
+benchmarked by ``benchmarks/obs_bench.py`` (``BENCH_obs.json``); any
+bench target exports a flame view via ``benchmarks/run.py --profile``.
+"""
+from repro.obs.registry import (Counter, Gauge, Histogram,  # noqa: F401
+                                HistogramSpec, MetricsRegistry,
+                                default_registry, set_default_registry)
+from repro.obs.trace import (Span, Tracer, active_tracer,  # noqa: F401
+                             no_tracing, span, tracing_active)
+from repro.obs.kernelstats import (KernelStats,  # noqa: F401
+                                   get_kernel_stats, roofline_table,
+                                   set_kernel_stats)
+from repro.obs.export import dump_json, snapshot, to_prometheus  # noqa: F401

@@ -1,0 +1,72 @@
+"""One-call exporters: obs state -> JSON snapshot / Prometheus text.
+
+``snapshot()`` folds the metrics registry (counters, gauges, histogram
+summaries with derived p50/p95/p99) and the kernel dispatch stats into
+one plain dict; ``dump_json`` writes it. ``to_prometheus`` renders the
+registry in the Prometheus text exposition format (counters as
+``_total``, histograms as cumulative ``_bucket{le=...}`` series plus
+``_sum``/``_count``), so a scrape endpoint is one ``web.Response`` away.
+Metric names are sanitized (dots -> underscores) for Prometheus only;
+the JSON snapshot keeps the dotted names the code uses.
+"""
+from __future__ import annotations
+
+import json
+
+from repro.obs import kernelstats as _kstats
+from repro.obs.registry import MetricsRegistry, default_registry
+
+__all__ = ["snapshot", "dump_json", "to_prometheus"]
+
+
+def snapshot(registry: MetricsRegistry = None, kernels=None,
+             hw=None) -> dict:
+    """Everything observable as one dict: registry metrics + kernel
+    dispatch totals + the modeled roofline table. ``registry`` defaults
+    to the process-global one, ``kernels`` to the global accumulator."""
+    reg = registry if registry is not None else default_registry()
+    ks = kernels if kernels is not None else _kstats.get_kernel_stats()
+    out = reg.snapshot()
+    out["kernels"] = ks.snapshot()
+    out["roofline"] = ks.roofline_table(hw)
+    return out
+
+
+def dump_json(path: str, registry: MetricsRegistry = None,
+              kernels=None) -> str:
+    """Write ``snapshot()`` as JSON to ``path``; returns ``path``."""
+    with open(path, "w") as f:
+        json.dump(snapshot(registry, kernels), f, indent=1)
+    return path
+
+
+def _sanitize(name: str) -> str:
+    return name.replace(".", "_").replace("-", "_")
+
+
+def to_prometheus(registry: MetricsRegistry = None) -> str:
+    """Render the registry in Prometheus text exposition format."""
+    reg = registry if registry is not None else default_registry()
+    lines = []
+    for name, c in sorted(reg.counters.items()):
+        n = _sanitize(name)
+        lines.append(f"# TYPE {n}_total counter")
+        lines.append(f"{n}_total {c.value}")
+    for name, g in sorted(reg.gauges.items()):
+        n = _sanitize(name)
+        lines.append(f"# TYPE {n} gauge")
+        lines.append(f"{n} {g.value}")
+    for name, h in sorted(reg.histograms.items()):
+        n = _sanitize(name)
+        lines.append(f"# TYPE {n} histogram")
+        cum = 0
+        for i, cnt in enumerate(h.counts):
+            if cnt == 0:
+                continue
+            cum += cnt
+            le = h.spec.bucket_bounds(i)[1]
+            lines.append(f'{n}_bucket{{le="{le:.6g}"}} {cum}')
+        lines.append(f'{n}_bucket{{le="+Inf"}} {h.count}')
+        lines.append(f"{n}_sum {h.total}")
+        lines.append(f"{n}_count {h.count}")
+    return "\n".join(lines) + "\n"

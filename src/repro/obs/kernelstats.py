@@ -1,0 +1,207 @@
+"""Per-kernel-family dispatch stats + modeled FLOPs/HBM-bytes roofline.
+
+``kernels/ops.py`` is the single chokepoint every Pallas kernel (and its
+jnp oracle) dispatches through; this module is its flight recorder. Each
+dispatch records, per kernel family: invocation count, how many of those
+were under a jit trace (a traced call compiles into an executable and
+then reruns without re-dispatching — the counters are *dispatch* counts,
+not device launches), output-element counts, and analytically modeled
+FLOPs and HBM bytes from the call's static shapes — the same
+bytes-per-row accounting ``benchmarks/encode_bench.py`` used to do by
+hand, now computed once at the dispatch layer.
+
+``roofline_table`` folds the accumulated totals against a hardware model
+(``repro.launch.roofline.HW``) into a live roofline: arithmetic
+intensity, modeled compute/memory time, and which wall each family sits
+against. ``tests/test_obs.py`` cross-checks the byte models against the
+actual array shapes the ``kernels/ref.py`` oracles consume and produce.
+"""
+from __future__ import annotations
+
+from repro.obs.registry import default_registry
+
+__all__ = ["KernelStats", "model", "record", "get_kernel_stats",
+           "set_kernel_stats", "roofline_table", "MODELS"]
+
+
+def _mask_bytes(n: int) -> int:
+    """Bytes of a packed row-validity bitmask over ``n`` rows."""
+    return 4 * ((n + 31) // 32)
+
+
+def _m_coded_project(m, d, k, **_):
+    return m * k, 2 * m * d * k, 4 * (m * d + d * k + m * k)
+
+
+def _m_encode_fused(m, d, k, w, **_):
+    return m * k, 2 * m * d * k, 4 * (m * d + d * k + m * w)
+
+
+def _m_code_pack(m, k, w, **_):
+    return m * k, m * k, 4 * (m * k + m * w)
+
+
+def _m_pack_codes(m, k, w, **_):
+    return m * k, m * k, 4 * (m * k + m * w)
+
+
+def _m_collision_counts(q, n, k, **_):
+    return q * n, q * n * k, 4 * (q * k + n * k + q * n)
+
+
+def _m_packed_collision_counts(q, n, w, **_):
+    # XOR + popcount-fold + accumulate per word pair ~ 3 word ops
+    return q * n, 3 * q * n * w, 4 * (q * w + n * w + q * n)
+
+
+def _m_packed_topk(q, n, w, top_k, **_):
+    return q * n, 3 * q * n * w, 4 * (q * w + n * w + 2 * q * top_k)
+
+
+def _m_packed_topk_masked(q, n, w, top_k, **_):
+    e, f, b = _m_packed_topk(q, n, w, top_k)
+    return e, f, b + _mask_bytes(n)
+
+
+def _m_packed_lut_topk(q, n, w, t, k, top_k, **_):
+    # one table lookup + add per code field
+    return q * n, 2 * q * n * k, 4 * (q * t + n * w + 2 * q * top_k)
+
+
+def _m_packed_lut_topk_masked(q, n, w, t, k, top_k, **_):
+    e, f, b = _m_packed_lut_topk(q, n, w, t, k, top_k)
+    return e, f, b + _mask_bytes(n)
+
+
+def _m_packed_lut_rerank(q, c, w, t, k, top_k, **_):
+    return (q * c, 2 * q * c * k,
+            4 * (q * t + q * c * w + 2 * q * top_k) + q * c)
+
+
+def _m_packed_linear_fwd(c, n, w, t, k, **_):
+    return c * n, 2 * c * n * k, 4 * (c * t + n * w + c * n)
+
+
+def _m_packed_linear_fwd_masked(c, n, w, t, k, **_):
+    e, f, b = _m_packed_linear_fwd(c, n, w, t, k)
+    return e, f, b + _mask_bytes(n)
+
+
+def _m_packed_linear_bwd(c, n, w, t, k, **_):
+    return c * n, 2 * c * n * k, 4 * (c * n + n * w + c * t)
+
+
+def _m_packed_linear_bwd_masked(c, n, w, t, k, **_):
+    e, f, b = _m_packed_linear_bwd(c, n, w, t, k)
+    return e, f, b + _mask_bytes(n)
+
+
+# family -> fn(**dims) -> (elements, flops, hbm_bytes); dims are the
+# static shape parameters ops.py extracts at dispatch
+MODELS = {
+    "coded_project": _m_coded_project,
+    "encode_fused": _m_encode_fused,
+    "code_pack": _m_code_pack,
+    "pack_codes": _m_pack_codes,
+    "collision_counts": _m_collision_counts,
+    "packed_collision_counts": _m_packed_collision_counts,
+    "packed_topk": _m_packed_topk,
+    "packed_topk_masked": _m_packed_topk_masked,
+    "packed_lut_topk": _m_packed_lut_topk,
+    "packed_lut_topk_masked": _m_packed_lut_topk_masked,
+    "packed_lut_rerank": _m_packed_lut_rerank,
+    "packed_linear_fwd": _m_packed_linear_fwd,
+    "packed_linear_fwd_masked": _m_packed_linear_fwd_masked,
+    "packed_linear_bwd": _m_packed_linear_bwd,
+    "packed_linear_bwd_masked": _m_packed_linear_bwd_masked,
+}
+
+
+def model(family: str, **dims):
+    """(elements, flops, hbm_bytes) modeled for one dispatch of
+    ``family`` at the given static dims; KeyError on unknown family."""
+    return MODELS[family](**dims)
+
+
+class KernelStats:
+    """Accumulated per-family dispatch totals (a plain host dict)."""
+
+    __slots__ = ("families",)
+
+    def __init__(self):
+        self.families: dict[str, dict] = {}
+
+    def record(self, family: str, traced: bool = False, **dims):
+        """Fold one dispatch of ``family`` at ``dims`` into the totals."""
+        elements, flops, hbm = model(family, **dims)
+        f = self.families.get(family)
+        if f is None:
+            f = self.families[family] = {
+                "calls": 0, "traced_calls": 0, "elements": 0,
+                "flops": 0, "hbm_bytes": 0}
+        f["calls"] += 1
+        f["traced_calls"] += 1 if traced else 0
+        f["elements"] += elements
+        f["flops"] += flops
+        f["hbm_bytes"] += hbm
+
+    def reset(self):
+        """Drop all accumulated totals."""
+        self.families.clear()
+
+    def snapshot(self) -> dict:
+        """Copy of the per-family totals."""
+        return {k: dict(v) for k, v in self.families.items()}
+
+    def roofline_table(self, hw=None) -> dict:
+        """Per-family roofline terms against a hardware model.
+
+        Adds to each family's totals: arithmetic ``intensity``
+        (FLOPs/byte), modeled ``t_compute_s`` / ``t_memory_s``, the
+        binding wall (``bound``), the modeled wall time ``t_model_s``
+        (max of the two) and modeled ``elements_per_s`` at that wall.
+        ``hw`` defaults to ``repro.launch.roofline.HW()`` (TPU v5e).
+        """
+        if hw is None:
+            from repro.launch.roofline import HW
+            hw = HW()
+        out = {}
+        for fam, f in self.families.items():
+            t_c = f["flops"] / hw.peak_flops
+            t_m = f["hbm_bytes"] / hw.hbm_bw
+            t = max(t_c, t_m)
+            out[fam] = dict(
+                f, intensity=f["flops"] / max(f["hbm_bytes"], 1),
+                t_compute_s=t_c, t_memory_s=t_m, t_model_s=t,
+                bound="compute" if t_c >= t_m else "memory",
+                elements_per_s=f["elements"] / t if t else 0.0)
+        return out
+
+
+_DEFAULT = KernelStats()
+
+
+def get_kernel_stats() -> KernelStats:
+    """The process-global kernel-stat accumulator."""
+    return _DEFAULT
+
+
+def set_kernel_stats(ks: KernelStats) -> KernelStats:
+    """Swap the process-global accumulator; returns the previous one."""
+    global _DEFAULT
+    prev = _DEFAULT
+    _DEFAULT = ks
+    return prev
+
+
+def record(family: str, traced: bool = False, **dims):
+    """Record one dispatch into the global accumulator — the hook
+    ``kernels/ops.py`` calls. No-op while the default metrics registry
+    is disabled (the one switch that silences all of repro.obs)."""
+    if default_registry().enabled:
+        _DEFAULT.record(family, traced=traced, **dims)
+
+
+def roofline_table(hw=None) -> dict:
+    """Roofline view of the global accumulator (see the method)."""
+    return _DEFAULT.roofline_table(hw)

@@ -1,0 +1,242 @@
+"""Nestable tracing spans with device-sync-correct timing.
+
+The timing trap this module exists to close: jax dispatch is async, so
+``t1 - t0`` around a device call measures *submission*, not execution —
+exactly the bug that produced a negative (clamped-to-zero) re-rank
+overhead in ``BENCH_rank.json``. A span therefore closes in one of two
+explicitly-labelled states:
+
+* **device-synced** — the code inside called ``sp.sync(value)`` (a
+  ``jax.block_until_ready`` that returns its argument), so the span's
+  duration covers the device work that produced ``value``;
+* **async** — no sync happened before close (either ``sync=False`` was
+  requested, or the caller simply never synced). The span is marked
+  ``"sync": "async"`` in the trace.
+
+That labelling is the sync-boundary invariant documented in
+``docs/ARCHITECTURE.md``: a span that closes without a device sync is
+*always* marked async — there is no state in which an unsynced duration
+masquerades as an execution time.
+
+Tracing is globally opt-in: ``with Tracer() as tr`` installs the tracer,
+and while none is installed ``span(...)`` returns a shared no-op context
+manager (near-zero cost — the hot path keeps its spans). Finished traces
+export to Chrome-trace / Perfetto JSON (``Tracer.dump``): load the file
+in ``chrome://tracing`` or https://ui.perfetto.dev to see a whole
+ingest→search→compact run as a flame view.
+"""
+from __future__ import annotations
+
+import json
+import threading
+import time
+
+import jax
+
+__all__ = ["Span", "Tracer", "span", "tracing_active", "active_tracer",
+           "no_tracing"]
+
+_ACTIVE: "Tracer | None" = None
+
+
+def tracing_active() -> bool:
+    """Whether a tracer is currently installed (spans are recording)."""
+    return _ACTIVE is not None
+
+
+def active_tracer() -> "Tracer | None":
+    """The installed tracer, or None."""
+    return _ACTIVE
+
+
+class Span:
+    """One live span; use via ``with span("name") as sp``.
+
+    Call ``sp.sync(value)`` on the device results produced inside the
+    span — it blocks until they are ready (so the closing timestamp is
+    execution-true) and returns them. Extra attributes land in the
+    Chrome-trace ``args`` via ``sp.set(key=...)`` or the ``span(...)``
+    kwargs.
+    """
+
+    __slots__ = ("tracer", "name", "args", "sync_wanted", "t0", "_synced")
+
+    def __init__(self, tracer: "Tracer", name: str, sync_wanted: bool,
+                 args: dict):
+        self.tracer = tracer
+        self.name = name
+        self.args = args
+        self.sync_wanted = sync_wanted
+        self.t0 = 0.0
+        self._synced = False
+
+    def sync(self, value):
+        """Block until ``value`` (any pytree of arrays) is ready; marks
+        the span device-synced and returns ``value``."""
+        jax.block_until_ready(value)
+        self._synced = True
+        return value
+
+    def set(self, **attrs):
+        """Attach attributes to the span's trace ``args``."""
+        self.args.update(attrs)
+
+    def __enter__(self) -> "Span":
+        self.tracer._push(self)
+        self.t0 = time.perf_counter()
+        return self
+
+    def __exit__(self, exc_type, exc, tb):
+        t1 = time.perf_counter()
+        self.args["sync"] = "device" if self._synced else "async"
+        if exc_type is not None:
+            self.args["error"] = exc_type.__name__
+        self.tracer._pop(self, t1)
+        return False                      # never swallow exceptions
+
+
+class _NullSpan:
+    """Shared no-op span returned while no tracer is installed; its
+    ``sync`` is a passthrough (no block), so disabled-mode tracing adds
+    neither time nor device barriers."""
+
+    __slots__ = ()
+
+    def sync(self, value):
+        """Passthrough: no block, no recording."""
+        return value
+
+    def set(self, **attrs):
+        """No-op."""
+
+    def __enter__(self):
+        return self
+
+    def __exit__(self, exc_type, exc, tb):
+        return False
+
+
+_NULL_SPAN = _NullSpan()
+
+
+def span(name: str, sync: bool = True, **attrs):
+    """Open a span on the installed tracer (no-op when none is active).
+
+    ``sync=True`` declares the span *should* close device-synced — the
+    body is expected to route its device results through ``sp.sync``;
+    if it never does, the span is recorded but labelled async.
+    ``sync=False`` declares an async span up front (e.g. enqueue-only
+    work). Returns a context manager either way.
+    """
+    tr = _ACTIVE
+    if tr is None:
+        return _NULL_SPAN
+    return Span(tr, name, sync, dict(attrs))
+
+
+class _NoTracing:
+    """Suspends the installed tracer for the duration of a block."""
+
+    __slots__ = ("_prev",)
+
+    def __enter__(self):
+        global _ACTIVE
+        self._prev = _ACTIVE
+        _ACTIVE = None
+        return self
+
+    def __exit__(self, exc_type, exc, tb):
+        global _ACTIVE
+        _ACTIVE = self._prev
+        return False
+
+
+def no_tracing() -> _NoTracing:
+    """Context manager suspending span recording inside its block —
+    for sections too hot to trace, or for measuring the no-tracer span
+    cost itself while a tracer happens to be installed."""
+    return _NoTracing()
+
+
+class Tracer:
+    """Span collector + Chrome-trace exporter; ``with Tracer() as tr``
+    installs it globally for the duration of the block.
+
+    Spans nest per-thread (a stack keyed on thread id); nesting in the
+    exported trace is carried by timestamp containment on one track,
+    which is exactly how chrome://tracing / Perfetto build flames.
+    """
+
+    def __init__(self):
+        self.events: list[dict] = []      # finished spans, close order
+        self._stacks: dict[int, list] = {}
+        self._tids: dict[int, int] = {}
+        self._t0 = time.perf_counter()
+        self._prev = None
+
+    # -- span bookkeeping (called by Span) -----------------------------------
+    def _tid(self) -> int:
+        ident = threading.get_ident()
+        tid = self._tids.get(ident)
+        if tid is None:
+            tid = self._tids[ident] = len(self._tids)
+        return tid
+
+    def _push(self, sp: Span):
+        self._stacks.setdefault(threading.get_ident(), []).append(sp)
+
+    def _pop(self, sp: Span, t1: float):
+        stack = self._stacks[threading.get_ident()]
+        # exception-safe: unwind past any inner spans abandoned by a raise
+        while stack and stack[-1] is not sp:
+            stack.pop()
+        if stack:
+            stack.pop()
+        self.events.append({
+            "name": sp.name, "ts": sp.t0 - self._t0,
+            "dur": t1 - sp.t0, "tid": self._tid(), "depth": len(stack),
+            "args": sp.args})
+
+    def depth(self) -> int:
+        """Current nesting depth on the calling thread."""
+        return len(self._stacks.get(threading.get_ident(), ()))
+
+    # -- install / uninstall -------------------------------------------------
+    def __enter__(self) -> "Tracer":
+        global _ACTIVE
+        self._prev = _ACTIVE
+        _ACTIVE = self
+        return self
+
+    def __exit__(self, exc_type, exc, tb):
+        global _ACTIVE
+        _ACTIVE = self._prev
+        return False
+
+    # -- queries -------------------------------------------------------------
+    def durations(self, name: str) -> list:
+        """Seconds of every finished span called ``name``."""
+        return [e["dur"] for e in self.events if e["name"] == name]
+
+    def total(self, name: str) -> float:
+        """Summed seconds across every finished span called ``name``."""
+        return sum(self.durations(name))
+
+    # -- export --------------------------------------------------------------
+    def to_chrome(self) -> dict:
+        """Chrome-trace JSON object (``traceEvents`` complete events,
+        timestamps in microseconds) — loadable by chrome://tracing and
+        Perfetto."""
+        events = [{
+            "name": e["name"], "ph": "X", "pid": 0, "tid": e["tid"],
+            "ts": round(e["ts"] * 1e6, 3),
+            "dur": round(e["dur"] * 1e6, 3),
+            "args": e["args"],
+        } for e in self.events]
+        return {"traceEvents": events, "displayTimeUnit": "ms"}
+
+    def dump(self, path: str) -> str:
+        """Write the Chrome-trace JSON to ``path``; returns ``path``."""
+        with open(path, "w") as f:
+            json.dump(self.to_chrome(), f)
+        return path

@@ -25,11 +25,23 @@ Classification: attach a trained ``repro.learn.PackedLinearModel``
 project→code→pack front end as search (the engine's shared
 ``QueryCoder``), then the packed-linear forward kernel — one service,
 two workloads over one set of codes.
+
+Observability: every endpoint reports through a ``repro.obs``
+``MetricsRegistry`` (per-service instance by default; inject a shared
+one via the ``registry`` field) — latency histograms (``serve.flush_s``,
+``serve.search_batch_s``, ``serve.classify_s``), ticket age from
+``submit`` to result (``serve.ticket_age_s``), cache hit/miss/eviction/
+invalidation and warmup-compile counters, and a padding-waste gauge.
+The old ad-hoc ``stats`` dict survives as a read-only compat property
+derived from the counters. ``flush``/``classify`` also open tracing
+spans when a ``repro.obs.Tracer`` is installed.
 """
 from __future__ import annotations
 
+import time
 from collections import OrderedDict
 from dataclasses import dataclass, field
+from types import MappingProxyType
 
 import numpy as np
 import jax.numpy as jnp
@@ -37,6 +49,7 @@ import jax.numpy as jnp
 from repro.ann.engine import SearchConfig
 from repro.core import packing as _packing
 from repro.kernels import ops as _ops
+from repro.obs import MetricsRegistry, span
 
 __all__ = ["AnnServiceConfig", "AnnService"]
 
@@ -62,15 +75,48 @@ class AnnService:
     engine: object
     cfg: AnnServiceConfig = field(default_factory=AnnServiceConfig)
     classifier: object = None     # learn.PackedLinearModel (optional)
+    registry: object = None       # obs.MetricsRegistry (own one if None)
 
     def __post_init__(self):
         self._queue = []          # [(ticket, vector [D])]
         self._results = {}        # ticket -> (ids [top_k], rho [top_k])
         self._next_ticket = 0
+        self._submit_ts = {}      # ticket -> submit wall-clock (ticket age)
         self._cache = OrderedDict()   # key -> (ids np, rho np)
         self._cache_gen = None
-        self.stats = {"queries": 0, "batches": 0, "padded_rows": 0,
-                      "cache_hits": 0, "cache_misses": 0}
+        if self.registry is None:
+            self.registry = MetricsRegistry(enabled=True)
+        reg = self.registry
+        self._c_queries = reg.counter("serve.queries")
+        self._c_batches = reg.counter("serve.batches")
+        self._c_padded = reg.counter("serve.padded_rows")
+        self._c_hits = reg.counter("serve.cache_hits")
+        self._c_misses = reg.counter("serve.cache_misses")
+        self._c_evict = reg.counter("serve.cache_evictions")
+        self._c_inval = reg.counter("serve.cache_invalidations")
+        self._c_warm = reg.counter("serve.warmup_compiles")
+        self._c_classified = reg.counter("serve.classified_rows")
+        self._h_flush = reg.histogram("serve.flush_s")
+        self._h_batch = reg.histogram("serve.search_batch_s")
+        self._h_age = reg.histogram("serve.ticket_age_s")
+        self._h_classify = reg.histogram("serve.classify_s")
+        self._g_pending = reg.gauge("serve.pending")
+        self._g_waste = reg.gauge("serve.padding_waste")
+
+    @property
+    def stats(self):
+        """Read-only view of the endpoint counters (compat shape: the
+        pre-registry ad-hoc dict keys, plus the newer counters)."""
+        return MappingProxyType({
+            "queries": self._c_queries.value,
+            "batches": self._c_batches.value,
+            "padded_rows": self._c_padded.value,
+            "cache_hits": self._c_hits.value,
+            "cache_misses": self._c_misses.value,
+            "cache_evictions": self._c_evict.value,
+            "cache_invalidations": self._c_inval.value,
+            "warmup_compiles": self._c_warm.value,
+        })
 
     # -- request path --------------------------------------------------------
     def submit(self, x) -> int:
@@ -81,6 +127,8 @@ class AnnService:
         t = self._next_ticket
         self._next_ticket += 1
         self._queue.append((t, x))
+        self._submit_ts[t] = time.perf_counter()
+        self._g_pending.set(len(self._queue))
         return t
 
     def result(self, ticket: int):
@@ -150,21 +198,25 @@ class AnnService:
         x = jnp.asarray(x)
         if x.ndim != 2:
             raise ValueError(f"classify takes a batch [m, D], got {x.shape}")
-        preds, margs = [], []
-        max_b = self.cfg.buckets[-1]
-        for lo in range(0, x.shape[0], max_b):
-            sub = x[lo:lo + max_b]
-            n = sub.shape[0]
-            b = self._bucket_for(n)
-            if b > n:
-                sub = jnp.pad(sub, ((0, b - n), (0, 0)))
-            codes = self.engine.encode_queries(sub, impl=self.cfg.impl)
-            words = _ops.pack_codes(codes, self.engine.store.bits,
-                                    impl=self.cfg.impl)
-            m = self.classifier.margins(words, impl=self.cfg.impl)
-            preds.append(np.asarray(
-                self.classifier.predict_from_margins(m))[:n])
-            margs.append(np.asarray(m)[:, :n])
+        t0 = time.perf_counter()
+        with span("serve.classify", rows=int(x.shape[0])) as sp:
+            preds, margs = [], []
+            max_b = self.cfg.buckets[-1]
+            for lo in range(0, x.shape[0], max_b):
+                sub = x[lo:lo + max_b]
+                n = sub.shape[0]
+                b = self._bucket_for(n)
+                if b > n:
+                    sub = jnp.pad(sub, ((0, b - n), (0, 0)))
+                codes = self.engine.encode_queries(sub, impl=self.cfg.impl)
+                words = _ops.pack_codes(codes, self.engine.store.bits,
+                                        impl=self.cfg.impl)
+                m = self.classifier.margins(words, impl=self.cfg.impl)
+                preds.append(np.asarray(
+                    self.classifier.predict_from_margins(m))[:n])
+                margs.append(np.asarray(sp.sync(m))[:, :n])
+            self._c_classified.inc(int(x.shape[0]))
+        self._h_classify.observe(time.perf_counter() - t0)
         return np.concatenate(preds), np.concatenate(margs, axis=1)
 
     # -- batch execution -----------------------------------------------------
@@ -185,6 +237,8 @@ class AnnService:
     def _sync_cache_generation(self):
         gen = getattr(self.engine, "generation", 0)
         if gen != self._cache_gen:
+            if self._cache_gen is not None and self._cache:
+                self._c_inval.inc()
             self._cache.clear()
             self._cache_gen = gen
 
@@ -195,6 +249,14 @@ class AnnService:
         largest bucket; cache hits are served host-side and only misses
         are padded up to a bucket shape and searched.
         """
+        t_flush = time.perf_counter()
+        with span("serve.flush", pending=len(self._queue)) as sp:
+            out = self._flush(sp)
+        self._h_flush.observe(time.perf_counter() - t_flush)
+        self._g_pending.set(len(self._queue))
+        return out
+
+    def _flush(self, sp):
         out = {}
         cfg = self.cfg
         self._sync_cache_generation()
@@ -235,35 +297,48 @@ class AnnService:
                     b2 = self._bucket_for(len(miss))
                     idx = miss + [0] * (b2 - len(miss))
                     sub = q_codes[jnp.asarray(idx)]
+                t_batch = time.perf_counter()
                 ids, rho = self.engine.search_codes(
                     sub, SearchConfig(top_k=cfg.top_k, mode=cfg.mode,
                                       min_bands=cfg.min_bands,
                                       n_probes=cfg.n_probes, chunk_q=b2,
                                       impl=cfg.impl, scored=cfg.scored,
                                       rerank_m=cfg.rerank_m))
-                ids, rho = np.asarray(ids), np.asarray(rho)
+                # host transfer is the device sync for this batch's
+                # timing (np.asarray blocks on the result buffers)
+                ids, rho = np.asarray(sp.sync(ids)), np.asarray(rho)
+                self._h_batch.observe(time.perf_counter() - t_batch)
                 for j, i in enumerate(miss):
                     res[i] = (ids[j], rho[j])
                     if cfg.cache_size:
                         self._cache[keys[i]] = res[i]
                         while len(self._cache) > cfg.cache_size:
                             self._cache.popitem(last=False)
-                self.stats["batches"] += 1
-                self.stats["padded_rows"] += b2 - len(miss)
+                            self._c_evict.inc()
+                self._c_batches.inc()
+                self._c_padded.inc(b2 - len(miss))
+                self._g_waste.set((b2 - len(miss)) / b2)
+            now = time.perf_counter()
             for (t, _), r in zip(batch, res):
                 self._results[t] = r
                 out[t] = r
-            self.stats["queries"] += n
-            self.stats["cache_hits"] += n - len(miss)
-            self.stats["cache_misses"] += len(miss)
+                t0 = self._submit_ts.pop(t, None)
+                if t0 is not None:
+                    self._h_age.observe(now - t0)
+            self._c_queries.inc(n)
+            self._c_hits.inc(n - len(miss))
+            self._c_misses.inc(len(miss))
         return out
 
     def warmup(self, d: int):
         """Pre-compile every bucket shape (cold-start insurance)."""
-        for b in self.cfg.buckets:
-            self.engine.search(
-                jnp.zeros((b, d)), self.cfg.top_k, mode=self.cfg.mode,
-                min_bands=self.cfg.min_bands,
-                n_probes=self.cfg.n_probes, chunk_q=b, impl=self.cfg.impl,
-                scored=self.cfg.scored, rerank_m=self.cfg.rerank_m)
+        with span("serve.warmup", buckets=len(self.cfg.buckets)) as sp:
+            for b in self.cfg.buckets:
+                sp.sync(self.engine.search(
+                    jnp.zeros((b, d)), self.cfg.top_k, mode=self.cfg.mode,
+                    min_bands=self.cfg.min_bands,
+                    n_probes=self.cfg.n_probes, chunk_q=b,
+                    impl=self.cfg.impl, scored=self.cfg.scored,
+                    rerank_m=self.cfg.rerank_m))
+                self._c_warm.inc()
         return self

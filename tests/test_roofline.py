@@ -55,3 +55,17 @@ def test_model_flops_conventions():
     assert act < tot  # MoE: only top-k experts active
     assert model_flops(cfg, "train", 2, 128) == 6.0 * act * 256
     assert model_flops(cfg, "decode", 4, 999) == 2.0 * act * 4
+
+
+def test_kernelstats_roofline_agrees_with_roofline_terms():
+    """The live roofline repro.obs.kernelstats builds must use the same
+    compute/memory term math as the static launch-planning model."""
+    from repro.obs import KernelStats
+    ks = KernelStats()
+    ks.record("coded_project", m=256, d=64, k=64)
+    hw = HW()
+    row = ks.roofline_table(hw)["coded_project"]
+    terms = roofline_terms(row["flops"], row["hbm_bytes"], 0.0, hw)
+    assert row["t_compute_s"] == terms["t_compute_s"]
+    assert row["t_memory_s"] == terms["t_memory_s"]
+    assert row["bound"] == terms["dominant"]
