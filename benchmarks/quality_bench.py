@@ -1,0 +1,271 @@
+"""Quality-monitoring benchmark: what statistical health costs, and
+whether its estimates are honest.
+
+Three measurements, written to ``BENCH_quality.json`` (repo root):
+
+  * **overhead** — end-to-end QPS of the exact-search serving hot path
+    (submit→flush, cache disabled) with the quality bundle attached at
+    its default sampling rate vs. without it. Acceptance: <= 3% QPS
+    overhead — a health layer that taxes the hot path gets turned off.
+  * **shadow** — the reservoir-restricted shadow-recall protocol
+    (``repro.obs.shadow``) on a 131k-row corpus: the *sampled* monitor
+    estimate vs. the exhaustively-measured recall of the same protocol
+    over every query (the quantity the estimator is unbiased for).
+    Acceptance: the exhaustive truth falls inside the sampled
+    estimate's Wilson 95% interval. The engine's full-corpus recall@10
+    vs. exact cosine is reported alongside for context — the
+    reservoir-restricted number estimates ranking fidelity on a
+    uniform corpus sample, not full-corpus recall (see ARCHITECTURE's
+    statistical-observability section).
+  * **drift** — detection latency: a Page-Hinkley detector over the
+    per-batch collision fraction of a synthetic fixed-rho stream;
+    batches-to-fire after an injected rho shift, with the false-alarm
+    count over the stationary prefix. Acceptance: fires after the
+    shift, zero false alarms while stationary.
+"""
+import json
+import os
+import sys
+import time
+
+import numpy as np
+
+if __package__ in (None, ""):      # direct `python benchmarks/quality_bench.py`
+    _root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    sys.path.insert(0, _root)
+    sys.path.insert(0, os.path.join(_root, "src"))
+
+_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+from benchmarks._util import write_csv
+from repro.core.sketch import CodedRandomProjection, SketchConfig
+from repro.index import MutableAnnEngine
+from repro.obs import (CollisionMonitor, DriftMonitor, MetricsRegistry,
+                       PageHinkley, QualityConfig, RecallMonitor,
+                       ShadowReservoir, no_tracing, synthetic_code_pairs)
+from repro.serve import AnnService, AnnServiceConfig
+
+K = 256
+SCHEME, W = "2bit", 0.75
+
+
+def _interleaved_qps(svc_a, svc_b, queries, repeat):
+    """Median submit-all+flush QPS for two services, rounds interleaved
+    A/B/A/B so machine drift cancels (flush's host transfer = sync)."""
+    nq = queries.shape[0]
+
+    def _round(svc):
+        t0 = time.perf_counter()
+        for x in queries:
+            svc.submit(x)
+        svc.flush()
+        return time.perf_counter() - t0
+
+    for svc in (svc_a, svc_b):           # warm every jit + bucket
+        _round(svc)
+        _round(svc)
+    ts_a, ts_b = [], []
+    for _ in range(repeat):
+        ts_a.append(_round(svc_a))
+        ts_b.append(_round(svc_b))
+    # best-of-N: the minimum is the run least disturbed by machine
+    # noise, so a *systematic* per-query overhead survives while jitter
+    # (which only ever adds time) cancels
+    return nq / float(np.min(ts_a)), nq / float(np.min(ts_b))
+
+
+def _crp(d):
+    return CodedRandomProjection(SketchConfig(k=K, scheme=SCHEME, w=W), d)
+
+
+def _overhead(d, n, nq, repeat, rng):
+    """Serving QPS with the quality bundle off vs. on (default rate)."""
+    corpus = rng.standard_normal((n, d)).astype(np.float32)
+    queries = corpus[:nq] + 0.1 * rng.standard_normal(
+        (nq, d)).astype(np.float32)
+    cfg = AnnServiceConfig(top_k=10, mode="exact", cache_size=0,
+                           buckets=(nq,))
+    qcfg = QualityConfig()            # default sampling rate (~1%)
+    with no_tracing():
+        eng_off = MutableAnnEngine(_crp(d), tail_rows=4096)
+        svc_off = AnnService(eng_off, cfg,
+                             registry=MetricsRegistry(enabled=True))
+        svc_off.bulk_load(corpus)
+        eng_on = MutableAnnEngine(_crp(d), tail_rows=4096)
+        svc_on = AnnService(eng_on, cfg,
+                            registry=MetricsRegistry(enabled=True),
+                            quality=qcfg)
+        svc_on.bulk_load(corpus)
+        qps_off, qps_on = _interleaved_qps(svc_off, svc_on, queries, repeat)
+    return {"qps_quality_off": qps_off, "qps_quality_on": qps_on,
+            "overhead_frac": 1.0 - qps_on / qps_off,
+            "sample_rate": qcfg.sample_rate,
+            "sampled_events": int(
+                svc_on.registry.counter("quality.sampled").value)}
+
+
+def _shadow(d, n, nq, reservoir_rows, rng):
+    """Sampled shadow-recall estimate vs. exhaustive protocol truth on
+    an ``n``-row corpus, plus full-corpus engine recall for context."""
+    # unit-norm rows: the coded quantizer's cell widths (w) are
+    # calibrated against unit-variance projections, and cosine truth
+    # only makes the rho audit meaningful on the unit sphere
+    corpus = rng.standard_normal((n, d)).astype(np.float32)
+    corpus /= np.linalg.norm(corpus, axis=1, keepdims=True)
+    crp = _crp(d)
+    eng = MutableAnnEngine(crp, tail_rows=4096)
+    ext_ids = eng.ingest(corpus, chunk_rows=8192)
+    row_of = {int(e): i for i, e in enumerate(ext_ids)}
+    queries = corpus[rng.integers(0, n, nq)] + 0.25 / np.sqrt(
+        d) * rng.standard_normal((nq, d)).astype(np.float32)
+    queries /= np.linalg.norm(queries, axis=1, keepdims=True)
+
+    res = ShadowReservoir(cap=reservoir_rows, seed=0,
+                          registry=MetricsRegistry(enabled=True))
+    res.offer(np.arange(n), corpus)      # uniform sample of the corpus
+    rows = res.rows()
+    codes = np.asarray(crp.encode(rows), np.int32)
+    q_codes = np.asarray(crp.encode(queries), np.int32)
+
+    # exhaustive truth of the reservoir-restricted protocol: every query
+    norms = np.maximum(np.linalg.norm(rows, axis=1), 1e-30)
+    hits_all = 0
+    for qi in range(nq):
+        qv = queries[qi]
+        cos = (rows @ (qv / np.linalg.norm(qv))) / norms
+        gt = np.argsort(-cos, kind="stable")[:10]
+        frac = np.mean(codes == q_codes[qi][None, :], axis=1)
+        got = np.argsort(-frac, kind="stable")[:10]
+        hits_all += len(set(gt.tolist()) & set(got.tolist()))
+    truth = hits_all / (10 * nq)
+
+    # the monitor's sampled estimate: a random half of the queries
+    mon = RecallMonitor(res, top_k=10,
+                        registry=MetricsRegistry(enabled=True))
+    for qi in rng.choice(nq, size=nq // 2, replace=False):
+        mon.observe_query(queries[qi], crp.encode, crp._estimator,
+                          q_codes=q_codes[qi])
+    rep = mon.report()
+
+    # context: the serving engine's full-corpus recall vs. exact cosine
+    n_eval = min(64, nq)
+    ids, _ = eng.search(queries[:n_eval], 10, mode="exact", chunk_q=64)
+    ids = np.asarray(ids)
+    cnorm = np.maximum(np.linalg.norm(corpus, axis=1), 1e-30)
+    full_hits = 0
+    for qi in range(n_eval):
+        qv = queries[qi]
+        cos = (corpus @ (qv / np.linalg.norm(qv))) / cnorm
+        gt = set(np.argsort(-cos, kind="stable")[:10].tolist())
+        got = {row_of[int(i)] for i in ids[qi] if int(i) >= 0}
+        full_hits += len(gt & got)
+    return {"corpus": n, "reservoir_rows": len(res), "queries": nq,
+            "queries_sampled": nq // 2,
+            "true_recall_protocol": truth,
+            "shadow_recall": rep["recall"],
+            "wilson_lo": rep["recall_lo"], "wilson_hi": rep["recall_hi"],
+            "within_interval": bool(
+                rep["recall_lo"] <= truth <= rep["recall_hi"]),
+            "rho_err_mean": rep["rho_err_mean"],
+            "rho_err_std": rep["rho_err_std"],
+            "rho_std_theory": rep["rho_std_theory"],
+            "full_corpus_recall": full_hits / (10 * n_eval)}
+
+
+def _drift(rho0=0.5, rho1=0.65, batches=150, batch_pairs=64):
+    """Batches-to-fire after an injected rho shift; false alarms on the
+    stationary prefix (per-batch collision fraction under Page-Hinkley)."""
+    from repro.core.schemes import CodeSpec
+    spec = CodeSpec(SCHEME, W)
+    mon = CollisionMonitor(spec, K, registry=MetricsRegistry(enabled=True))
+    dm = DriftMonitor(registry=MetricsRegistry(enabled=True))
+    dm.watch("collision_p", PageHinkley(delta=0.005, threshold=0.1,
+                                        min_samples=10))
+    false_alarms = 0
+    for i in range(batches):
+        st = mon.observe_pairs(*synthetic_code_pairs(
+            spec, K, rho0, batch_pairs, seed=1000 + i))
+        false_alarms += dm.update("collision_p", st["p_batch"])
+    fired_at = None
+    for i in range(100):
+        st = mon.observe_pairs(*synthetic_code_pairs(
+            spec, K, rho1, batch_pairs, seed=5000 + i))
+        if dm.update("collision_p", st["p_batch"]):
+            fired_at = i + 1
+            break
+    return {"rho0": rho0, "rho1": rho1,
+            "stationary_batches": batches, "batch_pairs": batch_pairs,
+            "false_alarms": false_alarms,
+            "batches_to_fire": fired_at}
+
+
+def _bench(quick: bool):
+    rng = np.random.default_rng(0)
+    overhead = _overhead(d=64, n=8192 if quick else 65536, nq=64,
+                         repeat=5 if quick else 9, rng=rng)
+    shadow = _shadow(d=64, n=16384 if quick else 131072,
+                     nq=128 if quick else 256,
+                     reservoir_rows=2048 if quick else 4096, rng=rng)
+    drift = _drift(batches=60 if quick else 150)
+    ok = (overhead["overhead_frac"] <= 0.03
+          and shadow["within_interval"]
+          and drift["false_alarms"] == 0
+          and drift["batches_to_fire"] is not None)
+    return {"overhead": overhead, "shadow": shadow, "drift": drift,
+            "k": K, "scheme": SCHEME, "acceptance_pass": ok,
+            "timing": "best-of-N interleaved, device-synced flush"}
+
+
+def _rows(r):
+    o, s, d = r["overhead"], r["shadow"], r["drift"]
+    return [
+        ("quality_serve_on", 1e6 / o["qps_quality_on"],
+         f"qps={o['qps_quality_on']:.0f} "
+         f"overhead={100 * o['overhead_frac']:.2f}%"),
+        ("quality_serve_off", 1e6 / o["qps_quality_off"],
+         f"qps={o['qps_quality_off']:.0f}"),
+        ("quality_shadow_recall", 0.0,
+         f"est={s['shadow_recall']:.3f} "
+         f"truth={s['true_recall_protocol']:.3f} "
+         f"wilson=[{s['wilson_lo']:.3f},{s['wilson_hi']:.3f}] "
+         f"in={s['within_interval']}"),
+        ("quality_drift_latency", 0.0,
+         f"fired_at={d['batches_to_fire']} "
+         f"false_alarms={d['false_alarms']}"),
+    ]
+
+
+def run(quick: bool = True):
+    """run.py contract: (name, us_per_call, derived) rows."""
+    r = _bench(quick)
+    rows = _rows(r)
+    write_csv("quality_bench", ["name", "us_per_call", "derived"], rows)
+    return rows
+
+
+def main():
+    quick = "--quick" in sys.argv[1:]
+    r = _bench(quick)
+    write_csv("quality_bench", ["name", "us_per_call", "derived"], _rows(r))
+    if not quick:
+        with open(os.path.join(_ROOT, "BENCH_quality.json"), "w") as f:
+            json.dump(r, f, indent=1)
+    print("BENCH " + json.dumps(r))
+    o, s, d = r["overhead"], r["shadow"], r["drift"]
+    print(f"\noverhead: {100 * o['overhead_frac']:.2f}% at sample_rate="
+          f"{o['sample_rate']} ({o['qps_quality_on']:.0f} vs "
+          f"{o['qps_quality_off']:.0f} qps)")
+    print(f"shadow: est {s['shadow_recall']:.3f} in "
+          f"[{s['wilson_lo']:.3f}, {s['wilson_hi']:.3f}] vs truth "
+          f"{s['true_recall_protocol']:.3f} (full-corpus "
+          f"{s['full_corpus_recall']:.3f})")
+    print(f"drift: fired {d['batches_to_fire']} batches after shift, "
+          f"{d['false_alarms']} false alarms in "
+          f"{d['stationary_batches']} stationary batches")
+    print("acceptance: " + ("PASS" if r["acceptance_pass"] else "FAIL"))
+    if not r["acceptance_pass"]:
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

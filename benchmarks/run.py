@@ -40,6 +40,7 @@ MODULES = [
     "benchmarks.rank_bench",
     "benchmarks.learn_bench",
     "benchmarks.obs_bench",
+    "benchmarks.quality_bench",
 ]
 
 

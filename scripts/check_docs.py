@@ -1,12 +1,16 @@
 """Docs lint: public-API docstrings + no dead paths in the docs.
 
-Two checks, both tripping a nonzero exit:
+Three checks, each tripping a nonzero exit:
 
 1. every public symbol (module, class, function, method, property) in
    ``repro.ann``, ``repro.index`` and ``repro.rank`` carries a
    docstring — the subsystems' shape/dtype contracts live there;
 2. every repo path referenced from ``README.md`` and ``docs/*.md``
-   (markdown links and backticked tokens that look like paths) exists.
+   (markdown links and backticked tokens that look like paths) exists;
+3. every module of the packages in ``MENTION_PACKAGES`` (currently
+   ``repro.obs`` — the layer whose whole job is being visible) is
+   mentioned by name somewhere in the docs, so a new monitor cannot
+   land documentation-silent.
 
 Run as ``python benchmarks/run.py lint``, ``python
 scripts/check_docs.py``, or through ``tests/test_docs_lint.py``.
@@ -23,6 +27,7 @@ import sys
 ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 PACKAGES = ("repro.ann", "repro.index", "repro.rank", "repro.learn",
             "repro.encode", "repro.obs")
+MENTION_PACKAGES = ("repro.obs",)
 DOC_FILES = ["README.md"]
 DOC_DIRS = ["docs"]
 
@@ -132,18 +137,50 @@ def check_doc_paths() -> list:
     return dead
 
 
+def _doc_texts() -> str:
+    """README + docs/*.md concatenated (the mention corpus)."""
+    docs = [f for f in DOC_FILES if os.path.exists(os.path.join(ROOT, f))]
+    for d in DOC_DIRS:
+        dpath = os.path.join(ROOT, d)
+        if os.path.isdir(dpath):
+            docs += [os.path.join(d, f) for f in sorted(os.listdir(dpath))
+                     if f.endswith(".md")]
+    return "\n".join(open(os.path.join(ROOT, doc)).read() for doc in docs)
+
+
+def check_module_mentions() -> list:
+    """Unmentioned-module report for MENTION_PACKAGES: each module must
+    appear in the docs as ``pkg.mod``, ``pkg/mod.py`` or a backticked
+    ``mod.py`` — a subsystem file nobody can find is dead weight."""
+    text = _doc_texts()
+    unmentioned = []
+    for pkg_name in MENTION_PACKAGES:
+        pkg = importlib.import_module(pkg_name)
+        short = pkg_name.rsplit(".", 1)[-1]
+        for m in pkgutil.iter_modules(pkg.__path__):
+            forms = (f"{pkg_name}.{m.name}", f"{short}/{m.name}.py",
+                     f"`{m.name}.py`")
+            if not any(f in text for f in forms):
+                unmentioned.append(f"{pkg_name}.{m.name}")
+    return sorted(unmentioned)
+
+
 def main() -> int:
-    """Run both checks; print a report and return the exit code."""
+    """Run all three checks; print a report and return the exit code."""
     sys.path.insert(0, os.path.join(ROOT, "src"))
     missing = check_docstrings()
     dead = check_doc_paths()
+    silent = check_module_mentions()
     for name in missing:
         print(f"MISSING DOCSTRING  {name}")
     for ref in dead:
         print(f"DEAD PATH          {ref}")
+    for name in silent:
+        print(f"UNDOCUMENTED MODULE  {name}")
     print(f"check_docs: {len(missing)} missing docstrings, "
-          f"{len(dead)} dead doc paths across {PACKAGES}")
-    return 1 if (missing or dead) else 0
+          f"{len(dead)} dead doc paths, {len(silent)} unmentioned "
+          f"modules across {PACKAGES}")
+    return 1 if (missing or dead or silent) else 0
 
 
 if __name__ == "__main__":

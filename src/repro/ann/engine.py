@@ -226,6 +226,7 @@ class AnnEngine:
         self._rank_tables = rank_tables
         self._search_fns = {}
         self._stage_fns = {}      # cfg -> (jit coarse, jit rerank)
+        self.quality = None       # obs.quality.QualityMonitors, if attached
 
     # -- construction / ingestion -------------------------------------------
     @classmethod
@@ -253,9 +254,11 @@ class AnnEngine:
         store = self.store.add(codes, impl=impl)
         hashes = jnp.concatenate(
             [self.db_band_hashes, band_hashes(codes, self.band_spec)])
-        return AnnEngine(self.sketcher, store, self.band_spec,
-                         db_band_hashes=hashes,
-                         rank_tables=self._rank_tables)
+        new = AnnEngine(self.sketcher, store, self.band_spec,
+                        db_band_hashes=hashes,
+                        rank_tables=self._rank_tables)
+        new.quality = self.quality
+        return new
 
     @property
     def n(self) -> int:
@@ -278,6 +281,21 @@ class AnnEngine:
     def encode_queries(self, x, impl: str = "auto"):
         """x [Q, D] -> int32 codes [Q, k] via the fused proj+code kernel."""
         return self._coder.encode(x, impl=impl)
+
+    # -- quality audit hooks -------------------------------------------------
+    def attach_quality(self, monitors) -> "AnnEngine":
+        """Attach an ``obs.quality.QualityMonitors`` bundle: every search
+        gets a budgeted chance (its ``sample_rate``) of feeding one
+        query-candidate batch to the collision monitor. Returns self."""
+        self.quality = monitors
+        return self
+
+    def codes_for_ids(self, ids):
+        """int32 codes [m, k] of store rows ``ids`` (row positions) —
+        the small gather the quality audit re-scores against."""
+        words = self.store.take(jnp.asarray(ids, jnp.int32))
+        return _packing.unpack_codes(words, self.sketcher.spec.bits,
+                                     self.sketcher.cfg.k)
 
     # -- search --------------------------------------------------------------
     def search(self, queries, top_k: int = 10, *, mode: str = "exact",
@@ -313,9 +331,13 @@ class AnnEngine:
             return (jnp.zeros((0, cfg.top_k), jnp.int32),
                     jnp.zeros((0, cfg.top_k), jnp.float32))
         if tracing_active():
-            return run_chunked(q_codes, cfg, self._traced_chunk)
-        return run_chunked(q_codes, cfg,
-                           lambda chunk, c: self._chunk_fn(c)(chunk))
+            out = run_chunked(q_codes, cfg, self._traced_chunk)
+        else:
+            out = run_chunked(q_codes, cfg,
+                              lambda chunk, c: self._chunk_fn(c)(chunk))
+        if self.quality is not None:
+            self.quality.observe_search(q_codes, out[0], self.codes_for_ids)
+        return out
 
     def _chunk_fn(self, cfg: SearchConfig):
         """jit'd one-chunk search; cached per SearchConfig (warm cache)."""

@@ -124,6 +124,9 @@ def compact(store: SegmentLogStore,
         store.sealed = new_sealed
         if runs:
             store.generation += 1
+            # external ids survive a rewrite, so listeners (e.g. the
+            # shadow reservoir) only need to know membership was churned
+            store._notify("compact", None)
         reg = store.registry
         reg.counter("index.compactions").inc()
         reg.counter("index.compact_rows_dropped").inc(dropped)

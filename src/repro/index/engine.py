@@ -72,6 +72,7 @@ class MutableAnnEngine:
         self.store = store
         self.band_spec = store.band_spec
         self._coder = QueryCoder(sketcher)
+        self.quality = None       # obs.quality.QualityMonitors, if attached
 
     # -- mutation ------------------------------------------------------------
     @property
@@ -165,6 +166,22 @@ class MutableAnnEngine:
         """x float [Q, D] -> int32 codes [Q, k] (fused proj+code)."""
         return self._coder.encode(x, impl=impl)
 
+    # -- quality audit hooks -------------------------------------------------
+    def attach_quality(self, monitors) -> "MutableAnnEngine":
+        """Attach an ``obs.quality.QualityMonitors`` bundle: every search
+        gets a budgeted chance (its ``sample_rate``) of feeding one
+        query-candidate batch to the collision monitor, and the bundle's
+        shadow reservoir subscribes to the store's delete events so its
+        ground truth stays tombstone-aware. Returns self."""
+        self.quality = monitors
+        self.store.add_listener(monitors.on_store_event)
+        return self
+
+    def codes_for_ids(self, ids):
+        """int32 codes [m, k] of live *external* ids (the small per-id
+        gather the quality audit re-scores against)."""
+        return self.store.take_codes(ids)
+
     def search(self, queries, top_k: int = 10, *, mode: str = "exact",
                min_bands: int = 1, n_probes: int = 0, chunk_q: int = 256,
                impl: str = "auto", scored: bool = False,
@@ -191,7 +208,10 @@ class MutableAnnEngine:
         if q == 0 or self.store.n_live == 0:
             return (jnp.full((q, cfg.top_k), -1, jnp.int32),
                     jnp.full((q, cfg.top_k), -1.0, jnp.float32))
-        return run_chunked(q_codes, cfg, self._search_chunk)
+        out = run_chunked(q_codes, cfg, self._search_chunk)
+        if self.quality is not None:
+            self.quality.observe_search(q_codes, out[0], self.codes_for_ids)
+        return out
 
     def _search_chunk(self, q_codes, cfg: SearchConfig):
         """One padded query chunk across all segments: per-segment

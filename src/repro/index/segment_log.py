@@ -157,6 +157,7 @@ class SegmentLogStore:
         self.next_id = 0
         self.generation = 0
         self._by_id: dict[int, tuple[Segment, int]] = {}
+        self._listeners: list = []
         self.registry = registry if registry is not None \
             else MetricsRegistry(enabled=True)
         self._c_appended = self.registry.counter("index.rows_appended")
@@ -216,6 +217,36 @@ class SegmentLogStore:
 
     def __contains__(self, item_id: int) -> bool:
         return int(item_id) in self._by_id
+
+    # -- mutation listeners --------------------------------------------------
+    def add_listener(self, callback) -> "SegmentLogStore":
+        """Subscribe ``callback(event: str, ids)`` to membership events:
+        ``"delete"`` carries the external ids just tombstoned (int64
+        array), ``"compact"`` carries None (external ids survive
+        compaction unchanged). The shadow reservoir of
+        ``repro.obs.quality`` subscribes here to stay tombstone-aware.
+        Returns self."""
+        self._listeners.append(callback)
+        return self
+
+    def _notify(self, event: str, ids):
+        for cb in self._listeners:
+            cb(event, ids)
+
+    def take_codes(self, ids) -> np.ndarray:
+        """int32 codes [m, k] of *live* external ids int [m] (the small
+        per-id gather behind the quality audit; raises KeyError on a
+        dead/unknown id)."""
+        ids = np.atleast_1d(np.asarray(ids, np.int64))
+        rows = []
+        for item in ids:
+            seg, row = self._by_id[int(item)]
+            rows.append(seg.words[row])
+        if not rows:
+            return np.zeros((0, self.k), np.int32)
+        words = jnp.stack(rows)
+        return np.asarray(
+            _packing.unpack_codes(words, self.bits, self.k), np.int32)
 
     # -- ingestion -----------------------------------------------------------
     def add_codes(self, codes, ids=None) -> np.ndarray:
@@ -342,17 +373,20 @@ class SegmentLogStore:
             if dead:
                 raise KeyError(f"ids not live: {dead[:5]}")
         killed = 0
+        killed_ids = []
         for item in ids:
             loc = self._by_id.pop(int(item), None)
             if loc is None:
                 continue
             seg, row = loc
             seg.kill_row(row)
+            killed_ids.append(int(item))
             killed += 1
         if killed:
             self.generation += 1
             self._c_deleted.inc(killed)
             self._update_gauges()
+            self._notify("delete", np.asarray(killed_ids, np.int64))
         return killed
 
     def upsert_codes(self, ids, codes) -> np.ndarray:

@@ -164,10 +164,28 @@ def _fit_minibatch(words, y_pm, fspec, cfg, mesh, axis):
     return params
 
 
+def _observe_fit_margins(model, words, quality, seed: int):
+    """Feed a trained model's margins over a sampled row subset to an
+    ``obs.quality.QualityMonitors`` bundle — the post-fit calibration
+    snapshot its ``margin_mean`` drift series baselines against."""
+    if quality is None or not quality.enabled:
+        return
+    n = int(np.shape(words)[0])
+    if n == 0:
+        return
+    cap = quality.cfg.margin_sample
+    if n > cap:
+        idx = np.random.default_rng(seed).choice(n, size=cap,
+                                                 replace=False)
+        words = jnp.take(jnp.asarray(words), jnp.asarray(np.sort(idx)),
+                         axis=0)
+    quality.observe_margins(model.margins(words))
+
+
 def fit_words(words, y, spec, cfg: LearnConfig = LearnConfig(), *,
               k: int = None, valid_words=None, n_outputs: int = 1,
               normalize: bool = True, mesh: Mesh = None,
-              axis: str = "data") -> PackedLinearModel:
+              axis: str = "data", quality=None) -> PackedLinearModel:
     """Train a packed linear model on uint32 words [n, W].
 
     ``spec``: PackedFeatureSpec, CodeSpec (+ ``k``), or a sketcher. y:
@@ -176,7 +194,10 @@ def fit_words(words, y, spec, cfg: LearnConfig = LearnConfig(), *,
     minibatches through a per-step donated update executable (weights
     update in place, one compile total). ``valid_words`` masks
     tombstoned rows (full-batch only); ``mesh`` runs every gradient
-    data-parallel over ``mesh[axis]``.
+    data-parallel over ``mesh[axis]``. ``quality`` (an
+    ``obs.quality.QualityMonitors``) receives the trained model's
+    margin distribution over a sampled row subset — the calibration
+    baseline for its drift trigger.
     """
     fspec = _as_fspec(spec, k, normalize=normalize)
     y_pm = targets_pm(y, n_outputs)
@@ -199,8 +220,10 @@ def fit_words(words, y, spec, cfg: LearnConfig = LearnConfig(), *,
     reg.counter("learn.rows").inc(n)
     reg.counter("learn.steps").inc(cfg.steps)
     reg.histogram("learn.fit_s").observe(time.perf_counter() - t0)
-    return PackedLinearModel(fspec=fspec, tables=tables, bias=bias,
-                             loss=cfg.loss)
+    model = PackedLinearModel(fspec=fspec, tables=tables, bias=bias,
+                              loss=cfg.loss)
+    _observe_fit_margins(model, words, quality, cfg.seed)
+    return model
 
 
 def fit_store(store, y, spec, cfg: LearnConfig = LearnConfig(), *,
@@ -240,8 +263,8 @@ def _segment_targets(seg, labels, n_outputs: int):
 
 
 def fit_log(store, labels, spec, cfg: LearnConfig = LearnConfig(), *,
-            n_outputs: int = 1,
-            normalize: bool = True) -> PackedLinearModel:
+            n_outputs: int = 1, normalize: bool = True,
+            quality=None) -> PackedLinearModel:
     """Train over a live mutable index (``index.SegmentLogStore``).
 
     Each step runs the masked fused kernels per segment — tombstoned
@@ -250,7 +273,9 @@ def fit_log(store, labels, spec, cfg: LearnConfig = LearnConfig(), *,
     ``labels`` maps *external* ids to labels (dict-like or
     callable(ids) -> labels), so deletes/upserts/compaction between
     calls never invalidate it. The segment snapshot is taken at call
-    time; mutate-then-refit to pick up churn.
+    time; mutate-then-refit to pick up churn — subscribe the refit to a
+    ``quality`` bundle's drift alarms (``on_drift``) and pass the same
+    bundle here so each refit re-baselines the margin series.
     """
     if cfg.batch:
         raise ValueError("fit_log trains full-batch over the segment "
@@ -291,5 +316,8 @@ def fit_log(store, labels, spec, cfg: LearnConfig = LearnConfig(), *,
     reg.counter("learn.rows").inc(store.n_live)
     reg.counter("learn.steps").inc(cfg.steps)
     reg.histogram("learn.fit_s").observe(time.perf_counter() - t0)
-    return PackedLinearModel(fspec=fspec, tables=tables, bias=bias,
-                             loss=cfg.loss)
+    model = PackedLinearModel(fspec=fspec, tables=tables, bias=bias,
+                              loss=cfg.loss)
+    if quality is not None and quality.enabled:
+        _observe_fit_margins(model, store.live_words(), quality, cfg.seed)
+    return model

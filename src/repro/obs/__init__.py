@@ -17,6 +17,16 @@ kernelstats — per-kernel-family dispatch counts + modeled FLOPs/HBM
               bytes recorded at the ``kernels/ops.py`` chokepoint; live
               roofline table against ``launch.roofline.HW``
 export      — one-call JSON snapshot + Prometheus text format
+quality     — online statistical health: sampled empirical collision/
+              cell frequencies vs. the paper's theory curves at the MLE
+              rho (z-scores, chi-square divergence) + classifier-margin
+              moments, all budgeted by one sampling rate
+shadow      — seeded reservoir of raw rows (capped, tombstone-aware) +
+              shadow queries re-scored by exact cosine: unbiased online
+              recall@k and rho-estimation error with Wilson intervals
+drift       — Page-Hinkley/CUSUM detectors over the monitored series;
+              registered callbacks fire on alarm (the warm-start-refit
+              trigger hook)
 
 Instrumented layers: ``serve.ann_service`` (endpoint latencies, ticket
 age, cache + padding economics), ``encode.pipeline`` (chunk spans,
@@ -35,3 +45,9 @@ from repro.obs.kernelstats import (KernelStats,  # noqa: F401
                                    get_kernel_stats, roofline_table,
                                    set_kernel_stats)
 from repro.obs.export import dump_json, snapshot, to_prometheus  # noqa: F401
+from repro.obs.quality import (CollisionMonitor, MarginMonitor,  # noqa: F401
+                               QualityConfig, QualityMonitors, Welford,
+                               synthetic_code_pairs)
+from repro.obs.shadow import (RecallMonitor, ShadowReservoir,  # noqa: F401
+                              wilson_interval)
+from repro.obs.drift import Cusum, DriftMonitor, PageHinkley  # noqa: F401

@@ -45,24 +45,34 @@ def _sanitize(name: str) -> str:
 
 
 def to_prometheus(registry: MetricsRegistry = None) -> str:
-    """Render the registry in Prometheus text exposition format."""
+    """Render the registry in Prometheus text exposition format.
+
+    Conventional series shapes: every finite bucket bound is emitted —
+    empty ones included — so the cumulative ``_bucket{le=...}`` series
+    is complete and monotone and keeps the *same* label set across
+    scrapes (rate()/histogram_quantile() break on appearing/disappearing
+    ``le`` labels); each metric carries a ``# HELP`` line (the dotted
+    registry name, which is how the code refers to it) ahead of its
+    ``# TYPE``.
+    """
     reg = registry if registry is not None else default_registry()
     lines = []
     for name, c in sorted(reg.counters.items()):
         n = _sanitize(name)
+        lines.append(f"# HELP {n}_total counter '{name}'")
         lines.append(f"# TYPE {n}_total counter")
         lines.append(f"{n}_total {c.value}")
     for name, g in sorted(reg.gauges.items()):
         n = _sanitize(name)
+        lines.append(f"# HELP {n} gauge '{name}'")
         lines.append(f"# TYPE {n} gauge")
         lines.append(f"{n} {g.value}")
     for name, h in sorted(reg.histograms.items()):
         n = _sanitize(name)
+        lines.append(f"# HELP {n} histogram '{name}'")
         lines.append(f"# TYPE {n} histogram")
         cum = 0
         for i, cnt in enumerate(h.counts):
-            if cnt == 0:
-                continue
             cum += cnt
             le = h.spec.bucket_bounds(i)[1]
             lines.append(f'{n}_bucket{{le="{le:.6g}"}} {cum}')

@@ -1,0 +1,270 @@
+"""Shadow ground truth: reservoir-retained raw rows + exact re-scoring.
+
+Coded search throws the raw f32 rows away by design — that is the whole
+point of the paper's b-bit codes — which means a served index cannot
+measure its own recall: there is nothing exact left to compare against.
+This module keeps a *capped, seeded reservoir* of raw rows at ingest
+(Algorithm R, so every live row is retained with equal probability
+regardless of arrival order) and re-scores sampled shadow queries by
+exact cosine against it, yielding an unbiased online recall@k and a
+rho-estimation-error series without retaining the corpus.
+
+The protocol is reservoir-restricted and exactly paired: for one
+sampled query, the ground truth is the exact-cosine top-k *among the
+reservoir rows*, and the system answer is the coded ranking (collision
+fraction, the engines' exact-mode score) over the *same* reservoir rows
+encoded under the engine's own sketcher. Restricting both sides to the
+reservoir keeps the comparison unbiased for per-candidate ranking
+fidelity — each reservoir row is a uniform draw from the live corpus —
+while costing O(reservoir) per sampled query instead of O(corpus).
+Per-slot hits are Bernoulli trials, summarised with Wilson score
+intervals (well-behaved at recall near 1.0, where the Wald interval
+collapses); the same sampled pairs feed a Welford series of
+``rho_hat - rho_true`` against the estimator's asymptotic std — the
+paper's variance claim (Figs 6-7), audited online.
+
+Invariants the reservoir maintains (tested in ``tests/test_quality.py``):
+
+  * at most ``cap`` rows, each with its external id, live at all times;
+  * tombstone-aware: ``remove`` (wired to the segment log's delete
+    events) drops rows immediately — a deleted row can never appear in
+    ground truth; compaction is a no-op (external ids are stable);
+  * upsert-aware: re-offering an existing id replaces its row in place;
+  * ``version`` bumps on any membership change, so cached encodings
+    (``RecallMonitor``) invalidate exactly when needed.
+"""
+from __future__ import annotations
+
+import math
+
+import numpy as np
+import jax.numpy as jnp
+
+from repro.obs.quality import Welford
+from repro.obs.registry import MetricsRegistry, default_registry
+
+__all__ = ["wilson_interval", "ShadowReservoir", "RecallMonitor"]
+
+
+def wilson_interval(successes: int, trials: int, z: float = 1.96):
+    """Wilson score interval for a Bernoulli rate: (lo, hi) at the given
+    normal quantile (1.96 = 95%). Returns (nan, nan) with no trials."""
+    if trials <= 0:
+        return (math.nan, math.nan)
+    p = successes / trials
+    z2 = z * z
+    denom = 1.0 + z2 / trials
+    center = (p + z2 / (2 * trials)) / denom
+    half = (z / denom) * math.sqrt(
+        p * (1 - p) / trials + z2 / (4 * trials * trials))
+    return (max(0.0, center - half), min(1.0, center + half))
+
+
+class ShadowReservoir:
+    """Seeded Algorithm-R reservoir of raw f32 rows keyed by external id.
+
+    ``offer`` streams candidate rows in (ingest hook), ``remove`` drops
+    deleted ids (segment-log listener), ``rows()``/``ids()`` expose the
+    current members. Eviction is uniform over everything offered so
+    far, so the reservoir is an unbiased sample of the live corpus as
+    long as deletes are uncorrelated with reservoir membership — and
+    deletes *remove* rows here rather than biasing them.
+    """
+
+    def __init__(self, cap: int = 1024, seed: int = 0,
+                 registry: MetricsRegistry = None):
+        self.cap = int(cap)
+        self.rng = np.random.default_rng(seed)
+        self.registry = registry if registry is not None \
+            else default_registry()
+        self.n_seen = 0
+        self.version = 0
+        self._ids: list[int] = []
+        self._rows: list[np.ndarray] = []
+        self._slot: dict[int, int] = {}
+        self._g_rows = self.registry.gauge("quality.reservoir.rows")
+        self._g_seen = self.registry.gauge("quality.reservoir.seen")
+
+    def __len__(self) -> int:
+        return len(self._ids)
+
+    def offer(self, ids, rows):
+        """Offer a batch of (id, raw f32 row) pairs; each survives with
+        probability cap/n_seen (Algorithm R), existing ids are replaced
+        in place (upsert semantics, does not consume a slot draw)."""
+        ids = np.asarray(ids, np.int64).ravel()
+        rows = np.asarray(rows, np.float32)
+        changed = False
+        for i, ext in enumerate(ids):
+            ext = int(ext)
+            slot = self._slot.get(ext)
+            if slot is not None:                 # upsert: replace in place
+                self._rows[slot] = rows[i].copy()
+                changed = True
+                continue
+            self.n_seen += 1
+            if len(self._ids) < self.cap:
+                self._slot[ext] = len(self._ids)
+                self._ids.append(ext)
+                self._rows.append(rows[i].copy())
+                changed = True
+            else:
+                j = int(self.rng.integers(self.n_seen))
+                if j < self.cap:
+                    del self._slot[self._ids[j]]
+                    self._slot[ext] = j
+                    self._ids[j] = ext
+                    self._rows[j] = rows[i].copy()
+                    changed = True
+        if changed:
+            self.version += 1
+            self._g_rows.set(len(self._ids))
+            self._g_seen.set(self.n_seen)
+
+    def remove(self, ids):
+        """Drop any of ``ids`` currently retained (tombstone hook; a
+        missing id is a no-op). Swap-with-last keeps storage dense."""
+        changed = False
+        for ext in np.asarray(ids, np.int64).ravel():
+            slot = self._slot.pop(int(ext), None)
+            if slot is None:
+                continue
+            last = len(self._ids) - 1
+            if slot != last:
+                self._ids[slot] = self._ids[last]
+                self._rows[slot] = self._rows[last]
+                self._slot[self._ids[slot]] = slot
+            self._ids.pop()
+            self._rows.pop()
+            changed = True
+        if changed:
+            self.version += 1
+            self._g_rows.set(len(self._ids))
+
+    def ids(self) -> np.ndarray:
+        """Current member ids, int64 [R]."""
+        return np.asarray(self._ids, np.int64)
+
+    def rows(self) -> np.ndarray:
+        """Current raw rows, f32 [R, d] (empty [0, 0] when empty)."""
+        if not self._rows:
+            return np.zeros((0, 0), np.float32)
+        return np.stack(self._rows)
+
+
+class RecallMonitor:
+    """Online recall@k + rho-error from shadow queries vs the reservoir.
+
+    ``observe_query`` runs the reservoir-restricted protocol (module
+    docstring) for one raw query; hits accumulate as Bernoulli trials
+    → ``report()`` gives the running recall estimate with its Wilson
+    95% interval, plus Welford moments of ``rho_hat - rho_true`` over
+    the ground-truth pairs and the estimator's predicted asymptotic
+    std at the observed rho (the Fig 6-7 audit). Reservoir codes are
+    cached per reservoir version and re-encoded through the engine's
+    own ``encode_fn`` only when membership changes.
+    """
+
+    def __init__(self, reservoir: ShadowReservoir, top_k: int = 10,
+                 registry: MetricsRegistry = None,
+                 name: str = "quality.shadow"):
+        self.reservoir = reservoir
+        self.top_k = int(top_k)
+        self.name = name
+        self.registry = registry if registry is not None \
+            else default_registry()
+        self.successes = 0
+        self.trials = 0
+        self.queries = 0
+        self.rho_err = Welford()
+        self._asym_std = Welford()
+        self._codes = None
+        self._codes_version = -1
+
+    def _reservoir_codes(self, encode_fn) -> np.ndarray:
+        """Reservoir rows under the engine's encoder, [R, k] int32,
+        cached until the reservoir version moves."""
+        if self._codes_version != self.reservoir.version:
+            rows = self.reservoir.rows()
+            self._codes = np.asarray(encode_fn(jnp.asarray(rows)), np.int32)
+            self._codes_version = self.reservoir.version
+        return self._codes
+
+    def observe_query(self, q_raw, encode_fn, estimator,
+                      q_codes=None):
+        """One shadow check: exact-cosine top-k vs coded top-k over the
+        reservoir for raw query ``q_raw`` [d]. ``encode_fn(x[m, d]) ->
+        codes [m, k]`` is the engine's query encoder; ``estimator`` the
+        engine's ``CollisionEstimator`` (rho from collision fraction).
+        Returns this query's recall@k, or None if the reservoir is too
+        small (< 4k rows) to make the trial meaningful."""
+        rows = self.reservoir.rows()
+        k = self.top_k
+        if rows.shape[0] < 4 * k:
+            return None
+        q = np.asarray(q_raw, np.float32).ravel()
+        codes = self._reservoir_codes(encode_fn)
+        if q_codes is None:
+            q_codes = np.asarray(
+                encode_fn(jnp.asarray(q[None, :])), np.int32)[0]
+        else:
+            q_codes = np.asarray(q_codes, np.int32).ravel()
+
+        # ground truth: exact cosine over the reservoir
+        qn = q / max(float(np.linalg.norm(q)), 1e-30)
+        norms = np.maximum(np.linalg.norm(rows, axis=1), 1e-30)
+        cos = (rows @ qn) / norms
+        gt = np.argsort(-cos, kind="stable")[:k]
+
+        # system answer: coded collision-fraction ranking, same rows
+        frac = np.mean(codes == q_codes[None, :], axis=1)
+        got = np.argsort(-frac, kind="stable")[:k]
+
+        hits = len(set(gt.tolist()) & set(got.tolist()))
+        self.successes += hits
+        self.trials += k
+        self.queries += 1
+
+        # rho audit over the ground-truth pairs: coded estimate vs the
+        # exact cosine, spread vs the estimator's asymptotic std
+        rho_true = np.clip(cos[gt], -1.0, 1.0)
+        rho_hat = np.asarray(estimator(jnp.asarray(frac[gt],
+                                                   jnp.float32)), np.float64)
+        err = rho_hat - rho_true
+        self.rho_err.push_many(err)
+        k_proj = codes.shape[1]
+        for r in np.clip(rho_true, 0.0, 0.999):
+            self._asym_std.push(float(estimator.asymptotic_std(float(r),
+                                                               k_proj)))
+
+        reg = self.registry
+        recall = self.successes / self.trials
+        lo, hi = wilson_interval(self.successes, self.trials)
+        reg.gauge(f"{self.name}.recall").set(recall)
+        reg.gauge(f"{self.name}.recall_lo").set(lo)
+        reg.gauge(f"{self.name}.recall_hi").set(hi)
+        reg.gauge(f"{self.name}.trials").set(self.trials)
+        reg.gauge(f"{self.name}.rho_err_mean").set(self.rho_err.mean)
+        if self.rho_err.n > 1:
+            reg.gauge(f"{self.name}.rho_err_std").set(self.rho_err.std)
+            reg.gauge(f"{self.name}.rho_std_theory").set(self._asym_std.mean)
+        reg.counter(f"{self.name}.queries").inc()
+        return hits / k
+
+    def report(self) -> dict:
+        """Running shadow health: recall@k with Wilson 95% bounds,
+        trial counts, and the rho-error moments vs theory."""
+        lo, hi = wilson_interval(self.successes, self.trials)
+        return {
+            "top_k": self.top_k,
+            "queries": self.queries,
+            "trials": self.trials,
+            "recall": (self.successes / self.trials
+                       if self.trials else math.nan),
+            "recall_lo": lo, "recall_hi": hi,
+            "reservoir_rows": len(self.reservoir),
+            "rho_err_mean": self.rho_err.mean if self.rho_err.n else math.nan,
+            "rho_err_std": self.rho_err.std,
+            "rho_std_theory": (self._asym_std.mean
+                               if self._asym_std.n else math.nan),
+        }

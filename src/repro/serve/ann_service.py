@@ -76,6 +76,7 @@ class AnnService:
     cfg: AnnServiceConfig = field(default_factory=AnnServiceConfig)
     classifier: object = None     # learn.PackedLinearModel (optional)
     registry: object = None       # obs.MetricsRegistry (own one if None)
+    quality: object = None        # True | QualityConfig | QualityMonitors
 
     def __post_init__(self):
         self._queue = []          # [(ticket, vector [D])]
@@ -102,6 +103,17 @@ class AnnService:
         self._h_classify = reg.histogram("serve.classify_s")
         self._g_pending = reg.gauge("serve.pending")
         self._g_waste = reg.gauge("serve.padding_waste")
+        if self.quality is not None:
+            from repro.obs.quality import QualityConfig, QualityMonitors
+            if self.quality is True:
+                self.quality = QualityConfig()
+            if isinstance(self.quality, QualityConfig):
+                self.quality = QualityMonitors(
+                    self.engine.sketcher, self.quality, registry=reg)
+            # the engine hook samples searches; mutable engines also
+            # subscribe the shadow reservoir to store delete events
+            if getattr(self.engine, "quality", None) is not self.quality:
+                self.engine.attach_quality(self.quality)
 
     @property
     def stats(self):
@@ -149,7 +161,10 @@ class AnnService:
     def add(self, x, ids=None):
         """Ingest vectors [m, D]; returns their external ids. The result
         cache invalidates on the next flush (generation bump)."""
-        return self._mutable().add(x, ids=ids)
+        out = self._mutable().add(x, ids=ids)
+        if self.quality is not None:
+            self.quality.offer_rows(out, x)
+        return out
 
     def bulk_load(self, x, ids=None, chunk_rows: int = 2048):
         """Stream a whole corpus (dense [m, D] or ``encode.CsrMatrix``)
@@ -158,14 +173,22 @@ class AnnService:
         words written back, O(batch) tail appends. Returns the external
         ids int64 [m]; the result cache invalidates on the next flush.
         """
-        return self._mutable().ingest(x, ids=ids, chunk_rows=chunk_rows,
-                                      impl=self.cfg.impl)
+        out = self._mutable().ingest(x, ids=ids, chunk_rows=chunk_rows,
+                                     impl=self.cfg.impl)
+        if self.quality is not None:
+            self.quality.offer_rows(out, x)
+        return out
 
     def delete(self, ids, strict: bool = True) -> int:
+        """Tombstone external ids; the quality bundle's shadow reservoir
+        (if attached) drops them via the store's delete listener."""
         return self._mutable().delete(ids, strict=strict)
 
     def upsert(self, ids, x):
-        return self._mutable().upsert(ids, x)
+        out = self._mutable().upsert(ids, x)
+        if self.quality is not None:
+            self.quality.offer_rows(out, x)
+        return out
 
     def compact(self, *args, **kwargs) -> dict:
         return self._mutable().compact(*args, **kwargs)
@@ -217,7 +240,11 @@ class AnnService:
                 margs.append(np.asarray(sp.sync(m))[:, :n])
             self._c_classified.inc(int(x.shape[0]))
         self._h_classify.observe(time.perf_counter() - t0)
-        return np.concatenate(preds), np.concatenate(margs, axis=1)
+        labels, margins = np.concatenate(preds), np.concatenate(margs, axis=1)
+        qm = self.quality
+        if qm is not None and qm.sample():
+            qm.observe_margins(margins)     # calibration drift series
+        return labels, margins
 
     # -- batch execution -----------------------------------------------------
     def _bucket_for(self, n: int) -> int:
@@ -272,6 +299,14 @@ class AnnService:
             if b > n:
                 x = jnp.pad(x, ((0, b - n), (0, 0)))
             q_codes = self.engine.encode_queries(x, impl=cfg.impl)
+            qm = self.quality
+            if qm is not None and qm.sample():
+                # budgeted shadow check of one real (unpadded) query:
+                # exact-cosine ground truth vs the coded ranking over
+                # the reservoir (obs.shadow)
+                qi = int(qm.rng.integers(n))
+                qm.shadow_check(batch[qi][1], self.engine.encode_queries,
+                                q_codes=q_codes[qi])
             res = [None] * n
             miss = list(range(n))
             keys = None

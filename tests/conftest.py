@@ -5,6 +5,18 @@ import numpy as np
 import pytest
 
 
+def pytest_report_header(config):
+    """Surface which property-test engine this run got (real hypothesis
+    or the seeded shim in ``_hypothesis_compat``) in the CI summary."""
+    try:
+        from _hypothesis_compat import HAVE_HYPOTHESIS
+    except ImportError:
+        return None
+    engine = ("hypothesis" if HAVE_HYPOTHESIS
+              else "seeded shim (_hypothesis_compat)")
+    return f"property tests: {engine}"
+
+
 @pytest.fixture(scope="session")
 def rng():
     return np.random.default_rng(0)

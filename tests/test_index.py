@@ -263,9 +263,9 @@ def test_lifecycle_matches_fresh_build(seed):
 
 @pytest.mark.slow
 def test_lifecycle_hypothesis_sequences():
-    """Property-based op sequences where hypothesis is available."""
-    hyp = pytest.importorskip("hypothesis")
-    from hypothesis import given, settings, strategies as st
+    """Property-based op sequences (real hypothesis when installed,
+    else the seeded shim in ``_hypothesis_compat`` — never skipped)."""
+    from _hypothesis_compat import given, settings, strategies as st
 
     @settings(max_examples=10, deadline=None)
     @given(st.integers(min_value=0, max_value=10 ** 6),

@@ -1,0 +1,398 @@
+"""Quality monitors: empirical-vs-theory convergence, shadow recall
+with Wilson coverage, reservoir invariants, drift detection, export."""
+import math
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+from repro.core.estimators import cell_probs
+from repro.core.probabilities import collision_prob
+from repro.core.schemes import CodeSpec
+from repro.core.sketch import CodedRandomProjection, SketchConfig
+from repro.index import MutableAnnEngine
+from repro.obs import (CollisionMonitor, Cusum, DriftMonitor,
+                       MarginMonitor, MetricsRegistry, PageHinkley,
+                       QualityConfig, QualityMonitors, RecallMonitor,
+                       ShadowReservoir, Welford, synthetic_code_pairs,
+                       to_prometheus, wilson_interval)
+from repro.serve import AnnService, AnnServiceConfig
+
+K = 64
+
+
+def _reg():
+    return MetricsRegistry(enabled=True)
+
+
+# -- Welford ------------------------------------------------------------------
+
+def test_welford_matches_numpy():
+    rng = np.random.default_rng(0)
+    xs = rng.standard_normal(500) * 3.0 + 1.5
+    w = Welford()
+    w.push_many(xs)
+    assert w.n == 500
+    np.testing.assert_allclose(w.mean, xs.mean(), rtol=1e-12)
+    np.testing.assert_allclose(w.var, xs.var(ddof=1), rtol=1e-10)
+
+
+# -- collision monitor: convergence to theory at known rho --------------------
+
+@pytest.mark.parametrize("scheme,w", [("sign", 1.0), ("2bit", 0.75),
+                                      ("uniform", 0.75), ("offset", 1.5)])
+@pytest.mark.parametrize("rho", [0.25, 0.7])
+def test_cell_frequencies_converge_to_theory(scheme, w, rho):
+    """The empirical cell-frequency monitor converges to
+    ``core.estimators.cell_probs`` (diagonal ``collision_prob`` for the
+    offset scheme) at a known synthetic rho, and its MLE recovers it."""
+    spec = CodeSpec(scheme, w)
+    q = np.full(K, w / 3, np.float32) if scheme == "offset" else None
+    a, b = synthetic_code_pairs(spec, K, rho, 2000, seed=3, q=q)
+    mon = CollisionMonitor(spec, K, registry=_reg(), min_pairs=100)
+    mon.observe_pairs(a, b)
+    rep = mon.report()
+    assert abs(rep["rho_hat"] - rho) < 0.02
+    if scheme == "offset":
+        # per-projection regions: diagonal-only audit against P(rho)
+        assert mon.diag_only
+        p = float(collision_prob(jnp.asarray(rho), w, scheme))
+        assert abs(rep["p_hat"] - p) < 0.02
+    else:
+        want = np.asarray(cell_probs(jnp.asarray(rho), spec),
+                          np.float64).ravel()
+        np.testing.assert_allclose(rep["cell_freq"], want, atol=0.02)
+        # diagonal sums to the collision probability curve
+        p = float(collision_prob(jnp.asarray(rho), w, scheme))
+        assert abs(rep["p_hat"] - p) < 0.02
+    # pooled fit at the true rho: the divergence stays at noise level
+    assert rep["chi2_per_cell"] < 5.0
+    # per-pair collision-fraction spread tracks the binomial prediction
+    assert abs(rep["phat_std"] - rep["phat_std_theory"]) \
+        < 0.5 * rep["phat_std_theory"]
+
+
+def test_collision_monitor_batch_stats_and_reset():
+    spec = CodeSpec("2bit", 0.75)
+    mon = CollisionMonitor(spec, K, registry=_reg())
+    a, b = synthetic_code_pairs(spec, K, 0.6, 300, seed=5)
+    st = mon.observe_pairs(a, b)
+    assert abs(st["rho_batch"] - 0.6) < 0.05
+    assert 0.0 < st["p_batch"] < 1.0
+    assert mon.pairs == 300
+    mon.reset()
+    assert mon.pairs == 0 and mon.counts.sum() == 0
+    assert math.isnan(mon.report()["rho_hat"])
+
+
+# -- wilson interval ----------------------------------------------------------
+
+def test_wilson_interval_basics():
+    lo, hi = wilson_interval(0, 0)
+    assert math.isnan(lo) and math.isnan(hi)
+    lo, hi = wilson_interval(10, 10)
+    assert hi == 1.0 and 0.6 < lo < 1.0      # no Wald collapse at p=1
+    lo, hi = wilson_interval(50, 100)
+    assert lo < 0.5 < hi and (hi - lo) < 0.25
+
+
+def test_wilson_interval_coverage():
+    """95% Wilson intervals bracket the true Bernoulli rate ~95% of the
+    time (seeded; binomial draws, 300 replications, n=60)."""
+    rng = np.random.default_rng(7)
+    for p in (0.1, 0.5, 0.9):
+        cover = 0
+        for _ in range(300):
+            s = rng.binomial(60, p)
+            lo, hi = wilson_interval(int(s), 60)
+            cover += lo <= p <= hi
+        assert cover >= 0.90 * 300, (p, cover)
+
+
+# -- shadow reservoir invariants ----------------------------------------------
+
+def test_reservoir_cap_upsert_and_tombstones():
+    res = ShadowReservoir(cap=32, seed=0, registry=_reg())
+    rng = np.random.default_rng(1)
+    rows = rng.standard_normal((200, 8)).astype(np.float32)
+    res.offer(np.arange(200), rows)
+    assert len(res) == 32 and res.n_seen == 200
+    assert set(res.ids()) <= set(range(200))
+    # upsert: same id replaces in place, no slot churn
+    v0 = res.version
+    target = int(res.ids()[0])
+    res.offer([target], np.full((1, 8), 9.0, np.float32))
+    assert len(res) == 32 and res.version > v0
+    slot = list(res.ids()).index(target)
+    np.testing.assert_array_equal(res.rows()[slot], np.full(8, 9.0))
+    # tombstones: removed ids can never appear again
+    kill = res.ids()[:10]
+    res.remove(kill)
+    assert len(res) == 22
+    assert not (set(kill) & set(res.ids()))
+    res.remove([10 ** 9])                     # unknown id: no-op
+    assert len(res) == 22
+
+
+def test_reservoir_is_roughly_uniform():
+    """Algorithm R: early and late offers are retained at similar
+    rates (chi-square over thirds of the stream, seeded)."""
+    counts = np.zeros(3)
+    for seed in range(30):
+        res = ShadowReservoir(cap=30, seed=seed, registry=_reg())
+        res.offer(np.arange(300), np.zeros((300, 4), np.float32))
+        ids = res.ids()
+        for third in range(3):
+            counts[third] += np.sum((ids >= third * 100)
+                                    & (ids < (third + 1) * 100))
+    frac = counts / counts.sum()
+    assert np.all(np.abs(frac - 1 / 3) < 0.08), frac
+
+
+# -- shadow recall vs exact ground truth --------------------------------------
+
+def _shadow_setup(n=400, d=24, seed=2):
+    rng = np.random.default_rng(seed)
+    # unit-norm rows: the quantizer's cell widths assume unit-variance
+    # projections, and the rho audit is only calibrated on the sphere
+    x = rng.standard_normal((n, d)).astype(np.float32)
+    x /= np.linalg.norm(x, axis=1, keepdims=True)
+    crp = CodedRandomProjection(SketchConfig(k=256, scheme="2bit", w=0.75),
+                                d)
+    res = ShadowReservoir(cap=n, seed=0, registry=_reg())
+    res.offer(np.arange(n), x)
+    return x, crp, res, rng
+
+
+def test_shadow_recall_brackets_exhaustive_truth():
+    """The sampled shadow estimate's Wilson 95% interval brackets the
+    exhaustively-measured recall of the same protocol (reservoir = the
+    whole corpus, so the protocol's ground truth is exact)."""
+    x, crp, res, rng = _shadow_setup()
+    mon = RecallMonitor(res, top_k=10, registry=_reg())
+    queries = x[:80] + 0.3 / np.sqrt(24) * rng.standard_normal(
+        (80, 24)).astype(np.float32)
+    queries /= np.linalg.norm(queries, axis=1, keepdims=True)
+    # exhaustive truth: same protocol, every query, computed directly
+    codes = np.asarray(crp.encode(jnp.asarray(x)), np.int32)
+    hits_all = 0
+    for qv in queries:
+        qc = np.asarray(crp.encode(jnp.asarray(qv[None, :])), np.int32)[0]
+        qn = qv / np.linalg.norm(qv)
+        cos = (x @ qn) / np.maximum(np.linalg.norm(x, axis=1), 1e-30)
+        gt = np.argsort(-cos, kind="stable")[:10]
+        frac = np.mean(codes == qc[None, :], axis=1)
+        got = np.argsort(-frac, kind="stable")[:10]
+        hits_all += len(set(gt.tolist()) & set(got.tolist()))
+    truth = hits_all / (10 * len(queries))
+    # sampled estimate: a random half of the queries through the monitor
+    for qi in rng.choice(len(queries), size=40, replace=False):
+        r = mon.observe_query(queries[qi], crp.encode, crp._estimator)
+        assert r is not None
+    rep = mon.report()
+    assert rep["trials"] == 400
+    assert rep["recall_lo"] <= truth <= rep["recall_hi"], (rep, truth)
+    # 2-bit codes at k=256 rank 400 gaussian rows decently
+    assert rep["recall"] > 0.3
+
+
+def test_shadow_rho_error_tracks_asymptotic_std():
+    """rho_hat - rho_true over the ground-truth pairs: near-zero mean,
+    spread within a small factor of the estimator's asymptotic std."""
+    x, crp, res, rng = _shadow_setup(seed=4)
+    mon = RecallMonitor(res, top_k=10, registry=_reg())
+    queries = x[:30] + 0.2 / np.sqrt(24) * rng.standard_normal(
+        (30, 24)).astype(np.float32)
+    queries /= np.linalg.norm(queries, axis=1, keepdims=True)
+    for qv in queries:
+        mon.observe_query(qv, crp.encode, crp._estimator)
+    rep = mon.report()
+    assert abs(rep["rho_err_mean"]) < 0.1
+    assert rep["rho_err_std"] < 3.0 * rep["rho_std_theory"]
+
+
+def test_shadow_skips_tiny_reservoir():
+    res = ShadowReservoir(cap=8, seed=0, registry=_reg())
+    res.offer(np.arange(8), np.zeros((8, 4), np.float32))
+    crp = CodedRandomProjection(SketchConfig(k=K, scheme="2bit", w=0.75), 4)
+    mon = RecallMonitor(res, top_k=10, registry=_reg())
+    assert mon.observe_query(np.ones(4, np.float32), crp.encode,
+                             crp._estimator) is None
+
+
+# -- drift detectors ----------------------------------------------------------
+
+def test_page_hinkley_fires_on_shift_and_stays_silent_stationary():
+    """Page-Hinkley is silent over a long stationary stream and fires
+    within a bounded number of batches after an injected mean shift."""
+    rng = np.random.default_rng(11)
+    ph = PageHinkley(delta=0.005, threshold=0.5, min_samples=10)
+    for _ in range(800):
+        assert not ph.update(0.5 + 0.01 * rng.standard_normal())
+    assert ph.alarms == 0
+    fired_at = None
+    for i in range(200):
+        if ph.update(0.56 + 0.01 * rng.standard_normal()):
+            fired_at = i
+            break
+    assert fired_at is not None and fired_at < 100, fired_at
+    # reset-on-fire: stat re-armed
+    assert ph.stat <= 0.5 and ph.n <= 1
+
+
+def test_page_hinkley_two_sided_catches_drops():
+    ph = PageHinkley(delta=0.0, threshold=0.3, min_samples=5)
+    fired = any(ph.update(1.0 - 0.05 * i) for i in range(40))
+    assert fired
+
+
+def test_cusum_warmup_baseline_and_fire():
+    c = Cusum(slack=0.01, threshold=0.3, warmup=20)
+    for _ in range(20):
+        c.update(1.0)
+    assert abs(c.mu0 - 1.0) < 1e-9
+    assert not any(c.update(1.0) for _ in range(50))
+    assert any(c.update(1.1) for _ in range(10))
+    assert c.alarms == 1
+
+
+def test_drift_monitor_gauges_and_callbacks():
+    reg = _reg()
+    dm = DriftMonitor(registry=reg)
+    dm.watch("s", PageHinkley(delta=0.0, threshold=0.2, min_samples=3))
+    events = []
+    dm.subscribe(lambda series, value, det: events.append((series, value)))
+    fired = False
+    for i in range(50):
+        fired = dm.update("s", float(i)) or fired
+    assert fired and events and events[0][0] == "s"
+    snap = reg.snapshot()
+    assert snap["gauges"]["drift.s.stat"] >= 0.0
+    assert snap["counters"]["drift.s.alarms"] >= 1
+    assert dm.alarms("s") >= 1
+    # NaN observations are ignored, not counted
+    n0 = dm.detector("s").n
+    assert not dm.update("s", float("nan"))
+    assert dm.detector("s").n == n0
+
+
+def test_drift_detection_survives_disabled_registry():
+    dm = DriftMonitor(registry=MetricsRegistry(enabled=False))
+    dm.watch("s", PageHinkley(delta=0.0, threshold=0.1, min_samples=2))
+    hits = []
+    dm.subscribe(lambda *a: hits.append(a))
+    for i in range(20):
+        dm.update("s", float(i))
+    assert hits    # callbacks fire even with metrics off
+
+
+# -- the bundle + serving integration -----------------------------------------
+
+def _service(sample_rate=1.0, n=300, d=16, seed=0, enabled=True):
+    rng = np.random.default_rng(seed)
+    x = rng.standard_normal((n, d)).astype(np.float32)
+    crp = CodedRandomProjection(SketchConfig(k=K, scheme="2bit", w=0.75), d)
+    eng = MutableAnnEngine(crp, tail_rows=128)
+    reg = MetricsRegistry(enabled=enabled)
+    svc = AnnService(eng, AnnServiceConfig(top_k=5, cache_size=0,
+                                           buckets=(8, 32)),
+                     registry=reg,
+                     quality=QualityConfig(sample_rate=sample_rate,
+                                           reservoir_rows=256,
+                                           min_pairs=32))
+    ids = svc.bulk_load(x)
+    return svc, eng, x, ids, rng
+
+
+def test_service_quality_end_to_end():
+    svc, eng, x, ids, rng = _service()
+    assert len(svc.quality.reservoir) == 256
+    for i in range(40):
+        svc.submit(x[i] + 0.1 * rng.standard_normal(16).astype(np.float32))
+    svc.flush()
+    qm = svc.quality
+    assert qm.collision.pairs > 0        # engine search hook fed pairs
+    assert qm.recall.queries > 0         # serving shadow hook fired
+    rep = qm.report()
+    assert 0.0 <= rep["shadow"]["recall"] <= 1.0
+    assert np.isfinite(rep["collision"]["rho_hat"])
+    # deletes keep the reservoir tombstone-aware through the store event
+    kill = [int(i) for i in ids if int(i) in set(qm.reservoir.ids())][:20]
+    svc.delete(kill)
+    assert not (set(kill) & set(qm.reservoir.ids()))
+    # gauges surface through the registry and the Prometheus endpoint
+    txt = to_prometheus(svc.registry)
+    assert "quality_shadow_recall" in txt
+    assert "# HELP" in txt
+
+
+def test_quality_disabled_registry_is_noop():
+    svc, eng, x, ids, rng = _service(enabled=False)
+    assert not svc.quality.sample()
+    for i in range(10):
+        svc.submit(x[i])
+    svc.flush()
+    assert svc.quality.collision.pairs == 0
+    assert svc.quality.recall.queries == 0
+    assert len(svc.quality.reservoir) == 0   # ingest hook no-ops too
+
+
+def test_quality_zero_rate_never_samples():
+    svc, eng, x, ids, rng = _service(sample_rate=0.0)
+    for i in range(10):
+        svc.submit(x[i])
+    svc.flush()
+    assert svc.quality.collision.pairs == 0
+
+
+def test_margin_monitor_binary_and_ovr():
+    reg = _reg()
+    mm = MarginMonitor(registry=reg)
+    m1 = mm.observe(np.array([[1.0, -2.0, 3.0]]))
+    np.testing.assert_allclose(m1, (1.0 - 2.0 + 3.0) / 3)
+    mm2 = MarginMonitor(registry=reg, name="q.m2")
+    ovr = np.array([[3.0, 0.0], [1.0, -1.0], [0.0, 2.0]])
+    np.testing.assert_allclose(mm2.observe(ovr), ((3 - 1) + (2 - 0)) / 2)
+
+
+def test_trainer_feeds_margin_monitor():
+    from repro.learn import LearnConfig, fit_log
+    svc, eng, x, ids, rng = _service()
+    labels = {int(i): (1 if j % 2 else -1) for j, i in enumerate(ids)}
+    model = fit_log(eng.store, labels, eng.sketcher.spec,
+                    LearnConfig(steps=3), quality=svc.quality)
+    assert svc.quality.margins.moments.n > 0
+    svc.set_classifier(model)
+    svc.classify(x[:8])                  # classify hook (rate=1.0)
+    assert svc.quality.margins.moments.n > 0
+
+
+def test_on_drift_subscription_contract():
+    crp = CodedRandomProjection(SketchConfig(k=K, scheme="2bit", w=0.75),
+                                8)
+    qm = QualityMonitors(crp, QualityConfig(), registry=_reg())
+    got = []
+    assert qm.on_drift(lambda s, v, d: got.append(s)) is qm
+    det = qm.drift.watch("margin_mean",
+                         PageHinkley(delta=0.0, threshold=0.1,
+                                     min_samples=2))
+    for i in range(20):
+        qm.drift.update("margin_mean", float(i))
+    assert "margin_mean" in got
+
+
+# -- prometheus export (satellite: complete, monotone bucket series) ----------
+
+def test_prometheus_emits_every_finite_bucket():
+    reg = _reg()
+    h = reg.histogram("t.lat")
+    h.observe(1e-5)
+    h.observe(0.5)
+    txt = to_prometheus(reg)
+    lines = [l for l in txt.splitlines() if l.startswith("t_lat_bucket")]
+    assert len(lines) == h.spec.n_buckets + 1       # every bound + +Inf
+    cum = [int(l.rsplit(" ", 1)[1]) for l in lines]
+    assert cum == sorted(cum) and cum[-1] == 2      # cumulative, monotone
+    les = [l.split('le="')[1].split('"')[0] for l in lines]
+    assert les[-1] == "+Inf" and len(set(les)) == len(les)
+    assert f"# HELP t_lat histogram 't.lat'" in txt

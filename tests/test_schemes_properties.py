@@ -1,10 +1,12 @@
-"""Hypothesis property tests on scheme/packing/estimator invariants."""
+"""Hypothesis property tests on scheme/packing/estimator invariants.
+
+Runs under real hypothesis when installed, otherwise under the seeded
+sampling shim in ``_hypothesis_compat`` — never skipped either way.
+"""
 import numpy as np
 import jax.numpy as jnp
-import pytest
 
-pytest.importorskip("hypothesis")
-from hypothesis import given, settings, strategies as st
+from _hypothesis_compat import given, settings, strategies as st
 
 from repro.core import packing as PK
 from repro.core import schemes as S
