@@ -3,14 +3,16 @@
 Three checks, each tripping a nonzero exit:
 
 1. every public symbol (module, class, function, method, property) in
-   ``repro.ann``, ``repro.index`` and ``repro.rank`` carries a
-   docstring — the subsystems' shape/dtype contracts live there;
+   the ``PACKAGES`` list (``repro.ann`` through ``repro.kernels``)
+   carries a docstring — the subsystems' shape/dtype contracts live
+   there;
 2. every repo path referenced from ``README.md`` and ``docs/*.md``
    (markdown links and backticked tokens that look like paths) exists;
-3. every module of the packages in ``MENTION_PACKAGES`` (currently
-   ``repro.obs`` — the layer whose whole job is being visible) is
-   mentioned by name somewhere in the docs, so a new monitor cannot
-   land documentation-silent.
+3. every module of the packages in ``MENTION_PACKAGES`` (``repro.obs``
+   — the layer whose whole job is being visible — and
+   ``repro.kernels`` — where every hot loop lives) is mentioned by
+   name somewhere in the docs, so a new monitor or kernel family
+   cannot land documentation-silent.
 
 Run as ``python benchmarks/run.py lint``, ``python
 scripts/check_docs.py``, or through ``tests/test_docs_lint.py``.
@@ -26,8 +28,8 @@ import sys
 
 ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 PACKAGES = ("repro.ann", "repro.index", "repro.rank", "repro.learn",
-            "repro.encode", "repro.obs")
-MENTION_PACKAGES = ("repro.obs",)
+            "repro.encode", "repro.obs", "repro.kernels")
+MENTION_PACKAGES = ("repro.obs", "repro.kernels")
 DOC_FILES = ["README.md"]
 DOC_DIRS = ["docs"]
 

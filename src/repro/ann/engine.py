@@ -53,7 +53,8 @@ from repro.obs import span, tracing_active
 from repro.rank.tables import RankTables, build_rank_tables
 
 __all__ = ["SearchConfig", "AnnEngine", "QueryCoder", "merge_topk",
-           "run_chunked", "lut_rerank_stage", "rho_scored"]
+           "run_chunked", "lut_rerank_stage", "rho_scored",
+           "resolve_query_tables"]
 
 
 @dataclass(frozen=True)
@@ -65,8 +66,11 @@ class SearchConfig:
     n_probes: int = 0            # lsh: multi-probe expansions per band
     chunk_q: int = 256           # query rows per device step
     impl: str = "auto"           # kernel dispatch (see kernels.ops)
-    scored: bool = False         # two-stage: coarse top-m -> LUT re-rank
+    scored: bool = False         # scored search: LUT scores, calibrated rho
     rerank_m: int = 0            # scored: coarse candidates (0 = auto)
+    fused: bool = True           # scored exact: single-pass kernel (False =
+    #                              the literal two-stage coarse -> re-rank)
+    table_dtype: str = "auto"    # LUT storage: auto | f32 | bf16 | int8
 
     def resolve_m(self, n: int) -> int:
         """Coarse candidate count for one part with ``n`` rows: the
@@ -74,6 +78,29 @@ class SearchConfig:
         ``top_k`` and never above ``n`` (all static => one jit entry)."""
         m = self.rerank_m or max(64, 4 * self.top_k)
         return max(1, min(max(m, self.top_k), n))
+
+    def use_fused(self) -> bool:
+        """Whether this config takes the single-pass fused scored kernel:
+        scored exact search only (lsh's band filter runs in the coarse
+        stage, so lsh scored stays two-stage)."""
+        return self.scored and self.fused and self.mode == "exact"
+
+
+def resolve_query_tables(tables: RankTables, q_codes, table_dtype: str):
+    """Build per-query LUTs in the configured storage dtype ->
+    (q_tables [Q, F*P], scales [Q, W] or None).
+
+    ``auto`` takes the table bundle's own dtype (f32, or bf16 after
+    ``quantize``); ``f32``/``bf16`` force it; ``int8`` returns
+    power-of-two-scaled int8 tables (``RankTables.query_tables_int8``),
+    which only the fused scored kernel accepts.
+    """
+    if table_dtype == "int8":
+        return tables.query_tables_int8(q_codes)
+    named = {"auto": None, "f32": jnp.float32, "bf16": jnp.bfloat16}
+    if table_dtype not in named:
+        raise ValueError(f"unknown table_dtype {table_dtype!r}")
+    return tables.query_tables(q_codes, dtype=named[table_dtype]), None
 
 
 class QueryCoder:
@@ -301,7 +328,8 @@ class AnnEngine:
     def search(self, queries, top_k: int = 10, *, mode: str = "exact",
                min_bands: int = 1, n_probes: int = 0,
                chunk_q: int = 256, impl: str = "auto",
-               scored: bool = False, rerank_m: int = 0):
+               scored: bool = False, rerank_m: int = 0,
+               fused: bool = True, table_dtype: str = "auto"):
         """queries float [Q, D] -> (ids int32 [Q, top_k], rho_hat
         float32 [Q, top_k]).
 
@@ -312,7 +340,8 @@ class AnnEngine:
         """
         cfg = SearchConfig(top_k=top_k, mode=mode, min_bands=min_bands,
                            n_probes=n_probes, chunk_q=chunk_q, impl=impl,
-                           scored=scored, rerank_m=rerank_m)
+                           scored=scored, rerank_m=rerank_m, fused=fused,
+                           table_dtype=table_dtype)
         return self.search_codes(self.encode_queries(queries, impl=impl), cfg)
 
     def search_codes(self, q_codes, cfg: SearchConfig):
@@ -326,10 +355,13 @@ class AnnEngine:
         """
         if cfg.mode not in ("exact", "lsh"):
             raise ValueError(f"unknown mode {cfg.mode!r}")
+        if cfg.table_dtype == "int8" and not cfg.use_fused():
+            raise ValueError("int8 tables require the fused scored exact "
+                             "path (scored=True, fused=True, mode='exact')")
         q = q_codes.shape[0]
-        if q == 0:
-            return (jnp.zeros((0, cfg.top_k), jnp.int32),
-                    jnp.zeros((0, cfg.top_k), jnp.float32))
+        if q == 0 or self.store.n == 0:
+            return (jnp.full((q, cfg.top_k), -1, jnp.int32),
+                    jnp.full((q, cfg.top_k), -1.0, jnp.float32))
         if tracing_active():
             out = run_chunked(q_codes, cfg, self._traced_chunk)
         else:
@@ -373,6 +405,13 @@ class AnnEngine:
                       q=int(chunk.shape[0])) as sp:
                 out = sp.sync(self._chunk_fn(cfg)(chunk))
             return out
+        if cfg.use_fused():
+            with span("search.fused", mode=cfg.mode,
+                      q=int(chunk.shape[0]),
+                      m=cfg.resolve_m(self.store.n),
+                      top_k=cfg.top_k) as sp:
+                out = sp.sync(self._chunk_fn(cfg)(chunk))
+            return out
         coarse, rerank = self._stage_fn_pair(cfg)
         with span("search.coarse", mode=cfg.mode,
                   q=int(chunk.shape[0]),
@@ -406,7 +445,23 @@ class AnnEngine:
             top, impl=cfg.impl)
         return vals, jnp.where(vals < 0, -1, ids)
 
+    def _fused_chunk(self, q_codes, *, cfg: SearchConfig):
+        """One scored exact chunk through the single-pass fused kernel:
+        coarse top-m selection and LUT re-rank in one corpus stream —
+        bit-identical results to the two-stage pair wherever LUT scores
+        don\'t tie across different collision counts."""
+        q_words = _ops.pack_codes(q_codes, self.store.bits, impl=cfg.impl)
+        q_tables, scales = resolve_query_tables(self.rank_tables, q_codes,
+                                                cfg.table_dtype)
+        scores, ids = _ops.fused_scored_topk(
+            q_words, q_tables, self.store.words, self.store.bits,
+            self.sketcher.cfg.k, cfg.resolve_m(self.store.n), cfg.top_k,
+            scales=scales, impl=cfg.impl)
+        return ids, rho_scored(self.rank_tables, ids, scores)
+
     def _exact_chunk(self, q_codes, *, cfg: SearchConfig):
+        if cfg.use_fused():
+            return self._fused_chunk(q_codes, cfg=cfg)
         vals, ids = self._exact_coarse(q_codes, cfg=cfg)
         if cfg.scored:
             return self._rerank(q_codes, ids, cfg)
@@ -452,7 +507,8 @@ class AnnEngine:
     # -- multi-device path ---------------------------------------------------
     def search_sharded(self, queries, mesh: Mesh, axis: str = "data",
                        top_k: int = 10, impl: str = "auto",
-                       scored: bool = False, rerank_m: int = 0):
+                       scored: bool = False, rerank_m: int = 0,
+                       fused: bool = True, table_dtype: str = "auto"):
         """Exact search with the corpus row-sharded over ``mesh[axis]``.
 
         queries float [Q, D] -> (ids int32 [Q, top_k], rho_hat float32
@@ -460,9 +516,12 @@ class AnnEngine:
         its rows (local ids offset to global by the shard index), then
         the per-shard lists are all-gathered and re-top-k'd — the
         classic distributed top-k merge; every step stays on device.
-        With ``scored=True`` each shard additionally LUT re-ranks its
-        local coarse top-m before the merge, so the cross-shard merge
-        compares calibrated scores, not counts.
+        With ``scored=True`` each shard additionally LUT-scores its
+        local coarse top-m before the merge (single-pass fused kernel
+        by default, two-stage rerank with ``fused=False``), so the
+        cross-shard merge compares calibrated scores, not counts.
+        Query tables are built once on host side and replicated;
+        ``table_dtype`` selects their storage (see ``SearchConfig``).
         """
         from jax.experimental.shard_map import shard_map
 
@@ -473,7 +532,11 @@ class AnnEngine:
         bits = store.bits
         n_local = store.n // mesh.shape[axis]
         tables = self.rank_tables if scored else None
-        cfg = SearchConfig(top_k=top_k, scored=scored, rerank_m=rerank_m)
+        cfg = SearchConfig(top_k=top_k, scored=scored, rerank_m=rerank_m,
+                           fused=fused, table_dtype=table_dtype)
+        if cfg.table_dtype == "int8" and not cfg.use_fused():
+            raise ValueError("table_dtype='int8' requires the fused "
+                             "scored path (scored=True, fused=True)")
 
         def merge_gathered(vals, ids, offset):
             ids = jnp.where(ids < 0, -1, ids + offset)
@@ -498,6 +561,30 @@ class AnnEngine:
             return merge_gathered(scores, rows,
                                   jax.lax.axis_index(axis) * dbw.shape[0])
 
+        def local_fused(qw, tabs, dbw, scl=None):
+            m = cfg.resolve_m(n_local)
+            scores, rows = _ops.fused_scored_topk(
+                qw, tabs, dbw, bits, k, m, top_k, scales=scl, impl=impl)
+            return merge_gathered(scores, rows,
+                                  jax.lax.axis_index(axis) * dbw.shape[0])
+
+        if scored and cfg.use_fused():
+            q_tables, scales = resolve_query_tables(tables, q_codes,
+                                                    cfg.table_dtype)
+            rep = P(None, None)
+            if scales is None:
+                fn = shard_map(local_fused, mesh=mesh,
+                               in_specs=(rep, rep, P(axis, None)),
+                               out_specs=(rep, rep), check_rep=False)
+                scores, ids = jax.jit(fn)(q_words, q_tables, store.words)
+            else:
+                fn = shard_map(local_fused, mesh=mesh,
+                               in_specs=(rep, rep, P(axis, None), rep),
+                               out_specs=(rep, rep), check_rep=False)
+                scores, ids = jax.jit(fn)(q_words, q_tables, store.words,
+                                          scales)
+            ids = jnp.where(jnp.isneginf(scores), -1, ids)
+            return ids, rho_scored(tables, ids, scores)
         if scored:
             fn = shard_map(local_scored, mesh=mesh,
                            in_specs=(P(None, None), P(None, None),

@@ -16,11 +16,16 @@ matching-band scores against the segment's resident band hashes, the
 validity mask folded into the candidate filter, full packed collision
 re-rank, then the same cross-segment merge.
 
-Two-stage scored search (``scored=True``) also runs per segment: the
-masked coarse pass selects each segment's top-m live candidates by
-collision count, the fused LUT kernel (``repro.rank``) re-ranks them,
-and the cross-segment merge compares calibrated float scores — the same
-merge, float sentinel instead of -1.
+Scored search (``scored=True``) also runs per segment. The default
+path is the single-pass fused masked kernel
+(``kernels.fused_scored``): each segment is streamed once, the top-m
+live candidates by collision count are selected and LUT-scored
+entirely in-VMEM, and the cross-segment merge compares calibrated
+float scores — the same merge, float sentinel instead of -1. With
+``fused=False`` the legacy two-stage path runs instead (masked coarse
+top-m, then the LUT re-rank kernel over gathered candidates); both
+paths return bit-identical results — ``tests/test_kernel_conformance``
+holds them to it.
 """
 from __future__ import annotations
 
@@ -29,7 +34,8 @@ import jax.numpy as jnp
 
 from repro.ann.bands import BandSpec, probe_hashes
 from repro.ann.engine import (QueryCoder, SearchConfig, _coarse_band_scores,
-                              lut_rerank_stage, merge_topk, rho_scored,
+                              lut_rerank_stage, merge_topk,
+                              resolve_query_tables, rho_scored,
                               run_chunked)
 from repro.rank.tables import RankTables, build_rank_tables
 from repro.core import packing as _packing
@@ -185,15 +191,19 @@ class MutableAnnEngine:
     def search(self, queries, top_k: int = 10, *, mode: str = "exact",
                min_bands: int = 1, n_probes: int = 0, chunk_q: int = 256,
                impl: str = "auto", scored: bool = False,
-               rerank_m: int = 0):
+               rerank_m: int = 0, fused: bool = True,
+               table_dtype: str = "auto"):
         """queries float [Q, D] -> (ids int32 [Q, top_k], rho_hat
         float32 [Q, top_k]); ids are external item ids, -1 marks empty
-        slots. ``scored=True`` re-ranks each segment's coarse top-m
-        (m = ``rerank_m``, 0 = auto) with the fused LUT kernel and
-        returns rho_hat calibrated from the non-linear scores."""
+        slots. ``scored=True`` LUT-scores each segment's coarse top-m
+        (m = ``rerank_m``, 0 = auto) — single-pass fused masked kernel
+        by default, two-stage rerank with ``fused=False`` — and returns
+        rho_hat calibrated from the non-linear scores. ``table_dtype``
+        picks the query-table storage (see ``SearchConfig``)."""
         cfg = SearchConfig(top_k=top_k, mode=mode, min_bands=min_bands,
                            n_probes=n_probes, chunk_q=chunk_q, impl=impl,
-                           scored=scored, rerank_m=rerank_m)
+                           scored=scored, rerank_m=rerank_m, fused=fused,
+                           table_dtype=table_dtype)
         return self.search_codes(self.encode_queries(queries, impl=impl),
                                  cfg)
 
@@ -204,6 +214,10 @@ class MutableAnnEngine:
         if cfg.mode == "lsh" and self.band_spec is None:
             raise ValueError("store built without band_spec: lsh "
                              "retrieval unavailable")
+        if cfg.table_dtype == "int8" and not cfg.use_fused():
+            raise ValueError("table_dtype='int8' requires the fused "
+                             "scored path (scored=True, fused=True, "
+                             "mode='exact')")
         q = q_codes.shape[0]
         if q == 0 or self.store.n_live == 0:
             return (jnp.full((q, cfg.top_k), -1, jnp.int32),
@@ -224,14 +238,33 @@ class MutableAnnEngine:
               if cfg.mode == "lsh" else None)
         # the per-query LUTs are segment-independent: build once per
         # chunk, not once per segment (this loop runs eagerly)
-        q_tables = (self.rank_tables.query_tables(q_codes)
-                    if cfg.scored else None)
+        fused = cfg.scored and cfg.use_fused()
+        q_tables = scales = None
+        if fused:
+            q_tables, scales = resolve_query_tables(
+                self.rank_tables, q_codes, cfg.table_dtype)
+        elif cfg.scored:
+            q_tables = self.rank_tables.query_tables(q_codes)
         vals_l, ids_l = [], []
         # the span syncs below are passthrough no-ops unless a tracer is
         # installed, so the eager segment loop only serializes the
         # device pipeline while a trace is actually being recorded
         for i, seg in enumerate(self.store.segments()):
             if seg.live == 0:
+                continue
+            if fused:
+                m = cfg.resolve_m(seg.cap)
+                with span("search.fused", segment=i, rows=seg.cap,
+                          m=m, top_k=cfg.top_k) as sp:
+                    vals, rows = _ops.fused_scored_topk_masked(
+                        q_words, q_tables, seg.words, seg.valid_dev(),
+                        bits, k, m, cfg.top_k, scales=scales,
+                        impl=cfg.impl)
+                    sp.sync(vals)
+                ext = jnp.take(seg.ids_dev(),
+                               jnp.clip(rows, 0, seg.cap - 1), axis=0)
+                ids_l.append(jnp.where(rows < 0, -1, ext))
+                vals_l.append(vals)
                 continue
             top = cfg.resolve_m(seg.cap) if cfg.scored else cfg.top_k
             with span("search.coarse", mode=cfg.mode, segment=i,

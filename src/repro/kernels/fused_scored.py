@@ -1,0 +1,304 @@
+"""Single-pass fused scored search: coarse collision filter + LUT
+re-rank in one kernel.
+
+The two-stage scored path (``packed_collision`` top-m -> gather ->
+``packed_lut`` re-rank) pays for its statistical win twice: the coarse
+stage sorts the full [Q, N] count matrix down to m candidate ids, and
+those ids round-trip through HBM to drive a gather before scoring. This
+kernel streams the corpus once more instead and never materializes
+either: the survivor *rule* of the stable coarse top-m is evaluated
+in-VMEM per corpus tile, and survivors' LUT scores enter the running
+top-k directly.
+
+Survivor rule. Collision counts live in [-1, k] (-1 = tombstoned or
+padded), so the coarse top-m by count is fully described by a threshold
+and a tie quota: with A(c) = #{rows : count > c} and t the smallest
+c >= 0 with A(c) < m, row n survives iff count > t, or count == t and
+its id-ascending rank among the count == t ties is <= m - A(t). That is
+exactly the membership of ``ref.topk_stable_ref(counts, m)`` (stable
+ties -> lowest id) — but it needs only the (k+1)-bin exceedance
+histogram, not a sort.
+
+Two sweeps over the corpus stream (grid minor axis runs 0..2*NT-1; VMEM
+scratch persists across the minor axis for a fixed query tile):
+
+sweep A (j < NT)
+    XOR/popcount counts per tile, accumulate A(c) for c in 0..k into a
+    [bq, k+1] VMEM histogram. At the phase boundary (j == NT) the
+    histogram inverts into (t, quota) with a min/max reduction — no
+    gather, no sort.
+
+sweep B (j >= NT)
+    Recompute the tile's counts (cheaper than writing [Q, N] to HBM and
+    reading it back), evaluate the survivor rule — id-ascending tie
+    ranks come from a sequential per-query tie counter plus an in-tile
+    cumsum, computed as a triangular f32 matmul (MXU-friendly; exact
+    below 2^24) — LUT-score the tile, mask non-survivors to -inf, and
+    merge into the running (scores, ids) top-k exactly like
+    ``packed_lut``.
+
+Scoring paths: float tables upcast to float32 at tile load and
+accumulate in (word, field) order (bit-identical to
+``ref.lut_scores_rowwise_ref``); int8 tables take per-(query, word)
+float32 scales, sum each word's 32/b selected entries exactly in int32,
+and join the float32 total as ``score += scale * float(isum)`` in word
+order (bit-identical to ``ref.lut_scores_rowwise_int8_ref``). Scales
+must be powers of two: the multiply is then exact, so FMA contraction —
+which XLA applies or skips depending on the surrounding fusion — cannot
+flip a single result bit between kernel and oracle.
+
+Padding: padded query rows get zero words/tables/scales (their outputs
+are sliced off); corpus rows past ``n_valid`` (and tombstoned rows in
+the masked variant) take count -1, which the survivor rule can never
+admit, so they need no separate score mask.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.core.packing import bitmask_width
+from repro.kernels.packed_collision import (_merge_running_topk,
+                                            _mismatch_bits, _pad)
+from repro.kernels.packed_lut import _accum_lut_scores, _init_running, \
+    _lut_select
+
+__all__ = ["fused_scored_topk_pallas", "fused_scored_topk_masked_pallas"]
+
+_NEG_INF = float("-inf")
+
+
+def _row_cumsum(x):
+    """Inclusive row-wise cumsum of small non-negative int32 [bq, bn]
+    via a triangular f32 matmul — one MXU op instead of a lane scan;
+    exact while row sums stay below 2^24 (tile widths are far below)."""
+    n = x.shape[-1]
+    r = jax.lax.broadcasted_iota(jnp.int32, (n, n), 0)
+    c = jax.lax.broadcasted_iota(jnp.int32, (n, n), 1)
+    tri = (r <= c).astype(jnp.float32)
+    return jnp.dot(x.astype(jnp.float32), tri,
+                   preferred_element_type=jnp.float32).astype(jnp.int32)
+
+
+def _accum_lut_scores_int8(tab, scales, words, bits: int, shape):
+    """int8-table LUT scores for a corpus tile: tab int32 [bq, F*P]
+    (upcast int8 entries), scales f32 [bq, W], words uint32 [bn, W] ->
+    f32 ``shape``. Per word: exact int32 entry sum, then one scaled
+    float32 add — the accumulation contract of
+    ``ref.lut_scores_rowwise_int8_ref``."""
+    p = 1 << bits
+    cpw = 32 // bits
+    n_words = words.shape[-1]
+    score = jnp.zeros(shape, jnp.float32)
+    for w in range(n_words):
+        word = words[:, w][None, :]                       # [1, bn]
+        isum = jnp.zeros(shape, jnp.int32)
+        for f in range(cpw):
+            c = (word >> jnp.uint32(f * bits)) & jnp.uint32(p - 1)
+            col = (w * cpw + f) * p
+            entries = [tab[:, col + i][:, None] for i in range(p)]
+            isum = isum + _lut_select(c, entries)
+        score = score + scales[:, w][:, None] * isum.astype(jnp.float32)
+    return score
+
+
+def _fused_scored_kernel(*refs, bits: int, k: int, rerank_m: int,
+                         top_k: int, n_valid: int, block_n: int, nt: int,
+                         has_mask: bool, has_scales: bool):
+    it = iter(refs)
+    q_ref, tab_ref, db_ref = next(it), next(it), next(it)
+    valid_ref = next(it) if has_mask else None
+    scales_ref = next(it) if has_scales else None
+    ov_ref, oi_ref = next(it), next(it)
+    above_ref, thr_ref, quota_ref, ties_ref = (next(it), next(it),
+                                               next(it), next(it))
+    vals_ref, ids_ref = next(it), next(it)
+
+    j = pl.program_id(1)
+
+    def tile_counts():
+        q = q_ref[...]                                    # [bq, W]
+        db = db_ref[...]                                  # [bn, W]
+        xor = jnp.bitwise_xor(q[:, None, :], db[None, :, :])
+        counts = k - jnp.sum(_mismatch_bits(xor, bits), axis=-1)
+        local = jax.lax.broadcasted_iota(jnp.int32,
+                                         (counts.shape[0], block_n), 1)
+        gids = local + jax.lax.rem(j, nt) * block_n
+        counts = jnp.where(gids < n_valid, counts, -1)
+        if has_mask:
+            v = valid_ref[...]                            # [bn/32, 1]
+            bitpos = jax.lax.broadcasted_iota(jnp.uint32,
+                                              (block_n // 32, 32), 1)
+            live = ((v >> bitpos) & jnp.uint32(1)).reshape(1, block_n)
+            counts = jnp.where(live != 0, counts, -1)
+        return counts, gids
+
+    @pl.when(j == 0)
+    def _init_hist():
+        above_ref[...] = jnp.zeros_like(above_ref)
+
+    @pl.when(j < nt)
+    def _sweep_a():
+        counts, _ = tile_counts()
+        cols = [jnp.sum((counts > c).astype(jnp.int32), axis=1,
+                        keepdims=True) for c in range(k + 1)]
+        above_ref[...] += jnp.concatenate(cols, axis=1)
+
+    @pl.when(j == nt)
+    def _invert():
+        a = above_ref[...]                                # [bq, k+1]
+        below = a < rerank_m          # nonempty: A(k) == 0 < rerank_m
+        cidx = jax.lax.broadcasted_iota(jnp.int32, a.shape, 1)
+        thr_ref[...] = jnp.min(jnp.where(below, cidx, k + 1), axis=1,
+                               keepdims=True)
+        # A is non-increasing, so A(t) is the max over satisfied bins
+        a_t = jnp.max(jnp.where(below, a, -1), axis=1, keepdims=True)
+        quota_ref[...] = rerank_m - a_t
+        ties_ref[...] = jnp.zeros_like(ties_ref)
+        _init_running(vals_ref, ids_ref)
+
+    @pl.when(j >= nt)
+    def _sweep_b():
+        counts, gids = tile_counts()
+        t = thr_ref[...]                                  # [bq, 1]
+        is_tie = counts == t
+        tie_rank = ties_ref[...] + _row_cumsum(is_tie.astype(jnp.int32))
+        surv = (counts > t) | (is_tie & (tie_rank <= quota_ref[...]))
+        ties_ref[...] += jnp.sum(is_tie.astype(jnp.int32), axis=1,
+                                 keepdims=True)
+        db = db_ref[...]
+        if has_scales:
+            score = _accum_lut_scores_int8(
+                tab_ref[...].astype(jnp.int32), scales_ref[...], db, bits,
+                counts.shape)
+        else:
+            score = _accum_lut_scores(tab_ref[...].astype(jnp.float32), db,
+                                      bits, counts.shape)
+        score = jnp.where(surv, score, _NEG_INF)
+        _merge_running_topk(vals_ref, ids_ref, score, gids, top_k)
+
+    @pl.when(j == 2 * nt - 1)
+    def _finalize():
+        ov_ref[...] = vals_ref[...]
+        oi_ref[...] = ids_ref[...]
+
+
+def _fused_scored_call(q_words, q_tables, words_db, valid_words, scales,
+                       bits, k, rerank_m, top_k, block_q, block_n,
+                       interpret):
+    qn, w = q_words.shape
+    n = words_db.shape[0]
+    fp = q_tables.shape[1]
+    assert q_tables.shape[0] == qn, (q_words.shape, q_tables.shape)
+    assert w == words_db.shape[1], (q_words.shape, words_db.shape)
+    assert fp == w * (32 // bits) * (1 << bits), (q_tables.shape,
+                                                  words_db.shape, bits)
+    assert rerank_m >= 1 and top_k >= 1, (rerank_m, top_k)
+    assert block_n % 32 == 0, block_n
+    if scales is not None:
+        assert q_tables.dtype == jnp.int8, q_tables.dtype
+        assert scales.shape == (qn, w), (scales.shape, qn, w)
+    if n == 0:
+        return (jnp.full((qn, top_k), _NEG_INF, jnp.float32),
+                jnp.full((qn, top_k), -1, jnp.int32))
+    qp = _pad(q_words, block_q, 0)
+    tp = _pad(q_tables, block_q, 0)
+    dbp = _pad(words_db, block_n, 0)
+    qm, nm = qp.shape[0], dbp.shape[0]
+    nt = nm // block_n
+    inputs = [qp, tp, dbp]
+    in_specs = [
+        pl.BlockSpec((block_q, w), lambda i, j: (i, 0)),
+        pl.BlockSpec((block_q, fp), lambda i, j: (i, 0)),
+        pl.BlockSpec((block_n, w), lambda i, j: (j % nt, 0)),
+    ]
+    if valid_words is not None:
+        nw = bitmask_width(n)
+        assert valid_words.shape == (nw,), (valid_words.shape, nw)
+        vw = valid_words.astype(jnp.uint32)
+        if n % 32:   # zero mask bits past N inside the last partial word
+            vw = vw.at[-1].set(vw[-1] & jnp.uint32((1 << (n % 32)) - 1))
+        vw = jnp.pad(vw, (0, nm // 32 - nw)).reshape(nm // 32, 1)
+        inputs.append(vw)
+        in_specs.append(
+            pl.BlockSpec((block_n // 32, 1), lambda i, j: (j % nt, 0)))
+    if scales is not None:
+        inputs.append(_pad(scales.astype(jnp.float32), block_q, 0))
+        in_specs.append(pl.BlockSpec((block_q, w), lambda i, j: (i, 0)))
+    kernel = functools.partial(
+        _fused_scored_kernel, bits=bits, k=k, rerank_m=rerank_m,
+        top_k=top_k, n_valid=n, block_n=block_n, nt=nt,
+        has_mask=valid_words is not None, has_scales=scales is not None)
+    vals, ids = pl.pallas_call(
+        kernel,
+        grid=(qm // block_q, 2 * nt),
+        in_specs=in_specs,
+        out_specs=[
+            pl.BlockSpec((block_q, top_k), lambda i, j: (i, 0)),
+            pl.BlockSpec((block_q, top_k), lambda i, j: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((qm, top_k), jnp.float32),
+            jax.ShapeDtypeStruct((qm, top_k), jnp.int32),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((block_q, k + 1), jnp.int32),
+            pltpu.VMEM((block_q, 1), jnp.int32),
+            pltpu.VMEM((block_q, 1), jnp.int32),
+            pltpu.VMEM((block_q, 1), jnp.int32),
+            pltpu.VMEM((block_q, top_k), jnp.float32),
+            pltpu.VMEM((block_q, top_k), jnp.int32),
+        ],
+        interpret=interpret,
+    )(*inputs)
+    return vals[:qn], ids[:qn]
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("bits", "k", "rerank_m", "top_k", "block_q",
+                     "block_n", "interpret"))
+def fused_scored_topk_pallas(q_words, q_tables, words_db, bits: int,
+                             k: int, rerank_m: int, top_k: int, *,
+                             scales=None, block_q: int = 128,
+                             block_n: int = 512, interpret: bool = False):
+    """Single-pass scored search: q_words uint32 [Q, W], q_tables float
+    or int8 [Q, F*P], words_db uint32 [N, W] -> (scores f32 [Q, top_k],
+    corpus ids int32 [Q, top_k]).
+
+    Top-``top_k`` by LUT score over the exact stable coarse
+    top-``rerank_m`` by collision count, in one streamed pass — no
+    [Q, N] matrix, no candidate-id round-trip through HBM. ``scales``
+    float32 [Q, W] selects the int8 table path. Bit-exact vs
+    ``ref.fused_scored_topk_ref`` (scores, lowest-id ties, (-inf, -1)
+    sentinel padding when candidates run out).
+    """
+    return _fused_scored_call(q_words, q_tables, words_db, None, scales,
+                              bits, k, rerank_m, top_k, block_q, block_n,
+                              interpret)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("bits", "k", "rerank_m", "top_k", "block_q",
+                     "block_n", "interpret"))
+def fused_scored_topk_masked_pallas(q_words, q_tables, words_db,
+                                    valid_words, bits: int, k: int,
+                                    rerank_m: int, top_k: int, *,
+                                    scales=None, block_q: int = 128,
+                                    block_n: int = 512,
+                                    interpret: bool = False):
+    """``fused_scored_topk_pallas`` over live rows only: ``valid_words``
+    uint32 [ceil(N/32)] packed bitmask (``packing.pack_bitmask``
+    layout). Tombstoned rows take count -1 before the survivor rule, so
+    they can neither survive nor displace a live tie; the mask is data,
+    not shape — deletes never recompile. Bit-exact vs
+    ``ref.fused_scored_topk_masked_ref``.
+    """
+    return _fused_scored_call(q_words, q_tables, words_db, valid_words,
+                              scales, bits, k, rerank_m, top_k, block_q,
+                              block_n, interpret)

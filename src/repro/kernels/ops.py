@@ -20,6 +20,7 @@ import jax
 
 from repro.core.packing import packed_width as _packed_width
 from repro.core.schemes import CodeSpec
+from repro.kernels import autotune as _autotune
 from repro.kernels import ref as _ref
 from repro.obs import kernelstats as _kstats
 from repro.kernels.collision import collision_counts_pallas
@@ -34,12 +35,15 @@ from repro.kernels.packed_lut import (
     packed_lut_rerank_pallas, packed_lut_topk_masked_pallas,
     packed_lut_topk_pallas)
 from repro.kernels.encode_fused import code_pack_pallas, encode_fused_pallas
+from repro.kernels.fused_scored import (fused_scored_topk_masked_pallas,
+                                        fused_scored_topk_pallas)
 from repro.kernels.proj_code import coded_project_pallas
 
 __all__ = ["coded_project", "encode_fused", "code_pack", "pack_codes",
            "collision_counts",
            "packed_collision_counts", "packed_topk", "packed_topk_masked",
            "packed_lut_topk", "packed_lut_topk_masked", "packed_lut_rerank",
+           "fused_scored_topk", "fused_scored_topk_masked",
            "packed_linear_fwd", "packed_linear_fwd_masked",
            "packed_linear_bwd", "packed_linear_bwd_masked"]
 
@@ -61,14 +65,26 @@ def _rec(family: str, *arrays, **dims):
                               for a in arrays), **dims)
 
 
+def _tuned(op: str, dtype, block_kwargs: dict, **dims) -> dict:
+    """Block kwargs for a pallas dispatch: explicit caller kwargs win;
+    otherwise consult the autotune cache (``kernels.autotune.lookup``,
+    a pure host-dict read) — cold caches return {} and the kernel
+    defaults apply. Tuned knobs are numerics-safe by construction, so
+    this indirection can only change timing."""
+    if block_kwargs:
+        return block_kwargs
+    return _autotune.lookup(op, dtype, **dims)
+
+
 def coded_project(x, r, spec: CodeSpec, q: Optional[jax.Array] = None,
                   impl: str = "auto", **block_kwargs):
     """Fused encode(x @ r): [M, D] x [D, K] -> int32 codes [M, K]."""
     _rec("coded_project", x, r, m=x.shape[0], d=x.shape[1], k=r.shape[1])
     if _resolve(impl) == "ref":
         return _ref.coded_project_ref(x, r, spec, q)
-    return coded_project_pallas(x, r, spec, q, interpret=_interpret(),
-                                **block_kwargs)
+    kw = _tuned("coded_project", x.dtype, block_kwargs,
+                m=x.shape[0], d=x.shape[1], k=r.shape[1])
+    return coded_project_pallas(x, r, spec, q, interpret=_interpret(), **kw)
 
 
 def encode_fused(x, r, spec: CodeSpec, q: Optional[jax.Array] = None,
@@ -80,8 +96,9 @@ def encode_fused(x, r, spec: CodeSpec, q: Optional[jax.Array] = None,
          w=_packed_width(r.shape[1], spec.bits))
     if _resolve(impl) == "ref":
         return _ref.encode_fused_ref(x, r, spec, q)
-    return encode_fused_pallas(x, r, spec, q, interpret=_interpret(),
-                               **block_kwargs)
+    kw = _tuned("encode_fused", x.dtype, block_kwargs,
+                m=x.shape[0], d=x.shape[1], k=r.shape[1])
+    return encode_fused_pallas(x, r, spec, q, interpret=_interpret(), **kw)
 
 
 def code_pack(z, spec: CodeSpec, q: Optional[jax.Array] = None,
@@ -92,8 +109,9 @@ def code_pack(z, spec: CodeSpec, q: Optional[jax.Array] = None,
          w=_packed_width(z.shape[1], spec.bits))
     if _resolve(impl) == "ref":
         return _ref.code_pack_ref(z, spec, q)
-    return code_pack_pallas(z, spec, q, interpret=_interpret(),
-                            **block_kwargs)
+    kw = _tuned("code_pack", z.dtype, block_kwargs,
+                m=z.shape[0], k=z.shape[1])
+    return code_pack_pallas(z, spec, q, interpret=_interpret(), **kw)
 
 
 def pack_codes(codes, bits: int, impl: str = "auto", **block_kwargs):
@@ -102,8 +120,9 @@ def pack_codes(codes, bits: int, impl: str = "auto", **block_kwargs):
          w=_packed_width(codes.shape[1], bits))
     if _resolve(impl) == "ref":
         return _ref.pack_codes_ref(codes, bits)
-    return pack_codes_pallas(codes, bits, interpret=_interpret(),
-                             **block_kwargs)
+    kw = _tuned("pack_codes", codes.dtype, block_kwargs,
+                m=codes.shape[0], k=codes.shape[1])
+    return pack_codes_pallas(codes, bits, interpret=_interpret(), **kw)
 
 
 def collision_counts(codes_q, codes_db, impl: str = "auto", **block_kwargs):
@@ -112,8 +131,10 @@ def collision_counts(codes_q, codes_db, impl: str = "auto", **block_kwargs):
          n=codes_db.shape[0], k=codes_q.shape[1])
     if _resolve(impl) == "ref":
         return _ref.collision_counts_ref(codes_q, codes_db)
+    kw = _tuned("collision_counts", codes_q.dtype, block_kwargs,
+                q=codes_q.shape[0], n=codes_db.shape[0])
     return collision_counts_pallas(codes_q, codes_db, interpret=_interpret(),
-                                   **block_kwargs)
+                                   **kw)
 
 
 def packed_collision_counts(words_q, words_db, bits: int, k: int,
@@ -123,9 +144,10 @@ def packed_collision_counts(words_q, words_db, bits: int, k: int,
          q=words_q.shape[0], n=words_db.shape[0], w=words_q.shape[1])
     if _resolve(impl) == "ref":
         return _ref.packed_collision_ref(words_q, words_db, bits, k)
+    kw = _tuned("packed_collision_counts", words_q.dtype, block_kwargs,
+                q=words_q.shape[0], n=words_db.shape[0], w=words_q.shape[1])
     return packed_collision_counts_pallas(words_q, words_db, bits, k,
-                                          interpret=_interpret(),
-                                          **block_kwargs)
+                                          interpret=_interpret(), **kw)
 
 
 def packed_topk(words_q, words_db, bits: int, k: int, top_k: int,
@@ -135,8 +157,11 @@ def packed_topk(words_q, words_db, bits: int, k: int, top_k: int,
          n=words_db.shape[0], w=words_q.shape[1], top_k=top_k)
     if _resolve(impl) == "ref":
         return _ref.packed_topk_ref(words_q, words_db, bits, k, top_k)
+    kw = _tuned("packed_topk", words_q.dtype, block_kwargs,
+                q=words_q.shape[0], n=words_db.shape[0],
+                w=words_q.shape[1], top_k=top_k)
     return packed_topk_pallas(words_q, words_db, bits, k, top_k,
-                              interpret=_interpret(), **block_kwargs)
+                              interpret=_interpret(), **kw)
 
 
 def packed_topk_masked(words_q, words_db, valid_words, bits: int, k: int,
@@ -147,9 +172,11 @@ def packed_topk_masked(words_q, words_db, valid_words, bits: int, k: int,
     if _resolve(impl) == "ref":
         return _ref.packed_topk_masked_ref(words_q, words_db, valid_words,
                                            bits, k, top_k)
+    kw = _tuned("packed_topk_masked", words_q.dtype, block_kwargs,
+                q=words_q.shape[0], n=words_db.shape[0],
+                w=words_q.shape[1], top_k=top_k)
     return packed_topk_masked_pallas(words_q, words_db, valid_words, bits, k,
-                                     top_k, interpret=_interpret(),
-                                     **block_kwargs)
+                                     top_k, interpret=_interpret(), **kw)
 
 
 def packed_lut_topk(q_tables, words_db, bits: int, top_k: int,
@@ -161,8 +188,11 @@ def packed_lut_topk(q_tables, words_db, bits: int, top_k: int,
          k=q_tables.shape[1] >> bits, top_k=top_k)
     if _resolve(impl) == "ref":
         return _ref.packed_lut_topk_ref(q_tables, words_db, bits, top_k)
+    kw = _tuned("packed_lut_topk", q_tables.dtype, block_kwargs,
+                q=q_tables.shape[0], n=words_db.shape[0],
+                w=words_db.shape[1], t=q_tables.shape[1], top_k=top_k)
     return packed_lut_topk_pallas(q_tables, words_db, bits, top_k,
-                                  interpret=_interpret(), **block_kwargs)
+                                  interpret=_interpret(), **kw)
 
 
 def packed_lut_topk_masked(q_tables, words_db, valid_words, bits: int,
@@ -174,10 +204,12 @@ def packed_lut_topk_masked(q_tables, words_db, valid_words, bits: int,
     if _resolve(impl) == "ref":
         return _ref.packed_lut_topk_masked_ref(q_tables, words_db,
                                                valid_words, bits, top_k)
+    kw = _tuned("packed_lut_topk_masked", q_tables.dtype, block_kwargs,
+                q=q_tables.shape[0], n=words_db.shape[0],
+                w=words_db.shape[1], t=q_tables.shape[1], top_k=top_k)
     return packed_lut_topk_masked_pallas(q_tables, words_db, valid_words,
                                          bits, top_k,
-                                         interpret=_interpret(),
-                                         **block_kwargs)
+                                         interpret=_interpret(), **kw)
 
 
 def packed_linear_fwd(tables, words, bits: int, impl: str = "auto",
@@ -189,8 +221,10 @@ def packed_linear_fwd(tables, words, bits: int, impl: str = "auto",
          k=tables.shape[1] >> bits)
     if _resolve(impl) == "ref":
         return _ref.packed_linear_fwd_ref(tables, words, bits)
+    kw = _tuned("packed_linear_fwd", tables.dtype, block_kwargs,
+                c=tables.shape[0], n=words.shape[0], t=tables.shape[1])
     return packed_linear_fwd_pallas(tables, words, bits,
-                                    interpret=_interpret(), **block_kwargs)
+                                    interpret=_interpret(), **kw)
 
 
 def packed_linear_fwd_masked(tables, words, valid_words, bits: int,
@@ -203,9 +237,10 @@ def packed_linear_fwd_masked(tables, words, valid_words, bits: int,
     if _resolve(impl) == "ref":
         return _ref.packed_linear_fwd_masked_ref(tables, words, valid_words,
                                                  bits)
+    kw = _tuned("packed_linear_fwd_masked", tables.dtype, block_kwargs,
+                c=tables.shape[0], n=words.shape[0], t=tables.shape[1])
     return packed_linear_fwd_masked_pallas(tables, words, valid_words, bits,
-                                           interpret=_interpret(),
-                                           **block_kwargs)
+                                           interpret=_interpret(), **kw)
 
 
 def packed_linear_bwd(g, words, bits: int, impl: str = "auto",
@@ -217,8 +252,10 @@ def packed_linear_bwd(g, words, bits: int, impl: str = "auto",
          k=words.shape[1] * (32 // bits))
     if _resolve(impl) == "ref":
         return _ref.packed_linear_bwd_ref(g, words, bits, **block_kwargs)
+    kw = _tuned("packed_linear_bwd", g.dtype, block_kwargs,
+                c=g.shape[0], n=words.shape[0], w=words.shape[1])
     return packed_linear_bwd_pallas(g, words, bits, interpret=_interpret(),
-                                    **block_kwargs)
+                                    **kw)
 
 
 def packed_linear_bwd_masked(g, words, valid_words, bits: int,
@@ -232,9 +269,10 @@ def packed_linear_bwd_masked(g, words, valid_words, bits: int,
     if _resolve(impl) == "ref":
         return _ref.packed_linear_bwd_masked_ref(g, words, valid_words,
                                                  bits, **block_kwargs)
+    kw = _tuned("packed_linear_bwd_masked", g.dtype, block_kwargs,
+                c=g.shape[0], n=words.shape[0], w=words.shape[1])
     return packed_linear_bwd_masked_pallas(g, words, valid_words, bits,
-                                           interpret=_interpret(),
-                                           **block_kwargs)
+                                           interpret=_interpret(), **kw)
 
 
 def packed_lut_rerank(q_tables, cand_words, cand_valid, bits: int,
@@ -248,6 +286,53 @@ def packed_lut_rerank(q_tables, cand_words, cand_valid, bits: int,
     if _resolve(impl) == "ref":
         return _ref.packed_lut_rerank_ref(q_tables, cand_words, cand_valid,
                                           bits, top_k)
+    kw = _tuned("packed_lut_rerank", q_tables.dtype, block_kwargs,
+                q=q_tables.shape[0], m=cand_words.shape[1],
+                t=q_tables.shape[1], top_k=top_k)
     return packed_lut_rerank_pallas(q_tables, cand_words, cand_valid, bits,
-                                    top_k, interpret=_interpret(),
-                                    **block_kwargs)
+                                    top_k, interpret=_interpret(), **kw)
+
+
+def fused_scored_topk(q_words, q_tables, words_db, bits: int, k: int,
+                      rerank_m: int, top_k: int, scales=None,
+                      impl: str = "auto", **block_kwargs):
+    """Single-pass scored search: exact stable coarse top-``rerank_m``
+    by collision count, re-ranked by per-query LUT score, in one
+    streamed kernel -> (scores f32, corpus ids int32) [Q, top_k].
+    ``scales`` float32 [Q, W] (powers of two) selects the int8-table
+    path."""
+    _rec("fused_scored_topk", q_words, q_tables, words_db,
+         q=q_words.shape[0], n=words_db.shape[0], w=q_words.shape[1],
+         t=q_tables.shape[1], k=q_tables.shape[1] >> bits, top_k=top_k)
+    if _resolve(impl) == "ref":
+        return _ref.fused_scored_topk_ref(q_words, q_tables, words_db,
+                                          bits, k, rerank_m, top_k,
+                                          scales=scales)
+    kw = _tuned("fused_scored_topk", q_tables.dtype, block_kwargs,
+                q=q_words.shape[0], n=words_db.shape[0],
+                w=q_words.shape[1], t=q_tables.shape[1], top_k=top_k)
+    return fused_scored_topk_pallas(q_words, q_tables, words_db, bits, k,
+                                    rerank_m, top_k, scales=scales,
+                                    interpret=_interpret(), **kw)
+
+
+def fused_scored_topk_masked(q_words, q_tables, words_db, valid_words,
+                             bits: int, k: int, rerank_m: int, top_k: int,
+                             scales=None, impl: str = "auto",
+                             **block_kwargs):
+    """``fused_scored_topk`` over live rows only (packed row-validity
+    bitmask) — the mutable-index segment path; all-dead segments return
+    pure (-inf, -1) sentinels."""
+    _rec("fused_scored_topk_masked", q_words, q_tables, words_db,
+         q=q_words.shape[0], n=words_db.shape[0], w=q_words.shape[1],
+         t=q_tables.shape[1], k=q_tables.shape[1] >> bits, top_k=top_k)
+    if _resolve(impl) == "ref":
+        return _ref.fused_scored_topk_masked_ref(
+            q_words, q_tables, words_db, valid_words, bits, k, rerank_m,
+            top_k, scales=scales)
+    kw = _tuned("fused_scored_topk_masked", q_tables.dtype, block_kwargs,
+                q=q_words.shape[0], n=words_db.shape[0],
+                w=q_words.shape[1], t=q_tables.shape[1], top_k=top_k)
+    return fused_scored_topk_masked_pallas(
+        q_words, q_tables, words_db, valid_words, bits, k, rerank_m,
+        top_k, scales=scales, interpret=_interpret(), **kw)

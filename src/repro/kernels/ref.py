@@ -1,7 +1,8 @@
 """Pure-jnp oracles for every Pallas kernel in this package.
 
 These define the semantics; kernels must match them bit-for-bit (integer
-outputs) across the shape/dtype sweeps in tests/test_kernels.py.
+outputs) across the shared scheme x shape x dtype x mask grid in
+tests/test_kernel_conformance.py.
 """
 from __future__ import annotations
 
@@ -16,11 +17,14 @@ __all__ = ["coded_project_ref", "pack_codes_ref", "code_pack_ref",
            "encode_fused_ref", "collision_counts_ref",
            "packed_collision_ref", "packed_topk_ref",
            "packed_topk_masked_ref", "topk_blocked_ref", "topk_stable_ref",
-           "lut_scores_ref", "lut_scores_rowwise_ref", "topk_scored_ref",
+           "lut_scores_ref", "lut_scores_rowwise_ref",
+           "lut_scores_rowwise_int8_ref", "topk_scored_ref",
            "packed_lut_topk_ref", "packed_lut_topk_masked_ref",
            "packed_lut_rerank_ref", "packed_linear_fwd_ref",
            "packed_linear_fwd_masked_ref", "packed_linear_bwd_ref",
-           "packed_linear_bwd_masked_ref"]
+           "packed_linear_bwd_masked_ref", "coarse_survivor_mask_ref",
+           "fused_scored_topk_ref", "fused_scored_topk_masked_ref",
+           "two_stage_scored_ref", "two_stage_scored_masked_ref"]
 
 
 def coded_project_ref(x, r, spec: CodeSpec, q=None):
@@ -337,3 +341,195 @@ def packed_topk_masked_ref(words_q, words_db, valid_words, bits: int, k: int,
     counts = packed_collision_ref(words_q, words_db, bits, k)
     live = _packing.unpack_bitmask(valid_words, words_db.shape[0])
     return topk_stable_ref(jnp.where(live[None, :], counts, -1), top_k)
+
+
+# -- single-pass fused scored search ------------------------------------------
+
+def lut_scores_rowwise_int8_ref(q_tables, scales, cand_words, bits: int):
+    """Row-wise LUT scores from int8 tables with per-(query, word)
+    scales: q_tables int8 [Q, F*P], scales float32 [Q, W], cand_words
+    [Q, M, W] -> float32 [Q, M].
+
+    The int8 accumulation contract (shared with the fused kernel): the
+    32/b selected entries of one packed word sum exactly in int32, then
+    each word's integer sum joins the float32 total as
+    ``score += scale[q, w] * float(isum)`` in word order. Scales must be
+    powers of two (``rank.RankTables.query_tables_int8`` produces them
+    that way): the multiply is then exact, so whether a compiler
+    contracts it into an FMA or not cannot change a single bit — kernel
+    and oracle agree bit-for-bit.
+    """
+    p = 1 << bits
+    cpw = 32 // bits
+    n_words = cand_words.shape[-1]
+    assert q_tables.shape[-1] == n_words * cpw * p, (
+        q_tables.shape, cand_words.shape, bits)
+    assert scales.shape == (q_tables.shape[0], n_words), (
+        scales.shape, q_tables.shape, cand_words.shape)
+    tab = q_tables.astype(jnp.int32)
+    score = jnp.zeros(cand_words.shape[:-1], jnp.float32)
+    for w in range(n_words):
+        word = cand_words[..., w]
+        isum = jnp.zeros(cand_words.shape[:-1], jnp.int32)
+        for f in range(cpw):
+            c = (word >> jnp.uint32(f * bits)) & jnp.uint32(p - 1)
+            col = (w * cpw + f) * p
+            isum = isum + jnp.take_along_axis(
+                tab[:, col:col + p], c.astype(jnp.int32), axis=1)
+        score = score + scales[:, w][:, None] * isum.astype(jnp.float32)
+    return score
+
+
+def coarse_survivor_mask_ref(counts, k: int, rerank_m: int):
+    """Membership mask [Q, N] bool of the stable coarse top-``rerank_m``
+    by collision count (ties -> lowest corpus id), without sorting.
+
+    This is the survivor rule the fused kernel evaluates in-VMEM: with
+    t(q) the smallest threshold in [0, k] such that fewer than rerank_m
+    rows satisfy count > t (found by binary search — counts live in
+    [-1, k]), row n survives iff count > t, or count == t and its
+    id-ascending rank among the count == t ties fits the remaining
+    quota. Rows with count < 0 (tombstoned / padded) never survive.
+    The surviving id set equals ``topk_stable_ref(counts, rerank_m)``'s
+    non-sentinel ids exactly.
+    """
+    q, n = counts.shape
+    m = jnp.int32(rerank_m)
+    lo = jnp.zeros((q, 1), jnp.int32)
+    hi = jnp.full((q, 1), k, jnp.int32)
+    for _ in range(max(1, (k + 1).bit_length())):
+        mid = (lo + hi) >> 1
+        above = jnp.sum((counts > mid).astype(jnp.int32), axis=1,
+                        keepdims=True)
+        done = above < m
+        lo = jnp.where(done, lo, mid + 1)
+        hi = jnp.where(done, mid, hi)
+    t = lo                                                     # [Q, 1]
+    above_t = jnp.sum((counts > t).astype(jnp.int32), axis=1,
+                      keepdims=True)
+    quota = m - above_t
+    is_tie = counts == t
+    tie_rank = jnp.cumsum(is_tie.astype(jnp.int32), axis=1)
+    return (counts > t) | (is_tie & (tie_rank <= quota))
+
+
+def _compact_survivors(sm, rerank_m: int):
+    """Survivor mask [Q, N] -> id-ascending candidate ids [Q, rerank_m]
+    (-1 padded) — no per-row sort. The j-th survivor of a row is the
+    first index where the mask's running cumsum reaches j+1, i.e. a
+    per-row ``searchsorted`` into the (non-decreasing) cumsum: O(m log
+    n) gathers instead of the O(n) scatter this used to be (XLA lowers
+    row scatters catastrophically on CPU — ~60x slower than the binary
+    searches at the bench shape)."""
+    q, n = sm.shape
+    csum = jnp.cumsum(sm.astype(jnp.int32), axis=1)            # [Q, N]
+    targets = jnp.arange(1, rerank_m + 1, dtype=jnp.int32)     # [m]
+    pos = jax.vmap(
+        lambda c: jnp.searchsorted(c, targets, side="left"))(csum)
+    found = targets[None, :] <= csum[:, -1:]                   # [Q, m]
+    return jnp.where(found, pos.astype(jnp.int32), -1)
+
+
+def _score_candidates(q_tables, words_db, cand, bits: int, top_k: int,
+                      scales):
+    """Gather candidate rows, LUT-score them (f32 or int8 path), top-k by
+    score; -1 candidate slots score -inf. Returns (scores, corpus ids)."""
+    n = words_db.shape[0]
+    m = cand.shape[1]
+    cand_words = jnp.take(words_db, jnp.clip(cand, 0, n - 1), axis=0)
+    if scales is None:
+        s = lut_scores_rowwise_ref(q_tables, cand_words, bits)
+    else:
+        s = lut_scores_rowwise_int8_ref(q_tables, scales, cand_words, bits)
+    s = jnp.where(cand >= 0, s, -jnp.inf)
+    vals, pos = topk_scored_ref(s, top_k)
+    ids = jnp.take_along_axis(cand, jnp.clip(pos, 0, m - 1), axis=1)
+    return vals, jnp.where(pos < 0, -1, ids)
+
+
+def _empty_scored(q: int, top_k: int):
+    return (jnp.full((q, top_k), -jnp.inf, jnp.float32),
+            jnp.full((q, top_k), -1, jnp.int32))
+
+
+def fused_scored_topk_ref(q_words, q_tables, words_db, bits: int, k: int,
+                          rerank_m: int, top_k: int, scales=None):
+    """Single-pass scored search oracle: q_words uint32 [Q, W], q_tables
+    float/int8 [Q, F*P], words_db uint32 [N, W] -> (scores f32
+    [Q, top_k], corpus ids int32 [Q, top_k]).
+
+    Semantics (the contract with ``fused_scored.fused_scored_topk_
+    pallas``): survivors are the exact stable coarse top-``rerank_m`` by
+    collision count; the result is the top-``top_k`` of the survivors'
+    LUT scores, ties -> lowest corpus id. ``scales`` float32 [Q, W]
+    selects the int8 path (``lut_scores_rowwise_int8_ref``); otherwise
+    tables upcast to float32. Sentinel padding: slots beyond the
+    survivor count are (-inf, -1), so rerank_m or top_k larger than the
+    corpus degrade exactly like the two-stage path.
+
+    Unlike the two-stage composition this never sorts the [Q, N] count
+    matrix — the threshold binary search plus a cumsum compaction is
+    O(N log k) per query, which is where the CPU-path speedup over the
+    old O(N·rerank_m) coarse ``lax.top_k`` comes from.
+    """
+    if words_db.shape[0] == 0:
+        return _empty_scored(q_words.shape[0], top_k)
+    counts = packed_collision_ref(q_words, words_db, bits, k)
+    sm = coarse_survivor_mask_ref(counts, k, rerank_m)
+    cand = _compact_survivors(sm, rerank_m)
+    return _score_candidates(q_tables, words_db, cand, bits, top_k, scales)
+
+
+def fused_scored_topk_masked_ref(q_words, q_tables, words_db, valid_words,
+                                 bits: int, k: int, rerank_m: int,
+                                 top_k: int, scales=None):
+    """``fused_scored_topk_ref`` over live rows only (``valid_words``:
+    packed bitmask, ``packing.pack_bitmask`` layout). Tombstoned rows
+    take count -1 before the coarse threshold, so they can neither
+    survive nor displace a live tie — all-dead segments return pure
+    sentinels."""
+    if words_db.shape[0] == 0:
+        return _empty_scored(q_words.shape[0], top_k)
+    counts = packed_collision_ref(q_words, words_db, bits, k)
+    live = _packing.unpack_bitmask(valid_words, words_db.shape[0])
+    counts = jnp.where(live[None, :], counts, -1)
+    sm = coarse_survivor_mask_ref(counts, k, rerank_m)
+    cand = _compact_survivors(sm, rerank_m)
+    return _score_candidates(q_tables, words_db, cand, bits, top_k, scales)
+
+
+def two_stage_scored_ref(q_words, q_tables, words_db, bits: int, k: int,
+                         rerank_m: int, top_k: int):
+    """The literal two-stage composition (coarse ``packed_topk_ref`` ->
+    gather -> ``packed_lut_rerank_ref``), as the engines ran it before
+    fusion. The differential oracle for the fused path: identical
+    results whenever LUT scores don't tie across different collision
+    counts (always true for monotone sign-scheme tables; a measure-zero
+    event for generic float tables)."""
+    n = words_db.shape[0]
+    if n == 0:
+        return _empty_scored(q_words.shape[0], top_k)
+    cv, ci = packed_topk_ref(q_words, words_db, bits, k, rerank_m)
+    vals, pos = packed_lut_rerank_ref(
+        q_tables, jnp.take(words_db, jnp.clip(ci, 0, n - 1), axis=0),
+        ci >= 0, bits, top_k)
+    ids = jnp.take_along_axis(ci, jnp.clip(pos, 0, rerank_m - 1), axis=1)
+    return vals, jnp.where(pos < 0, -1, ids)
+
+
+def two_stage_scored_masked_ref(q_words, q_tables, words_db, valid_words,
+                                bits: int, k: int, rerank_m: int,
+                                top_k: int):
+    """Masked two-stage composition (coarse ``packed_topk_masked_ref``
+    -> gather -> re-rank) — the differential oracle for
+    ``fused_scored_topk_masked_ref`` under random tombstone masks."""
+    n = words_db.shape[0]
+    if n == 0:
+        return _empty_scored(q_words.shape[0], top_k)
+    cv, ci = packed_topk_masked_ref(q_words, words_db, valid_words, bits,
+                                    k, rerank_m)
+    vals, pos = packed_lut_rerank_ref(
+        q_tables, jnp.take(words_db, jnp.clip(ci, 0, n - 1), axis=0),
+        ci >= 0, bits, top_k)
+    ids = jnp.take_along_axis(ci, jnp.clip(pos, 0, rerank_m - 1), axis=1)
+    return vals, jnp.where(pos < 0, -1, ids)

@@ -78,6 +78,18 @@ def _m_packed_lut_rerank(q, c, w, t, k, top_k, **_):
             4 * (q * t + q * c * w + 2 * q * top_k) + q * c)
 
 
+def _m_fused_scored_topk(q, n, w, t, k, top_k, **_):
+    # two corpus sweeps: counts twice (~3 word ops each), the k+1-bin
+    # exceedance histogram in sweep A, LUT select+add per field in B
+    return (q * top_k, q * n * (6 * w + 3 * k + 1),
+            4 * (q * w + q * t + 2 * n * w + 2 * q * top_k))
+
+
+def _m_fused_scored_topk_masked(q, n, w, t, k, top_k, **_):
+    e, f, b = _m_fused_scored_topk(q, n, w, t, k, top_k)
+    return e, f, b + 2 * _mask_bytes(n)
+
+
 def _m_packed_linear_fwd(c, n, w, t, k, **_):
     return c * n, 2 * c * n * k, 4 * (c * t + n * w + c * n)
 
@@ -110,6 +122,8 @@ MODELS = {
     "packed_lut_topk": _m_packed_lut_topk,
     "packed_lut_topk_masked": _m_packed_lut_topk_masked,
     "packed_lut_rerank": _m_packed_lut_rerank,
+    "fused_scored_topk": _m_fused_scored_topk,
+    "fused_scored_topk_masked": _m_fused_scored_topk_masked,
     "packed_linear_fwd": _m_packed_linear_fwd,
     "packed_linear_fwd_masked": _m_packed_linear_fwd_masked,
     "packed_linear_bwd": _m_packed_linear_bwd,

@@ -79,20 +79,49 @@ class RankTables:
         return (_packing.packed_width(self.k, self.bits)
                 * _packing.codes_per_word(self.bits))
 
-    def query_tables(self, q_codes):
+    def query_tables(self, q_codes, dtype=None):
         """Specialize the pair table to queries.
 
         q_codes: int32 [Q, k] -> ``self.dtype`` [Q, F*P] with
         F = ``n_fields``, P = ``n_entries``: entry [i, (w*cpw + f)*P + c]
         scores corpus code value c at code position w*cpw + f of query
         i. Padded positions (>= k) are zero. Jittable (pure gather).
+        ``dtype`` overrides the bundle's storage dtype for this call.
         """
         p = self.n_entries
         t = jnp.take(self.pair, q_codes, axis=0)        # [Q, k, P]
         pad = self.n_fields - self.k
         if pad:
             t = jnp.pad(t, ((0, 0), (0, pad), (0, 0)))
-        return t.reshape(t.shape[0], self.n_fields * p).astype(self.dtype)
+        return t.reshape(t.shape[0], self.n_fields * p).astype(
+            dtype if dtype is not None else self.dtype)
+
+    def query_tables_int8(self, q_codes):
+        """int8 query tables with per-(query, word) scales for the fused
+        scored kernel: -> (tables int8 [Q, F*P], scales f32 [Q, W]).
+
+        Each packed word's cpw*P table entries share one scale —
+        2**ceil(log2(max_abs / 127)), i.e. the smallest *power of two*
+        that fits the word's largest entry into int8. Power-of-two
+        scales keep ``score += scale * int_sum`` exact in float32 (no
+        rounding in the multiply), which is what makes the int8 kernel
+        path bit-reproducible against ``ref.lut_scores_rowwise_int8_
+        ref`` regardless of FMA contraction; all-zero words get scale
+        1.0. Quantization error is at most 2x the optimal int8 step —
+        the recall cost is measured in ``benchmarks/rank_bench.py``.
+        """
+        t32 = self.query_tables(q_codes, dtype=jnp.float32)  # [Q, F*P]
+        q = t32.shape[0]
+        cpw = _packing.codes_per_word(self.bits)
+        n_words = self.n_fields // cpw
+        per_word = t32.reshape(q, n_words, cpw * self.n_entries)
+        max_abs = jnp.max(jnp.abs(per_word), axis=-1)        # [Q, W]
+        scale = jnp.exp2(jnp.ceil(jnp.log2(
+            jnp.maximum(max_abs, 1e-30) / 127.0)))
+        scale = jnp.where(max_abs > 0, scale, 1.0).astype(jnp.float32)
+        qt = per_word / scale[:, :, None]
+        qt = jnp.clip(jnp.round(qt), -127, 127).astype(jnp.int8)
+        return qt.reshape(q, self.n_fields * self.n_entries), scale
 
     def rho_from_scores(self, scores):
         """Calibrate raw LUT scores [...] (float) to rho_hat [...] by

@@ -64,8 +64,11 @@ class AnnServiceConfig:
     buckets: tuple = (1, 8, 64, 256)   # padded batch shapes (ascending)
     cache_size: int = 256          # LRU result entries (0 disables)
     impl: str = "auto"
-    scored: bool = False           # two-stage LUT re-rank (repro.rank)
+    scored: bool = False           # LUT-scored ranking (repro.rank)
     rerank_m: int = 0              # scored: coarse candidates (0 = auto)
+    fused: bool = True             # single-pass fused scored kernel
+    table_dtype: str = "auto"      # auto | f32 | bf16 | int8 (fused only)
+    autotune_warmup: bool = False  # warmup also tunes kernel block sizes
 
 
 @dataclass
@@ -259,7 +262,8 @@ class AnnService:
         and score-ranked results never alias)."""
         cfg = self.cfg
         return (word_row.tobytes(), cfg.top_k, cfg.mode, cfg.min_bands,
-                cfg.n_probes, cfg.scored, cfg.rerank_m)
+                cfg.n_probes, cfg.scored, cfg.rerank_m, cfg.fused,
+                cfg.table_dtype)
 
     def _sync_cache_generation(self):
         gen = getattr(self.engine, "generation", 0)
@@ -338,7 +342,9 @@ class AnnService:
                                       min_bands=cfg.min_bands,
                                       n_probes=cfg.n_probes, chunk_q=b2,
                                       impl=cfg.impl, scored=cfg.scored,
-                                      rerank_m=cfg.rerank_m))
+                                      rerank_m=cfg.rerank_m,
+                                      fused=cfg.fused,
+                                      table_dtype=cfg.table_dtype))
                 # host transfer is the device sync for this batch's
                 # timing (np.asarray blocks on the result buffers)
                 ids, rho = np.asarray(sp.sync(ids)), np.asarray(rho)
@@ -366,14 +372,39 @@ class AnnService:
         return out
 
     def warmup(self, d: int):
-        """Pre-compile every bucket shape (cold-start insurance)."""
-        with span("serve.warmup", buckets=len(self.cfg.buckets)) as sp:
-            for b in self.cfg.buckets:
+        """Pre-compile every bucket shape (cold-start insurance).
+
+        With ``autotune_warmup=True`` this first runs the block-size
+        sweep for the search kernel families at the engine's corpus
+        shape (``kernels.autotune.tune_search_ops``) so the bucket
+        compiles below already pick up tuned configs; on CPU backends
+        the sweep is a safe no-op (autotune refuses to measure there).
+        """
+        cfg = self.cfg
+        if cfg.autotune_warmup:
+            from repro.kernels import autotune as _autotune
+            store = self.engine.store
+            dtype = {"auto": "float32", "f32": "float32",
+                     "bf16": "bfloat16", "int8": "int8"}.get(
+                         cfg.table_dtype, "float32")
+            # CodeStore carries a words array; SegmentLogStore carries
+            # the packed width directly
+            n_rows = int(getattr(store, "n", 0)
+                         or getattr(store, "n_rows", 0) or 0)
+            w = (store.words.shape[-1] if hasattr(store, "words")
+                 else store.n_words)
+            _autotune.tune_search_ops(
+                n=max(n_rows, 1), w=w, bits=store.bits,
+                k=self.engine.sketcher.cfg.k, q=cfg.buckets[-1],
+                top_k=cfg.top_k, table_dtype=dtype)
+        with span("serve.warmup", buckets=len(cfg.buckets)) as sp:
+            for b in cfg.buckets:
                 sp.sync(self.engine.search(
-                    jnp.zeros((b, d)), self.cfg.top_k, mode=self.cfg.mode,
-                    min_bands=self.cfg.min_bands,
-                    n_probes=self.cfg.n_probes, chunk_q=b,
-                    impl=self.cfg.impl, scored=self.cfg.scored,
-                    rerank_m=self.cfg.rerank_m))
+                    jnp.zeros((b, d)), cfg.top_k, mode=cfg.mode,
+                    min_bands=cfg.min_bands,
+                    n_probes=cfg.n_probes, chunk_q=b,
+                    impl=cfg.impl, scored=cfg.scored,
+                    rerank_m=cfg.rerank_m, fused=cfg.fused,
+                    table_dtype=cfg.table_dtype))
                 self._c_warm.inc()
         return self

@@ -1,6 +1,7 @@
-"""repro.ann subsystem: packed-collision kernels vs the core/packing
-oracle, CodeStore ingestion, batched search (exact vs LSH recall),
-multi-probe monotonicity, the serving front-end, and the compat wrapper."""
+"""repro.ann subsystem: CodeStore ingestion, batched search (exact vs
+LSH recall), multi-probe monotonicity, the serving front-end, and the
+compat wrapper. Kernel-vs-oracle bit-exactness lives in
+test_kernel_conformance.py."""
 import numpy as np
 import pytest
 import jax
@@ -10,33 +11,11 @@ from repro.ann import AnnEngine, BandSpec, CodeStore
 from repro.core import packing as PK
 from repro.core.sketch import CodedRandomProjection, SketchConfig
 from repro.kernels import ref
-from repro.kernels.packed_collision import (
-    packed_collision_counts_pallas, packed_topk_pallas)
 from repro.serve.ann_service import AnnService, AnnServiceConfig
 
 
 def _codes(key, shape, bits):
     return jax.random.randint(key, shape, 0, 1 << bits)
-
-
-# -- packed-collision kernel vs core/packing oracle ---------------------------
-
-@pytest.mark.parametrize("bits", [1, 2, 4, 8])
-@pytest.mark.parametrize("q,n,k", [(8, 16, 32), (5, 33, 17), (33, 70, 77)])
-def test_packed_collision_matches_oracle(bits, q, n, k):
-    """Bit-exact vs unpacked collision counts, incl. K-padding (k chosen
-    to not divide 32/bits) and word/row block padding."""
-    key = jax.random.PRNGKey(bits * 100 + q)
-    cq = _codes(key, (q, k), bits)
-    cdb = _codes(jax.random.fold_in(key, 1), (n, k), bits)
-    wq = PK.pack_codes(cq, bits)
-    wdb = PK.pack_codes(cdb, bits)
-    want = ref.collision_counts_ref(cq, cdb)
-    got_ref = ref.packed_collision_ref(wq, wdb, bits, k)
-    got_pal = packed_collision_counts_pallas(
-        wq, wdb, bits, k, block_q=8, block_n=16, block_w=2, interpret=True)
-    np.testing.assert_array_equal(np.asarray(got_ref), np.asarray(want))
-    np.testing.assert_array_equal(np.asarray(got_pal), np.asarray(want))
 
 
 @pytest.mark.parametrize("bits", [1, 2, 8])
@@ -49,37 +28,6 @@ def test_match_count_packed_rowwise(bits):
                                 PK.pack_codes(b, bits), bits, k)
     want = jnp.sum((a == b).astype(jnp.int32), axis=-1)
     np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
-
-
-@pytest.mark.parametrize("bits,k", [(2, 128), (4, 30)])
-@pytest.mark.parametrize("top_k", [1, 5, 13])
-def test_packed_topk_streaming_matches_ref(bits, k, top_k):
-    """Streaming kernel == full-matrix top-k, values AND tie-broken ids."""
-    key = jax.random.PRNGKey(k + top_k)
-    wq = PK.pack_codes(_codes(key, (9, k), bits), bits)
-    wdb = PK.pack_codes(_codes(jax.random.fold_in(key, 1), (50, k), bits),
-                        bits)
-    gv, gi = packed_topk_pallas(wq, wdb, bits, k, top_k,
-                                block_q=8, block_n=16, interpret=True)
-    rv, ri = ref.packed_topk_ref(wq, wdb, bits, k, top_k)
-    np.testing.assert_array_equal(np.asarray(gv), np.asarray(rv))
-    np.testing.assert_array_equal(np.asarray(gi), np.asarray(ri))
-
-
-def test_packed_topk_overflow_slots():
-    """top_k > N: kernel and ref both fill overflow slots with (-1, -1)."""
-    bits, k, n = 2, 20, 4
-    key = jax.random.PRNGKey(1)
-    wq = PK.pack_codes(_codes(key, (3, k), bits), bits)
-    wdb = PK.pack_codes(_codes(jax.random.fold_in(key, 1), (n, k), bits),
-                        bits)
-    rv, ri = ref.packed_topk_ref(wq, wdb, bits, k, 7)
-    gv, gi = packed_topk_pallas(wq, wdb, bits, k, 7, block_q=8, block_n=8,
-                                interpret=True)
-    assert (np.asarray(rv[:, n:]) == -1).all()
-    assert (np.asarray(ri[:, n:]) == -1).all()
-    np.testing.assert_array_equal(np.asarray(gv), np.asarray(rv))
-    np.testing.assert_array_equal(np.asarray(gi), np.asarray(ri))
 
 
 def test_topk_blocked_matches_lax_top_k():

@@ -1,5 +1,6 @@
-"""repro.encode: fused ingest kernels, matrix-free streaming, CSR inputs,
-pipeline/bulk-load, and the sketch reproducibility invariants."""
+"""repro.encode: matrix-free streaming ingest, CSR inputs,
+pipeline/bulk-load, and the sketch reproducibility invariants. Encode
+kernel-vs-oracle bit-exactness lives in test_kernel_conformance.py."""
 import numpy as np
 import pytest
 import jax
@@ -15,7 +16,6 @@ from repro.encode import (CsrMatrix, IngestPipeline, StreamingEncoder,
                           encode_sharded, unit_buckets)
 from repro.index import MutableAnnEngine, SegmentLogStore
 from repro.kernels import ops, ref
-from repro.kernels.encode_fused import code_pack_pallas, encode_fused_pallas
 from repro.serve.ann_service import AnnService, AnnServiceConfig
 
 SCHEMES = [("uniform", 1.0), ("2bit", 0.75), ("sign", 1.0), ("offset", 1.0)]
@@ -26,43 +26,6 @@ def _unpacked_mismatches(got, want, bits, k):
     ga = _packing.unpack_codes(got, bits, k)
     wa = _packing.unpack_codes(want, bits, k)
     return int(jnp.sum(ga != wa))
-
-
-# -- fused kernels vs oracles -------------------------------------------------
-
-@pytest.mark.parametrize("m,d,k", SHAPES)
-@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16],
-                         ids=["f32", "bf16"])
-@pytest.mark.parametrize("scheme,w", SCHEMES)
-def test_encode_fused_matches_ref(m, d, k, dtype, scheme, w):
-    key = jax.random.PRNGKey(m * 13 + k)
-    x = jax.random.normal(key, (m, d), dtype)
-    r = jax.random.normal(jax.random.fold_in(key, 1), (d, k), dtype)
-    q = sample_offsets(jax.random.fold_in(key, 2), k, w)
-    spec = CodeSpec(scheme, w)
-    got = encode_fused_pallas(x, r, spec, q, interpret=True,
-                              block_m=32, block_d=64)
-    want = ref.encode_fused_ref(x, r, spec, q)
-    assert got.shape == want.shape == (m, _packing.packed_width(k, spec.bits))
-    if dtype == jnp.float32:
-        np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
-    else:
-        # floor() at bin boundaries can flip one ulp between accumulation
-        # orders for bf16 inputs; allow a vanishing fraction of fields
-        mism = _unpacked_mismatches(got, want, spec.bits, k)
-        assert mism <= max(2, int(0.001 * m * k)), mism
-
-
-@pytest.mark.parametrize("m,k", [(5, 17), (64, 256), (130, 100)])
-@pytest.mark.parametrize("scheme,w", SCHEMES)
-def test_code_pack_matches_ref(m, k, scheme, w):
-    key = jax.random.PRNGKey(m + k)
-    z = jax.random.normal(key, (m, k)) * 2.0
-    q = sample_offsets(jax.random.fold_in(key, 1), k, w)
-    spec = CodeSpec(scheme, w)
-    got = code_pack_pallas(z, spec, q, interpret=True, block_m=32)
-    want = ref.code_pack_ref(z, spec, q)
-    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
 
 
 def test_ops_dispatch_agrees():

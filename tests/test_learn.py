@@ -1,5 +1,6 @@
-"""repro.learn: packed-linear kernels vs oracles, dense-path parity,
-masked training over a churned segment log, sharded gradients, serving."""
+"""repro.learn: dense-path parity, masked training over a churned
+segment log, sharded gradients, serving. Packed-linear kernel-vs-oracle
+bit-exactness lives in test_kernel_conformance.py."""
 import numpy as np
 import pytest
 import jax
@@ -12,11 +13,7 @@ from repro.core.svm import SVMConfig, expand_codes, svm_accuracy, \
     train_linear_svm
 from repro.index import SegmentLogStore
 from repro.kernels import ref
-from repro.kernels.packed_linear import (onehot_tile,
-                                         packed_linear_bwd_masked_pallas,
-                                         packed_linear_bwd_pallas,
-                                         packed_linear_fwd_masked_pallas,
-                                         packed_linear_fwd_pallas)
+from repro.kernels.packed_linear import onehot_tile
 from repro.learn import (LearnConfig, PackedLinearModel, feature_spec_for,
                          fit_log, fit_store, fit_words,
                          packed_grads_sharded, train_dense_linear,
@@ -37,68 +34,6 @@ def _rand_problem(key, scheme, w, k, n_cls, n):
     tab = jax.random.normal(kt, (n_cls, fp))
     g = jax.random.normal(kg, (n_cls, n))
     return spec, tab, words, g
-
-
-# -- kernels vs oracles -------------------------------------------------------
-
-@pytest.mark.parametrize("scheme,w", SPECS)
-@pytest.mark.parametrize("n_cls,n,k", [(1, 700, 64), (3, 129, 33)])
-def test_fwd_kernel_bit_exact(scheme, w, n_cls, n, k):
-    spec, tab, words, _ = _rand_problem(jax.random.PRNGKey(n * k), scheme,
-                                        w, k, n_cls, n)
-    got = packed_linear_fwd_pallas(tab, words, spec.bits, interpret=True,
-                                   block_c=8, block_n=128)
-    want = ref.packed_linear_fwd_ref(tab, words, spec.bits)
-    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
-
-
-@pytest.mark.parametrize("density", [0.0, 0.5, 1.0])
-def test_fwd_masked_kernel_bit_exact(density):
-    n_cls, n, k = 2, 300, 48
-    key = jax.random.PRNGKey(int(density * 7))
-    spec, tab, words, _ = _rand_problem(key, "2bit", 0.75, k, n_cls, n)
-    flags = jax.random.bernoulli(jax.random.fold_in(key, 9), density, (n,))
-    vw = PK.pack_bitmask(flags)
-    got = packed_linear_fwd_masked_pallas(tab, words, vw, spec.bits,
-                                          interpret=True, block_c=8,
-                                          block_n=128)
-    want = ref.packed_linear_fwd_masked_ref(tab, words, vw, spec.bits)
-    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
-    # dead rows emit exactly 0.0
-    dead = ~np.asarray(flags)
-    assert (np.asarray(got)[:, dead] == 0.0).all()
-
-
-@pytest.mark.parametrize("scheme,w", SPECS)
-@pytest.mark.parametrize("n_cls,n,k", [(1, 700, 64), (5, 129, 24)])
-def test_bwd_kernel_bit_exact(scheme, w, n_cls, n, k):
-    spec, _, words, g = _rand_problem(jax.random.PRNGKey(n + k), scheme,
-                                      w, k, n_cls, n)
-    got = packed_linear_bwd_pallas(g, words, spec.bits, interpret=True,
-                                   block_c=8, block_n=128)
-    want = ref.packed_linear_bwd_ref(g, words, spec.bits, block_c=8,
-                                     block_n=128)
-    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
-
-
-@pytest.mark.parametrize("density", [0.0, 0.5, 1.0])
-def test_bwd_masked_kernel_bit_exact(density):
-    n_cls, n, k = 2, 420, 40
-    key = jax.random.PRNGKey(3 + int(density * 5))
-    spec, _, words, g = _rand_problem(key, "2bit", 0.75, k, n_cls, n)
-    flags = jax.random.bernoulli(jax.random.fold_in(key, 4), density, (n,))
-    vw = PK.pack_bitmask(flags)
-    got = packed_linear_bwd_masked_pallas(g, words, vw, spec.bits,
-                                          interpret=True, block_c=8,
-                                          block_n=128)
-    want = ref.packed_linear_bwd_masked_ref(g, words, vw, spec.bits,
-                                            block_c=8, block_n=128)
-    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
-    # masking == zeroing dead rows' gradients by hand
-    g0 = jnp.where(jnp.asarray(flags)[None, :], g, 0.0)
-    manual = ref.packed_linear_bwd_ref(g0, words, spec.bits, block_c=8,
-                                       block_n=128)
-    np.testing.assert_array_equal(np.asarray(got), np.asarray(manual))
 
 
 def test_onehot_tile_matches_dense_expansion():

@@ -414,7 +414,11 @@ def test_pipeline_stats_compat_and_registry():
         pipe.stats["rows"] = 0             # read-only compat view
 
 
-def test_traced_search_has_coarse_and_rerank_spans():
+def test_traced_search_emits_scored_spans():
+    """Default scored search emits the single ``search.fused`` span;
+    ``fused=False`` emits the two-stage ``search.coarse``/
+    ``search.rerank`` pair — all device-synced, tracing never changing
+    results."""
     rng = np.random.default_rng(13)
     eng = MutableAnnEngine(_crp(), band_spec=BAND, tail_rows=64)
     eng.add(jnp.asarray(rng.normal(size=(96, D)), jnp.float32))
@@ -422,19 +426,24 @@ def test_traced_search_has_coarse_and_rerank_spans():
     ids_plain, rho_plain = eng.search(q, 3, scored=True, chunk_q=4)
     with Tracer() as tr:
         ids_tr, rho_tr = eng.search(q, 3, scored=True, chunk_q=4)
-    # spans exist, are device-synced, and rerank time is measured > 0
-    assert tr.total("search.coarse") > 0
-    assert tr.total("search.rerank") > 0
+    assert tr.total("search.fused") > 0
     assert all(e["args"]["sync"] == "device" for e in tr.events
                if e["name"].startswith("search."))
-    # tracing never changes results
     np.testing.assert_array_equal(np.asarray(ids_tr),
                                   np.asarray(ids_plain))
     np.testing.assert_allclose(np.asarray(rho_tr), np.asarray(rho_plain),
                                rtol=1e-6)
+    with Tracer() as tr2:
+        ids_two, _ = eng.search(q, 3, scored=True, chunk_q=4, fused=False)
+    # the legacy path keeps its per-stage spans and the same results
+    assert tr2.total("search.coarse") > 0
+    assert tr2.total("search.rerank") > 0
+    assert tr2.total("search.fused") == 0
+    np.testing.assert_array_equal(np.asarray(ids_two),
+                                  np.asarray(ids_plain))
 
 
-def test_immutable_engine_traced_scored_split_matches_fused():
+def test_immutable_engine_traced_scored_split_matches_untraced():
     from repro.ann import AnnEngine
     rng = np.random.default_rng(17)
     corpus = jnp.asarray(rng.normal(size=(128, D)), jnp.float32)
@@ -443,8 +452,14 @@ def test_immutable_engine_traced_scored_split_matches_fused():
     ids_plain, rho_plain = eng.search(q, 3, scored=True, chunk_q=4)
     with Tracer() as tr:
         ids_tr, rho_tr = eng.search(q, 3, scored=True, chunk_q=4)
-    assert tr.total("search.coarse") > 0 and tr.total("search.rerank") > 0
+    assert tr.total("search.fused") > 0
+    with Tracer() as tr2:
+        ids_two, rho_two = eng.search(q, 3, scored=True, chunk_q=4,
+                                      fused=False)
+    assert tr2.total("search.coarse") > 0 and tr2.total("search.rerank") > 0
     np.testing.assert_array_equal(np.asarray(ids_tr),
+                                  np.asarray(ids_plain))
+    np.testing.assert_array_equal(np.asarray(ids_two),
                                   np.asarray(ids_plain))
     np.testing.assert_allclose(np.asarray(rho_tr), np.asarray(rho_plain),
                                rtol=1e-6)

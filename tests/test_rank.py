@@ -1,5 +1,7 @@
-"""repro.rank: non-linear estimators, LUT tables, fused re-rank kernels,
-and the two-stage scored search paths."""
+"""repro.rank: non-linear estimators, LUT tables, and the scored
+search paths (single-pass fused by default, two-stage as the checked
+fallback). Kernel-vs-oracle bit-exactness lives in
+test_kernel_conformance.py."""
 import numpy as np
 import pytest
 import jax
@@ -12,9 +14,6 @@ from repro.core.schemes import CodeSpec
 from repro.core.sketch import CodedRandomProjection, SketchConfig
 from repro.index import MutableAnnEngine
 from repro.kernels import ref
-from repro.kernels.packed_lut import (packed_lut_rerank_pallas,
-                                      packed_lut_topk_masked_pallas,
-                                      packed_lut_topk_pallas)
 from repro.rank import build_rank_tables
 from repro.serve.ann_service import AnnService, AnnServiceConfig
 
@@ -73,72 +72,7 @@ def test_rank_tables_reject_offset_scheme():
 
 # -- fused LUT kernels vs oracles ---------------------------------------------
 
-def _tables_and_words(key, scheme, w, k, q, n, dtype):
-    spec = CodeSpec(scheme, w)
-    rt = build_rank_tables(spec, k)
-    if dtype is not None:
-        rt = rt.quantize(dtype)
-    kq, kdb = jax.random.split(key)
-    q_codes = jax.random.randint(kq, (q, k), 0, spec.n_codes)
-    db_codes = jax.random.randint(kdb, (n, k), 0, spec.n_codes)
-    return (spec, rt.query_tables(q_codes),
-            PK.pack_codes(db_codes, spec.bits))
-
-
-@pytest.mark.parametrize("scheme,w", SPECS)
-@pytest.mark.parametrize("q,n,k,top_k", [(8, 100, 64, 5), (33, 700, 96, 10)])
-def test_lut_topk_kernel_bit_exact(scheme, w, q, n, k, top_k):
-    spec, tab, dbw = _tables_and_words(jax.random.PRNGKey(q * k), scheme, w,
-                                       k, q, n, None)
-    got = packed_lut_topk_pallas(tab, dbw, spec.bits, top_k, interpret=True,
-                                 block_q=32, block_n=128)
-    want = ref.packed_lut_topk_ref(tab, dbw, spec.bits, top_k)
-    for g, wv in zip(got, want):
-        np.testing.assert_array_equal(np.asarray(g), np.asarray(wv))
-
-
-@pytest.mark.parametrize("dtype", [None, jnp.bfloat16],
-                         ids=["f32", "bf16"])
-@pytest.mark.parametrize("density", [0.0, 0.5, 1.0])
-def test_lut_masked_kernel_bit_exact_random_masks(dtype, density):
-    """Masked LUT top-k is bit-exact vs the oracle under random
-    tombstone bitmasks (all-dead, half, all-live)."""
-    q, n, k, top_k = 16, 300, 64, 8
-    key = jax.random.PRNGKey(int(density * 7) + (dtype is None))
-    spec, tab, dbw = _tables_and_words(key, "2bit", 0.75, k, q, n, dtype)
-    flags = jax.random.bernoulli(jax.random.fold_in(key, 9), density, (n,))
-    vwords = PK.pack_bitmask(flags)
-    got = packed_lut_topk_masked_pallas(tab, dbw, vwords, spec.bits, top_k,
-                                        interpret=True, block_q=32,
-                                        block_n=128)
-    want = ref.packed_lut_topk_masked_ref(tab, dbw, vwords, spec.bits, top_k)
-    for g, wv in zip(got, want):
-        np.testing.assert_array_equal(np.asarray(g), np.asarray(wv))
-    # dead rows never surface
-    dead = set(np.flatnonzero(~np.asarray(flags)))
-    assert not (set(np.asarray(got[1]).ravel()) - {-1}) & dead
-
-
-@pytest.mark.parametrize("dtype", [None, jnp.bfloat16],
-                         ids=["f32", "bf16"])
-def test_lut_rerank_kernel_bit_exact_random_valid(dtype):
-    """The candidate re-rank kernel is bit-exact vs its oracle with
-    random invalid (-1) candidate slots."""
-    q, n, m, k, top_k = 13, 400, 50, 64, 7
-    key = jax.random.PRNGKey(3 + (dtype is None))
-    spec, tab, dbw = _tables_and_words(key, "2bit", 0.75, k, q, n, dtype)
-    cand_ids = jax.random.randint(jax.random.fold_in(key, 5),
-                                  (q, m), -1, n)
-    cand = jnp.take(dbw, jnp.clip(cand_ids, 0, n - 1), axis=0)
-    valid = cand_ids >= 0
-    got = packed_lut_rerank_pallas(tab, cand, valid, spec.bits, top_k,
-                                   interpret=True, block_q=8, block_m=64)
-    want = ref.packed_lut_rerank_ref(tab, cand, valid, spec.bits, top_k)
-    for g, wv in zip(got, want):
-        np.testing.assert_array_equal(np.asarray(g), np.asarray(wv))
-
-
-# -- two-stage scored search --------------------------------------------------
+# -- scored search --------------------------------------------------------
 
 def _unit(x):
     return x / jnp.linalg.norm(x, axis=-1, keepdims=True)
@@ -288,6 +222,35 @@ def test_service_scored_mode(scored_world):
                                   np.asarray(ids_direct[0]))
 
 
+def test_service_autotune_warmup_both_store_types(scored_world):
+    """``autotune_warmup=True`` must survive warmup over both store
+    shapes — CodeStore (words array) and SegmentLogStore (packed width
+    attr) — and change nothing about the results (on CPU the sweep is
+    a no-op by design)."""
+    engine, corpus, queries, gt = scored_world
+    svc = AnnService(engine, AnnServiceConfig(
+        top_k=3, scored=True, rerank_m=64, buckets=(1, 4),
+        autotune_warmup=True))
+    svc.warmup(corpus.shape[1])
+    t = svc.submit(queries[0])
+    svc.flush()
+    ids_direct, _ = engine.search(queries[:1], top_k=3, mode="exact",
+                                  scored=True, rerank_m=64)
+    np.testing.assert_array_equal(np.asarray(svc.result(t)[0]),
+                                  np.asarray(ids_direct[0]))
+
+    m = MutableAnnEngine(engine.sketcher, tail_rows=128)
+    m.add(corpus, np.arange(corpus.shape[0]))
+    svc_m = AnnService(m, AnnServiceConfig(
+        top_k=3, scored=True, rerank_m=64, buckets=(1, 4),
+        autotune_warmup=True))
+    svc_m.warmup(corpus.shape[1])
+    tm = svc_m.submit(queries[0])
+    svc_m.flush()
+    np.testing.assert_array_equal(np.asarray(svc_m.result(tm)[0]),
+                                  np.asarray(ids_direct[0]))
+
+
 def test_bf16_tables_end_to_end(scored_world):
     """bf16-quantized tables run the whole scored path and stay close
     to the f32 ranking."""
@@ -303,3 +266,101 @@ def test_bf16_tables_end_to_end(scored_world):
     overlap = np.mean([len(set(np.asarray(a)) & set(np.asarray(b))) / 10
                        for a, b in zip(ids_b, ids_f)])
     assert overlap >= 0.8, overlap
+
+
+# -- single-pass fused scored path (engine level) -----------------------------
+
+def test_fused_matches_two_stage_immutable(scored_world):
+    """The default fused path is bit-identical to the two-stage path it
+    replaces — ids AND calibrated rho, across rerank_m regimes."""
+    engine, corpus, queries, gt = scored_world
+    for m in (16, 256, engine.n + 50):      # truncating / ample / m > n
+        ids_f, rho_f = engine.search(queries, 10, mode="exact",
+                                     scored=True, rerank_m=m, fused=True)
+        ids_t, rho_t = engine.search(queries, 10, mode="exact",
+                                     scored=True, rerank_m=m, fused=False)
+        np.testing.assert_array_equal(np.asarray(ids_f), np.asarray(ids_t))
+        np.testing.assert_array_equal(np.asarray(rho_f), np.asarray(rho_t))
+
+
+def test_fused_matches_two_stage_mutable(scored_world):
+    """Fused masked path == two-stage across segments with tombstones;
+    segments small enough that rerank_m exceeds some live counts."""
+    engine, corpus, queries, gt = scored_world
+    m = MutableAnnEngine(engine.sketcher,
+                         band_spec=BandSpec(n_tables=8, band_width=4),
+                         tail_rows=256)
+    ext = m.add(corpus)
+    m.delete(sorted(int(i) for i in ext[::3]))
+    for rm in (32, 300):
+        ids_f, rho_f = m.search(queries, 10, mode="exact", scored=True,
+                                rerank_m=rm, fused=True)
+        ids_t, rho_t = m.search(queries, 10, mode="exact", scored=True,
+                                rerank_m=rm, fused=False)
+        np.testing.assert_array_equal(np.asarray(ids_f), np.asarray(ids_t))
+        np.testing.assert_array_equal(np.asarray(rho_f), np.asarray(rho_t))
+
+
+def test_fused_all_rows_tombstoned_segment(scored_world):
+    """A segment whose rows are all deleted contributes nothing; with
+    everything deleted the engine returns pure sentinels."""
+    engine, corpus, queries, gt = scored_world
+    m = MutableAnnEngine(engine.sketcher, tail_rows=128)
+    ext = m.add(corpus)
+    m.delete([int(i) for i in ext if int(i) < 128])  # first segment dead
+    ids, _ = m.search(queries, 10, mode="exact", scored=True, rerank_m=64)
+    assert not (set(np.asarray(ids).ravel().tolist()) - {-1}) & set(
+        range(128))
+    m.delete([int(i) for i in ext if int(i) >= 128])
+    ids, rho = m.search(queries, 5, mode="exact", scored=True)
+    assert (np.asarray(ids) == -1).all()
+    assert (np.asarray(rho) == -1.0).all()
+
+
+def test_fused_sharded_matches_unsharded(scored_world):
+    from jax.sharding import Mesh
+    engine, corpus, queries, gt = scored_world
+    mesh = Mesh(np.asarray(jax.devices()[:1]), ("data",))
+    ids_s, rho_s = engine.search_sharded(queries, mesh, top_k=4,
+                                         scored=True, rerank_m=256,
+                                         fused=True)
+    ids_e, rho_e = engine.search(queries, top_k=4, mode="exact",
+                                 scored=True, rerank_m=256, fused=True)
+    np.testing.assert_array_equal(np.asarray(ids_s), np.asarray(ids_e))
+    np.testing.assert_allclose(np.asarray(rho_s), np.asarray(rho_e),
+                               rtol=1e-6)
+
+
+def test_int8_tables_end_to_end(scored_world):
+    """int8 query tables (power-of-two scales) run the fused path end
+    to end and stay close to the f32 ranking; the two-stage path
+    rejects them loudly."""
+    engine, corpus, queries, gt = scored_world
+    ids_8, rho_8 = engine.search(queries, 10, mode="exact", scored=True,
+                                 rerank_m=256, table_dtype="int8")
+    ids_f, _ = engine.search(queries, 10, mode="exact", scored=True,
+                             rerank_m=256)
+    overlap = np.mean([len(set(np.asarray(a)) & set(np.asarray(b))) / 10
+                       for a, b in zip(ids_8, ids_f)])
+    assert overlap >= 0.8, overlap
+    rho_8 = np.asarray(rho_8)
+    assert (rho_8 <= 1.0).all() and (rho_8 >= -1.0).all()
+    with pytest.raises(ValueError, match="int8"):
+        engine.search(queries, 10, scored=True, table_dtype="int8",
+                      fused=False)
+
+
+def test_int8_quantization_contract(scored_world):
+    """query_tables_int8 emits power-of-two scales and reconstructs the
+    f32 tables to within one quantization step."""
+    engine, corpus, queries, gt = scored_world
+    rt = engine.rank_tables
+    q_codes = engine.encode_queries(queries[:4])
+    qt, scales = rt.query_tables_int8(q_codes)
+    s = np.asarray(scales)
+    assert (np.exp2(np.round(np.log2(s))) == s).all()   # powers of two
+    t32 = np.asarray(rt.query_tables(q_codes, dtype=jnp.float32))
+    cpw_p = t32.shape[1] // s.shape[1]
+    recon = (np.asarray(qt, np.float32).reshape(4, s.shape[1], cpw_p)
+             * s[:, :, None]).reshape(t32.shape)
+    assert np.abs(recon - t32).max() <= s.max()
