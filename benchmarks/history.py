@@ -1,0 +1,108 @@
+"""Cross-run bench history: append headline numbers to BENCH_history.jsonl.
+
+Every ``benchmarks/run.py`` target emits ``(name, us_per_call, derived)``
+rows; this module turns that transient CSV into a durable trajectory.
+``append_history`` writes ONE JSON line per module run — timestamp, git
+revision, quick/full flag, and the ``us_per_call`` of every row — to
+``BENCH_history.jsonl`` at the repo root. The file is append-only and
+line-oriented (concurrent runs interleave whole lines, partial tails
+are skipped on read), so the history survives crashes and merges
+trivially in CI artifact uploads.
+
+``scripts/check_perf.py`` reads the per-metric series back (via
+``load_history``/``series``) and runs the ``repro.obs.drift`` CUSUM
+change-point check over them — the empty bench trajectory becomes a
+regression gate.
+"""
+import json
+import os
+import subprocess
+import time
+
+HISTORY_FILE = "BENCH_history.jsonl"
+
+
+def _git_rev(root: str) -> str:
+    try:
+        out = subprocess.run(
+            ["git", "rev-parse", "--short", "HEAD"], cwd=root,
+            capture_output=True, text=True, timeout=10)
+        return out.stdout.strip() if out.returncode == 0 else ""
+    except Exception:
+        return ""
+
+
+def history_path(root: str = None) -> str:
+    """The history file path (default: repo root, next to BENCH_*.json)."""
+    if root is None:
+        root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    return os.path.join(root, HISTORY_FILE)
+
+
+def append_history(module: str, rows, root: str = None,
+                   quick: bool = True, path: str = None) -> str:
+    """Append one history line for ``module``'s bench rows.
+
+    ``rows`` is the ``run(quick)`` return — ``(name, us_per_call,
+    derived)`` triples; only finite ``us_per_call`` values are kept
+    (derived strings stay in the per-run CSVs). Returns the path.
+    """
+    path = path or history_path(root)
+    metrics = {}
+    for name, us, _derived in rows:
+        try:
+            us = float(us)
+        except (TypeError, ValueError):
+            continue
+        if us == us and us not in (float("inf"), float("-inf")):
+            metrics[str(name)] = us
+    rec = {"ts": time.strftime("%Y-%m-%dT%H:%M:%S", time.gmtime()),
+           "git": _git_rev(os.path.dirname(path)),
+           "module": module.rsplit(".", 1)[-1],
+           "quick": bool(quick),
+           "metrics": metrics}
+    with open(path, "a") as f:
+        f.write(json.dumps(rec) + "\n")
+    return path
+
+
+def load_history(path: str = None, root: str = None) -> list:
+    """Every parseable record in the history file, append order.
+    Partial/corrupt lines (a crashed writer's tail) are skipped."""
+    path = path or history_path(root)
+    if not os.path.exists(path):
+        return []
+    out = []
+    with open(path) as f:
+        for line in f:
+            line = line.strip()
+            if not line:
+                continue
+            try:
+                out.append(json.loads(line))
+            except json.JSONDecodeError:
+                continue
+    return out
+
+
+def series(records: list, metric: str, quick: bool = None) -> list:
+    """The per-run values of one metric name, append order. ``quick``
+    filters to quick-only / full-only runs (None = both; quick and full
+    runs use different problem sizes, so a gate should never mix them)."""
+    out = []
+    for r in records:
+        if quick is not None and bool(r.get("quick")) != quick:
+            continue
+        v = r.get("metrics", {}).get(metric)
+        if v is not None:
+            out.append(float(v))
+    return out
+
+
+def metric_names(records: list) -> list:
+    """Every metric name seen in the history, first-seen order."""
+    seen = {}
+    for r in records:
+        for name in r.get("metrics", {}):
+            seen.setdefault(name, None)
+    return list(seen)

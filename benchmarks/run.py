@@ -8,6 +8,11 @@ and writes one Chrome-trace/Perfetto JSON per module next to the BENCH
 files (repo root, ``TRACE_<module>.json``) — load at
 https://ui.perfetto.dev for the flame view.
 
+Every module's headline ``us_per_call`` numbers are also appended to
+``BENCH_history.jsonl`` at the repo root (``benchmarks/history.py``) —
+the cross-run trajectory ``scripts/check_perf.py`` regression-gates.
+``--no-history`` skips the append (ad-hoc local runs).
+
 ``python benchmarks/run.py lint`` runs the docs/docstring lint
 (``scripts/check_docs.py``) instead of the benchmarks.
 """
@@ -54,6 +59,9 @@ def main() -> None:
     ap.add_argument("--profile", action="store_true",
                     help="trace each module; write TRACE_<module>.json "
                          "(Perfetto) next to the BENCH files")
+    ap.add_argument("--no-history", action="store_true",
+                    help="don't append headline numbers to "
+                         "BENCH_history.jsonl")
     args = ap.parse_args()
     if args.cmd == "lint":
         root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
@@ -80,6 +88,14 @@ def main() -> None:
                 rows = mod.run(quick=not args.full)
             for name, us, derived in rows:
                 print(f"{name},{us:.1f},{derived}", flush=True)
+            if not args.no_history:
+                from benchmarks import history as _history
+                try:
+                    _history.append_history(modname, rows, root,
+                                            quick=not args.full)
+                except OSError as e:      # read-only checkout etc.
+                    print(f"# history append failed: {e}",
+                          file=sys.stderr)
         except Exception:
             failed += 1
             print(f"{modname},NaN,ERROR", flush=True)

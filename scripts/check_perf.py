@@ -1,0 +1,177 @@
+"""CI perf-regression gate over BENCH_history.jsonl.
+
+Reads the cross-run bench trajectory (``benchmarks/history.py``) and
+runs a change-point check on every per-metric ``us_per_call`` series:
+a ``repro.obs.drift`` CUSUM over log-values — scale-free, so the same
+slack/threshold work for a 3 us kernel and a 300 ms ingest. A 2x
+latency jump moves log(v) by +0.69: with ``slack=0.2`` and
+``threshold=0.5`` the detector fires within two regressed points,
+while stationary noise at realistic bench jitter (5-10% relative)
+stays far below threshold (``--selftest`` pins both properties, the
+same protocol the PR 7 drift bench used).
+
+A series is *flagged* when an up-side alarm fired AND the latest value
+is still elevated above the warmup baseline (a regression that was
+since fixed stops gating). Down-side alarms (improvements) are
+reported, never fatal.
+
+Gate semantics (CI runs ``--quick``): series shorter than
+``--min-points`` (default 5) are report-only — the step is non-blocking
+until the trajectory has enough history to judge, then flagged
+regressions exit 1. A missing history file is a clean no-op under
+``--quick`` (first run of a fresh clone) and an error otherwise.
+"""
+import argparse
+import json
+import math
+import os
+import sys
+
+_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+sys.path.insert(0, _ROOT)
+sys.path.insert(0, os.path.join(_ROOT, "src"))
+
+from benchmarks import history as _history            # noqa: E402
+from repro.obs.drift import Cusum                     # noqa: E402
+
+SLACK = 0.2        # log-space slack: ignores <~22% drift per point
+THRESHOLD = 0.5    # accumulated log-evidence to fire (2x fires in ~2)
+WARMUP = 3         # points frozen into the baseline mean
+
+
+def analyze(values, slack=SLACK, threshold=THRESHOLD, warmup=WARMUP,
+            min_points=5) -> dict:
+    """Change-point verdict for one metric series (see module docstring).
+
+    Returns {n, baseline, last, alarms: [(index, side)], regressed,
+    improved, gating} — ``regressed`` is the flag, ``gating`` whether
+    the series is long enough for the flag to be fatal.
+    """
+    logs = [math.log(v) for v in values if v > 0]
+    det = Cusum(slack=slack, threshold=threshold, warmup=warmup)
+    alarms = []
+    for i, x in enumerate(logs):
+        if det.update(x):
+            alarms.append((i, det.side))
+    baseline = math.exp(det.mu0) if det.n > 0 else float("nan")
+    last = values[-1] if values else float("nan")
+    up = any(s == "up" for _, s in alarms)
+    still_high = (len(logs) > warmup
+                  and logs[-1] > det.mu0 + slack)
+    return {"n": len(logs), "baseline": baseline, "last": last,
+            "alarms": alarms,
+            "regressed": up and still_high,
+            "improved": any(s == "down" for _, s in alarms),
+            "gating": len(logs) >= min_points}
+
+
+def check(path=None, min_points=5, quick=False, out=sys.stdout) -> int:
+    """Run the gate over one history file; returns the exit code."""
+    records = _history.load_history(path)
+    if not records:
+        if quick:
+            print("check_perf: no bench history yet (report-only)",
+                  file=out)
+            return 0
+        print(f"check_perf: no history at "
+              f"{path or _history.history_path()}", file=out)
+        return 1
+    failures = []
+    for flavor in (True, False):          # quick/full series never mix
+        for name in _history.metric_names(records):
+            vals = _history.series(records, name, quick=flavor)
+            if len(vals) < 2:
+                continue
+            v = analyze(vals, min_points=min_points)
+            tag = "quick" if flavor else "full"
+            status = ("REGRESSED" if v["regressed"] else
+                      "improved" if v["improved"] else "ok")
+            if v["regressed"] or v["improved"]:
+                print(f"  [{tag}] {name}: {status} n={v['n']} "
+                      f"baseline={v['baseline']:.1f}us "
+                      f"last={v['last']:.1f}us "
+                      f"alarms={v['alarms']}", file=out)
+            if v["regressed"] and v["gating"]:
+                failures.append((tag, name))
+            elif v["regressed"]:
+                print(f"  [{tag}] {name}: regression below "
+                      f"min-points={min_points} — report-only",
+                      file=out)
+    n_series = len(_history.metric_names(records))
+    print(f"check_perf: {len(records)} runs, {n_series} metrics, "
+          f"{len(failures)} gating regression(s)", file=out)
+    if failures:
+        for tag, name in failures:
+            print(f"check_perf: FAIL [{tag}] {name}", file=out)
+        return 1
+    return 0
+
+
+def selftest() -> int:
+    """Synthetic protocol: zero false alarms on stationary series,
+    guaranteed detection of an injected 2x latency jump — across seeds
+    and realistic bench jitter levels (mirrors the drift bench)."""
+    import numpy as np
+    bad = 0
+    for seed in range(20):
+        rng = np.random.default_rng(seed)
+        for rel in (0.02, 0.05, 0.10):
+            base = float(rng.uniform(3.0, 3000.0))
+            noise = rng.normal(0.0, rel, size=24)
+            stationary = [base * math.exp(e) for e in noise]
+            v = analyze(stationary)
+            if v["regressed"] or v["alarms"]:
+                print(f"selftest: FALSE ALARM seed={seed} rel={rel}: "
+                      f"{v['alarms']}")
+                bad += 1
+            jumped = [base * math.exp(e) * (2.0 if i >= 16 else 1.0)
+                      for i, e in enumerate(noise)]
+            v = analyze(jumped)
+            if not v["regressed"]:
+                print(f"selftest: MISSED 2x jump seed={seed} rel={rel}")
+                bad += 1
+            shrunk = [base * math.exp(e) * (0.5 if i >= 16 else 1.0)
+                      for i, e in enumerate(noise)]
+            v = analyze(shrunk)
+            if v["regressed"] or not v["improved"]:
+                print(f"selftest: misread improvement seed={seed} "
+                      f"rel={rel}")
+                bad += 1
+    print(f"check_perf selftest: {'FAIL' if bad else 'PASS'} "
+          f"(20 seeds x 3 jitter levels x stationary/2x/0.5x)")
+    return 1 if bad else 0
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--history", default=None,
+                    help="history file (default BENCH_history.jsonl "
+                         "at repo root)")
+    ap.add_argument("--min-points", type=int, default=5,
+                    help="series length below which regressions are "
+                         "report-only (default 5)")
+    ap.add_argument("--quick", action="store_true",
+                    help="CI mode: missing history is a clean no-op; "
+                         "short series stay non-blocking")
+    ap.add_argument("--selftest", action="store_true",
+                    help="run the synthetic detection protocol and exit")
+    ap.add_argument("--json", action="store_true",
+                    help="also dump per-series verdicts as JSON")
+    args = ap.parse_args(argv)
+    if args.selftest:
+        return selftest()
+    code = check(args.history, min_points=args.min_points,
+                 quick=args.quick)
+    if args.json:
+        records = _history.load_history(args.history)
+        out = {}
+        for name in _history.metric_names(records):
+            vals = _history.series(records, name, quick=True)
+            if len(vals) >= 2:
+                out[name] = analyze(vals, min_points=args.min_points)
+        print(json.dumps(out, indent=1, default=str))
+    return code
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

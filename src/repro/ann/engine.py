@@ -37,6 +37,7 @@ per-shard top-k by all-gather + re-top-k.
 from __future__ import annotations
 
 import functools
+import time
 from dataclasses import dataclass, replace
 
 import jax
@@ -49,7 +50,7 @@ from repro.core import packing as _packing
 from repro.core.sketch import CodedRandomProjection
 from repro.kernels import ops as _ops
 from repro.kernels import ref as _ref
-from repro.obs import span, tracing_active
+from repro.obs import default_flight_recorder, deep_tracing_active, span
 from repro.rank.tables import RankTables, build_rank_tables
 
 __all__ = ["SearchConfig", "AnnEngine", "QueryCoder", "merge_topk",
@@ -347,11 +348,15 @@ class AnnEngine:
     def search_codes(self, q_codes, cfg: SearchConfig):
         """Search pre-encoded queries [Q, k] (chunked, padded to one shape).
 
-        When a ``repro.obs.Tracer`` is installed, every chunk runs under
-        device-synced spans — two-stage scored searches as a
-        ``search.coarse`` / ``search.rerank`` pair (the two stages jit
-        separately at a chunk boundary; same kernels, same results), so
-        a trace attributes coarse and re-rank wall time honestly.
+        When a *deep* ``repro.obs.Tracer`` is installed (profiling),
+        every chunk runs under device-synced spans — two-stage scored
+        searches as a ``search.coarse`` / ``search.rerank`` pair (the
+        two stages jit separately at a chunk boundary; same kernels,
+        same results), so a trace attributes coarse and re-rank wall
+        time honestly. Under a shallow per-request trace
+        (``obs.RequestTrace``) the chunks keep their async fast path —
+        one submission-timed ``search.chunks`` span carries the trace
+        id instead, and a flight-recorder event marks the call.
         """
         if cfg.mode not in ("exact", "lsh"):
             raise ValueError(f"unknown mode {cfg.mode!r}")
@@ -362,11 +367,18 @@ class AnnEngine:
         if q == 0 or self.store.n == 0:
             return (jnp.full((q, cfg.top_k), -1, jnp.int32),
                     jnp.full((q, cfg.top_k), -1.0, jnp.float32))
-        if tracing_active():
+        t0 = time.perf_counter()
+        if deep_tracing_active():
             out = run_chunked(q_codes, cfg, self._traced_chunk)
         else:
-            out = run_chunked(q_codes, cfg,
-                              lambda chunk, c: self._chunk_fn(c)(chunk))
+            with span("search.chunks", sync=False, mode=cfg.mode,
+                      q=int(q), scored=cfg.scored):
+                out = run_chunked(
+                    q_codes, cfg,
+                    lambda chunk, c: self._chunk_fn(c)(chunk))
+        default_flight_recorder().record(
+            "ann.search", t0, time.perf_counter(), batch=int(q),
+            outcome=cfg.mode, synced=deep_tracing_active())
         if self.quality is not None:
             self.quality.observe_search(q_codes, out[0], self.codes_for_ids)
         return out

@@ -27,7 +27,7 @@ from jax.sharding import Mesh, PartitionSpec as P
 from repro.encode.encoder import StreamingEncoder
 from repro.encode.sparse import CsrMatrix
 from repro.kernels import ops as _ops
-from repro.obs import MetricsRegistry, span
+from repro.obs import MetricsRegistry, default_flight_recorder, span
 from repro.parallel.sharding import shard_map_unchecked
 
 __all__ = ["IngestPipeline", "encode_sharded"]
@@ -121,6 +121,7 @@ class IngestPipeline:
                 raise ValueError(f"ids already live (upsert instead): "
                                  f"{clash[:5]}")
         out_ids = []
+        t_ing = time.perf_counter()
         with span("encode.ingest", rows=n) as sp:
             for lo in range(0, n, self.chunk_rows):
                 hi = min(lo + self.chunk_rows, n)
@@ -141,6 +142,11 @@ class IngestPipeline:
                 self._c_chunks.inc()
                 self._c_bytes.inc(int(words.size) * 4)
             sp.set(chunks=self._c_chunks.value)
+        # chunk encodes round-trip to host (np words), so t_end here is
+        # effectively device-synced
+        default_flight_recorder().record(
+            "encode.ingest", t_ing, time.perf_counter(), batch=n,
+            generation=getattr(self.store, "generation", -1), synced=True)
         return (np.concatenate(out_ids) if out_ids
                 else np.zeros(0, np.int64))
 

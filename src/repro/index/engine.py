@@ -29,6 +29,8 @@ holds them to it.
 """
 from __future__ import annotations
 
+import time as _time
+
 import numpy as np
 import jax.numpy as jnp
 
@@ -45,7 +47,7 @@ from repro.index.segment_log import SegmentLogStore
 from repro.index.snapshot import restore_index, save_index
 from repro.kernels import ops as _ops
 from repro.kernels import ref as _ref
-from repro.obs import span
+from repro.obs import default_flight_recorder, deep_tracing_active, span
 
 __all__ = ["MutableAnnEngine"]
 
@@ -222,7 +224,12 @@ class MutableAnnEngine:
         if q == 0 or self.store.n_live == 0:
             return (jnp.full((q, cfg.top_k), -1, jnp.int32),
                     jnp.full((q, cfg.top_k), -1.0, jnp.float32))
+        t0 = _time.perf_counter()
         out = run_chunked(q_codes, cfg, self._search_chunk)
+        default_flight_recorder().record(
+            "index.search", t0, _time.perf_counter(), batch=int(q),
+            generation=self.generation, outcome=cfg.mode,
+            synced=deep_tracing_active())
         if self.quality is not None:
             self.quality.observe_search(q_codes, out[0], self.codes_for_ids)
         return out
@@ -246,9 +253,9 @@ class MutableAnnEngine:
         elif cfg.scored:
             q_tables = self.rank_tables.query_tables(q_codes)
         vals_l, ids_l = [], []
-        # the span syncs below are passthrough no-ops unless a tracer is
-        # installed, so the eager segment loop only serializes the
-        # device pipeline while a trace is actually being recorded
+        # the span syncs below only block under a *deep* tracer
+        # (profiling); with no tracer, or a shallow per-request
+        # RequestTrace, the eager segment loop keeps its async pipeline
         for i, seg in enumerate(self.store.segments()):
             if seg.live == 0:
                 continue

@@ -48,7 +48,8 @@ from repro.learn.linear import (LearnConfig, PackedLinearModel,
                                 adam_cosine_train, adam_update,
                                 full_batch_fit, packed_data_grads,
                                 packed_loss_and_grads, targets_pm)
-from repro.obs import default_registry, span, tracing_active
+from repro.obs import (deep_tracing_active, default_flight_recorder,
+                       default_registry, span)
 from repro.parallel.sharding import shard_map_unchecked
 
 __all__ = ["fit_words", "fit_store", "fit_log", "packed_grads_sharded"]
@@ -147,10 +148,11 @@ def _fit_minibatch(words, y_pm, fspec, cfg, mesh, axis):
     params = init
     m = jax.tree.map(jnp.zeros_like, init)
     v = jax.tree.map(jnp.zeros_like, init)
-    # per-step device-true timing only while a tracer is installed: the
-    # span sync would otherwise serialize the donated-update pipeline
+    # per-step device-true timing only while a *deep* tracer is
+    # installed: the span sync would otherwise serialize the
+    # donated-update pipeline (a shallow RequestTrace never blocks)
     h_step = default_registry().histogram("learn.step_s")
-    traced = tracing_active()
+    traced = deep_tracing_active()
     for i in range(cfg.steps):
         idx = jnp.asarray(rng.choice(n, size=cfg.batch, replace=False))
         t0 = time.perf_counter()
@@ -219,7 +221,11 @@ def fit_words(words, y, spec, cfg: LearnConfig = LearnConfig(), *,
     reg = default_registry()
     reg.counter("learn.rows").inc(n)
     reg.counter("learn.steps").inc(cfg.steps)
-    reg.histogram("learn.fit_s").observe(time.perf_counter() - t0)
+    t1 = time.perf_counter()
+    reg.histogram("learn.fit_s").observe(t1 - t0)
+    # the block_until_ready above makes this an execution-true event
+    default_flight_recorder().record("learn.fit", t0, t1, batch=n,
+                                     synced=True)
     model = PackedLinearModel(fspec=fspec, tables=tables, bias=bias,
                               loss=cfg.loss)
     _observe_fit_margins(model, words, quality, cfg.seed)

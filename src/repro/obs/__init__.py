@@ -26,21 +26,47 @@ shadow      — seeded reservoir of raw rows (capped, tombstone-aware) +
               recall@k and rho-estimation error with Wilson intervals
 drift       — Page-Hinkley/CUSUM detectors over the monitored series;
               registered callbacks fire on alarm (the warm-start-refit
-              trigger hook)
+              trigger hook); detectors report the alarm direction
+events      — ``FlightRecorder`` (``obs/events.py``): always-on
+              preallocated ring buffer of structured per-request
+              events (op, queue/start/sync timestamps, batch, cache
+              hits, generation, outcome, trace id); O(1) append cheap
+              enough for the serving hot path
+incident    — ``IncidentManager`` (``obs/incident.py``): on a drift
+              alarm or endpoint error, dump a self-contained bundle
+              (flight tail, retained traces, registry snapshot,
+              quality state, store generation) through
+              ``repro.checkpoint``; restores to a readable dict
+
+The flight layer adds retain-on-tail tracing: ``RequestTrace`` gives
+every request a shallow span chain (no device barriers) and
+``TailSampler`` retains full traces only for slowest-quantile /
+errored / quality-flagged requests, with exemplar links
+(``Histogram.exemplar``) exported on Prometheus buckets.
 
 Instrumented layers: ``serve.ann_service`` (endpoint latencies, ticket
-age, cache + padding economics), ``encode.pipeline`` (chunk spans,
-rows/bytes), ``index.segment_log``/``index.compaction`` (churn counters,
+age, cache + padding economics, per-request flight events + tail
+sampling), ``encode.pipeline`` (chunk spans, rows/bytes),
+``index.segment_log``/``index.compaction`` (churn counters,
 live-fraction gauge), ``ann.engine``/``index.engine`` (coarse vs.
 re-rank span split), ``learn.trainer`` (step time, rows/s). Overhead is
 benchmarked by ``benchmarks/obs_bench.py`` (``BENCH_obs.json``); any
-bench target exports a flame view via ``benchmarks/run.py --profile``.
+bench target exports a flame view via ``benchmarks/run.py --profile``;
+cross-run headline numbers accumulate in ``BENCH_history.jsonl``
+(``benchmarks/history.py``) and are regression-gated by
+``scripts/check_perf.py``.
 """
 from repro.obs.registry import (Counter, Gauge, Histogram,  # noqa: F401
                                 HistogramSpec, MetricsRegistry,
                                 default_registry, set_default_registry)
-from repro.obs.trace import (Span, Tracer, active_tracer,  # noqa: F401
-                             no_tracing, span, tracing_active)
+from repro.obs.trace import (RequestTrace, Span,  # noqa: F401
+                             TailSampler, Tracer, active_tracer,
+                             deep_tracing_active, no_tracing, span,
+                             tracing_active)
+from repro.obs.events import (EVENT_FIELDS,  # noqa: F401
+                              FlightRecorder, default_flight_recorder,
+                              set_flight_recorder)
+from repro.obs.incident import IncidentManager  # noqa: F401
 from repro.obs.kernelstats import (KernelStats,  # noqa: F401
                                    get_kernel_stats, roofline_table,
                                    set_kernel_stats)

@@ -62,7 +62,7 @@ class PageHinkley:
 
     __slots__ = ("delta", "threshold", "min_samples", "two_sided",
                  "n", "mean", "_m_up", "_m_up_min", "_m_dn", "_m_dn_max",
-                 "alarms")
+                 "alarms", "side")
 
     def __init__(self, delta: float = 0.005, threshold: float = 0.1,
                  min_samples: int = 10, two_sided: bool = True):
@@ -73,6 +73,7 @@ class PageHinkley:
         self.min_samples = int(min_samples)
         self.two_sided = two_sided
         self.alarms = 0
+        self.side = ""        # direction of the last alarm: "up"/"down"
         self.reset()
 
     def reset(self):
@@ -104,6 +105,10 @@ class PageHinkley:
         self._m_dn += dev + self.delta
         self._m_dn_max = max(self._m_dn_max, self._m_dn)
         if self.n >= self.min_samples and self.stat > self.threshold:
+            up = self._m_up - self._m_up_min
+            down = (self._m_dn_max - self._m_dn) if self.two_sided \
+                else 0.0
+            self.side = "up" if up >= down else "down"
             self.alarms += 1
             self.reset()
             return True
@@ -120,7 +125,7 @@ class Cusum:
     """
 
     __slots__ = ("slack", "threshold", "warmup", "mu0", "n",
-                 "_s_pos", "_s_neg", "alarms")
+                 "_s_pos", "_s_neg", "alarms", "side")
 
     def __init__(self, slack: float = 0.005, threshold: float = 0.1,
                  warmup: int = 10, mu0: float = None):
@@ -131,6 +136,7 @@ class Cusum:
         self.warmup = 0 if mu0 is not None else int(warmup)
         self.mu0 = float(mu0) if mu0 is not None else 0.0
         self.alarms = 0
+        self.side = ""        # direction of the last alarm: "up"/"down"
         self.n = 0
         self._s_pos = 0.0
         self._s_neg = 0.0
@@ -156,6 +162,7 @@ class Cusum:
         self._s_pos = max(0.0, self._s_pos + (x - self.mu0 - self.slack))
         self._s_neg = max(0.0, self._s_neg + (self.mu0 - x - self.slack))
         if self.stat > self.threshold:
+            self.side = "up" if self._s_pos >= self._s_neg else "down"
             self.alarms += 1
             self.reset()
             return True

@@ -53,7 +53,11 @@ def to_prometheus(registry: MetricsRegistry = None) -> str:
     scrapes (rate()/histogram_quantile() break on appearing/disappearing
     ``le`` labels); each metric carries a ``# HELP`` line (the dotted
     registry name, which is how the code refers to it) ahead of its
-    ``# TYPE``.
+    ``# TYPE``. Histogram buckets holding an exemplar (a retained
+    flight-recorder trace pinned via ``Histogram.exemplar``) carry an
+    OpenMetrics-style annotation ``# {trace_id="..."} <value>`` — the
+    link from a latency bucket back to the concrete trace that landed
+    there.
     """
     reg = registry if registry is not None else default_registry()
     lines = []
@@ -75,7 +79,10 @@ def to_prometheus(registry: MetricsRegistry = None) -> str:
         for i, cnt in enumerate(h.counts):
             cum += cnt
             le = h.spec.bucket_bounds(i)[1]
-            lines.append(f'{n}_bucket{{le="{le:.6g}"}} {cum}')
+            ex = h.exemplars.get(i)
+            tail = (f' # {{trace_id="{ex[1]}"}} {ex[0]:.6g}'
+                    if ex is not None else "")
+            lines.append(f'{n}_bucket{{le="{le:.6g}"}} {cum}{tail}')
         lines.append(f'{n}_bucket{{le="+Inf"}} {h.count}')
         lines.append(f"{n}_sum {h.total}")
         lines.append(f"{n}_count {h.count}")

@@ -210,10 +210,22 @@ def set_kernel_stats(ks: KernelStats) -> KernelStats:
 
 def record(family: str, traced: bool = False, **dims):
     """Record one dispatch into the global accumulator — the hook
-    ``kernels/ops.py`` calls. No-op while the default metrics registry
-    is disabled (the one switch that silences all of repro.obs)."""
+    ``kernels/ops.py`` calls — and append a point event to the flight
+    recorder (so the per-request story includes which kernels fired and
+    in what order). No-op while the default metrics registry is
+    disabled (the one switch that silences all of repro.obs)."""
     if default_registry().enabled:
         _DEFAULT.record(family, traced=traced, **dims)
+        _flight().record_kernel(family, traced)
+
+
+def _flight():
+    # late-bound so a set_flight_recorder swap is always respected;
+    # imported lazily to keep module import order flexible
+    from repro.obs.events import default_flight_recorder
+    global _flight
+    _flight = default_flight_recorder
+    return default_flight_recorder()
 
 
 def roofline_table(hw=None) -> dict:

@@ -5,10 +5,12 @@ metric kinds, all host-side and allocation-free on the hot path:
 
 * ``Counter`` — monotone int/float accumulator (``inc``).
 * ``Gauge``   — last-write-wins float (``set``).
-* ``Histogram`` — fixed log-spaced buckets: ``observe(v)`` is one log +
-  one list index, and p50/p95/p99 are derivable from the bucket counts
-  alone — no samples are ever stored, so memory is O(buckets) whatever
-  the traffic.
+* ``Histogram`` — fixed log-spaced buckets: ``observe(v)`` is one
+  C-level bisect over precomputed bucket edges + one list increment
+  (no ``math.log`` on the hot path), and p50/p95/p99 are derivable from
+  the bucket counts alone — no samples are ever stored, so memory is
+  O(buckets) whatever the traffic. ``exemplar(v, trace_id)`` pins a
+  retained flight-recorder trace to the bucket holding ``v``.
 
 A ``MetricsRegistry`` owns one namespace of metrics. There is a
 process-global default (``default_registry``) for code that doesn't
@@ -21,6 +23,7 @@ instance instead (the serving layer does). A registry built with
 from __future__ import annotations
 
 import math
+from bisect import bisect_left
 
 __all__ = ["Counter", "Gauge", "Histogram", "HistogramSpec",
            "MetricsRegistry", "NULL_COUNTER", "NULL_GAUGE",
@@ -65,7 +68,8 @@ class HistogramSpec:
     system produces within a ~19% relative error per bucket.
     """
 
-    __slots__ = ("lo", "hi", "growth", "n_buckets", "_log_lo", "_log_g")
+    __slots__ = ("lo", "hi", "growth", "n_buckets", "_log_lo", "_log_g",
+                 "_edges")
 
     def __init__(self, lo: float = 1e-6, hi: float = 1e3,
                  growth: float = 2.0 ** 0.25):
@@ -79,13 +83,16 @@ class HistogramSpec:
         self._log_g = math.log(growth)
         self.n_buckets = int(math.ceil(
             (math.log(hi) - self._log_lo) / self._log_g)) + 1
+        # precomputed upper edges of buckets 0..n-2: the hot-path lookup
+        # is a C-level bisect instead of a math.log per observe. The
+        # edge list is one short of n_buckets so any v past the last
+        # edge clamps into the final bucket for free.
+        self._edges = [math.exp(self._log_lo + self._log_g * (i + 1))
+                       for i in range(self.n_buckets - 1)]
 
     def bucket_index(self, v: float) -> int:
         """Bucket holding ``v`` (clamped to [0, n_buckets))."""
-        if v <= self.lo:
-            return 0
-        i = int((math.log(v) - self._log_lo) / self._log_g)
-        return min(i, self.n_buckets - 1)
+        return bisect_left(self._edges, v)
 
     def bucket_bounds(self, i: int):
         """(lower, upper) value edges of bucket ``i``; bucket 0's lower
@@ -106,27 +113,44 @@ class Histogram:
     ``percentile_bounds(q)`` returns both edges.
     """
 
-    __slots__ = ("name", "spec", "counts", "count", "total", "vmin",
-                 "vmax")
+    __slots__ = ("name", "spec", "counts", "total", "vmin",
+                 "vmax", "_edges", "exemplars")
 
     def __init__(self, name: str, spec: HistogramSpec = DEFAULT_SPEC):
         self.name = name
         self.spec = spec
         self.counts = [0] * spec.n_buckets
-        self.count = 0
         self.total = 0.0
         self.vmin = math.inf
         self.vmax = -math.inf
+        self._edges = spec._edges         # skip one attr hop per observe
+        self.exemplars: dict = {}         # bucket index -> (value, trace_id)
 
-    def observe(self, v: float):
-        """Record one value: one log, one list increment."""
-        self.counts[self.spec.bucket_index(v)] += 1
-        self.count += 1
+    def observe(self, v: float, _bisect=bisect_left):
+        """Record one value: one C-level bisect, one list increment,
+        one float add — the whole hot path. The total observation count
+        is derived from the buckets at read time (``count``), not
+        tracked per observe."""
+        self.counts[_bisect(self._edges, v)] += 1
         self.total += v
         if v < self.vmin:
             self.vmin = v
         if v > self.vmax:
             self.vmax = v
+
+    @property
+    def count(self) -> int:
+        """Total observations (bucket sum; O(buckets), read-time only)."""
+        return sum(self.counts)
+
+    def exemplar(self, v: float, trace_id):
+        """Attach an exemplar: remember ``trace_id`` as *the* retained
+        trace for the bucket holding ``v`` (last writer wins). Exported
+        as an OpenMetrics ``# {trace_id="..."}`` bucket annotation —
+        the link from a histogram tail to a concrete flight-recorder
+        trace. Call after ``observe(v)``; off the hot path (only
+        tail-retained requests pay it)."""
+        self.exemplars[bisect_left(self._edges, v)] = (v, trace_id)
 
     def percentile_bounds(self, q: float):
         """(lower, upper) edges of the bucket containing quantile ``q``
@@ -185,6 +209,9 @@ class _NullHistogram(Histogram):
     __slots__ = ()
 
     def observe(self, v):
+        """No-op."""
+
+    def exemplar(self, v, trace_id):
         """No-op."""
 
 

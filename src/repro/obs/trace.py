@@ -24,16 +24,40 @@ manager (near-zero cost — the hot path keeps its spans). Finished traces
 export to Chrome-trace / Perfetto JSON (``Tracer.dump``): load the file
 in ``chrome://tracing`` or https://ui.perfetto.dev to see a whole
 ingest→search→compact run as a flame view.
+
+Two tracer depths exist. A plain ``Tracer`` is **deep**: ``sp.sync``
+really blocks, so durations are execution-true — the profiling mode of
+``benchmarks/run.py --profile``. A ``RequestTrace`` (installed per
+request by ``TailSampler``) is **shallow**: spans are recorded with
+submission timings and ``sp.sync`` never blocks, so the always-on
+request span chains add no device barriers to the serving pipeline.
+Shallow spans are honestly labelled ``"sync": "async"`` — the
+sync-boundary invariant is never weakened, only the *blocking* is
+skipped. Code that must behave differently under real profiling (the
+engines' device-synced chunk paths) checks ``deep_tracing_active()``,
+not ``tracing_active()``.
+
+``TailSampler`` implements the retain-on-tail policy: every request is
+*recorded* (cheap shallow chain), but the full trace is *retained* only
+when the request lands in the slowest-quantile tail of past requests,
+raises, or is flagged by a quality monitor. Retention decisions use
+only (a) past observations and (b) one seeded RNG, so a replayed
+workload retains the same trace ids.
 """
 from __future__ import annotations
 
 import json
 import threading
 import time
+from collections import OrderedDict
 
 import jax
+import numpy as np
 
-__all__ = ["Span", "Tracer", "span", "tracing_active", "active_tracer",
+from .registry import Histogram, HistogramSpec, default_registry
+
+__all__ = ["Span", "Tracer", "RequestTrace", "TailSampler", "span",
+           "tracing_active", "deep_tracing_active", "active_tracer",
            "no_tracing"]
 
 _ACTIVE: "Tracer | None" = None
@@ -42,6 +66,13 @@ _ACTIVE: "Tracer | None" = None
 def tracing_active() -> bool:
     """Whether a tracer is currently installed (spans are recording)."""
     return _ACTIVE is not None
+
+
+def deep_tracing_active() -> bool:
+    """Whether a *deep* tracer is installed — one whose ``sp.sync``
+    really blocks. Engines use this to pick their device-synced
+    per-chunk paths; a shallow ``RequestTrace`` never triggers them."""
+    return _ACTIVE is not None and _ACTIVE.deep
 
 
 def active_tracer() -> "Tracer | None":
@@ -72,9 +103,13 @@ class Span:
 
     def sync(self, value):
         """Block until ``value`` (any pytree of arrays) is ready; marks
-        the span device-synced and returns ``value``."""
-        jax.block_until_ready(value)
-        self._synced = True
+        the span device-synced and returns ``value``. Under a shallow
+        tracer (``RequestTrace``) this is a passthrough — no block, no
+        synced mark — so always-on request tracing never serialises the
+        pipeline; the span stays labelled async, which is the truth."""
+        if self.tracer.deep:
+            jax.block_until_ready(value)
+            self._synced = True
         return value
 
     def set(self, **attrs):
@@ -167,6 +202,10 @@ class Tracer:
     which is exactly how chrome://tracing / Perfetto build flames.
     """
 
+    #: deep tracers make ``sp.sync`` really block (execution-true
+    #: durations); ``RequestTrace`` overrides this to False per instance.
+    deep = True
+
     def __init__(self):
         self.events: list[dict] = []      # finished spans, close order
         self._stacks: dict[int, list] = {}
@@ -240,3 +279,204 @@ class Tracer:
         with open(path, "w") as f:
             json.dump(self.to_chrome(), f)
         return path
+
+
+class RequestTrace(Tracer):
+    """Lightweight per-request span chain — the always-on tracer.
+
+    Shallow by default: spans record submission timings, ``sp.sync``
+    never blocks, and every span's ``args`` carry the request's
+    ``trace_id`` (the id exported as an exemplar link and stamped on
+    flight-recorder events). When an *outer deep* tracer is already
+    installed (``run.py --profile``), the request trace inherits
+    ``deep=True`` and forwards its finished spans — rebased onto the
+    outer clock — so profiling sees everything and loses nothing.
+    """
+
+    def __init__(self, trace_id: int, outer: "Tracer | None" = None):
+        super().__init__()
+        self.trace_id = trace_id
+        self._outer = outer
+        self.deep = outer.deep if outer is not None else False
+
+    def _pop(self, sp: Span, t1: float):
+        sp.args["trace_id"] = self.trace_id
+        super()._pop(sp, t1)
+        if self._outer is not None:
+            e = dict(self.events[-1])
+            e["ts"] += self._t0 - self._outer._t0
+            self._outer.events.append(e)
+
+
+class _Request:
+    """Handle for one sampled request (yielded by ``TailSampler.request``).
+
+    Inside the block a ``RequestTrace`` is installed, so every
+    ``span(...)`` down the call stack joins this request's chain. Call
+    ``set_key`` to choose the tail-ranking key (e.g. deadline-relative
+    lateness; defaults to wall duration), ``flag(reason)`` to force
+    retention (quality monitors do). After the block, ``retained`` /
+    ``reason`` say what the sampler decided.
+    """
+
+    __slots__ = ("sampler", "op", "attrs", "trace", "trace_id", "key",
+                 "_flags", "_t0", "retained", "reason")
+
+    def __init__(self, sampler: "TailSampler", op: str, attrs: dict):
+        self.sampler = sampler
+        self.op = op
+        self.attrs = attrs
+        self.trace_id = sampler._next_id()
+        self.key = None
+        self._flags = []
+        self.retained = False
+        self.reason = ""
+
+    def set_key(self, key: float):
+        """Set the tail-ranking key (higher = more worth retaining)."""
+        self.key = float(key)
+
+    def flag(self, reason: str):
+        """Force retention of this request's trace (e.g. a quality
+        monitor fired mid-request)."""
+        self._flags.append(str(reason))
+
+    def __enter__(self) -> "_Request":
+        outer = _ACTIVE
+        self.trace = RequestTrace(
+            self.trace_id, outer if outer is not None and outer.deep
+            else None)
+        self.trace.__enter__()
+        self._t0 = time.perf_counter()
+        return self
+
+    def __exit__(self, exc_type, exc, tb):
+        dur = time.perf_counter() - self._t0
+        self.trace.__exit__(exc_type, exc, tb)
+        self.sampler._finish(self, dur, exc_type)
+        return False                      # never swallow exceptions
+
+
+class _NullRequest:
+    """Shared no-op request handle (disabled ``TailSampler``)."""
+
+    __slots__ = ()
+    trace_id = 0
+    retained = False
+    reason = ""
+
+    def set_key(self, key):
+        """No-op."""
+
+    def flag(self, reason):
+        """No-op."""
+
+    def __enter__(self):
+        return self
+
+    def __exit__(self, exc_type, exc, tb):
+        return False
+
+
+_NULL_REQUEST = _NullRequest()
+
+
+class TailSampler:
+    """Tail-based trace retention: record everything, keep the tail.
+
+    Every ``request(...)`` gets a shallow ``RequestTrace`` (cheap, no
+    device barriers). On close, the trace is **retained** only when:
+
+    * ``slow`` — its key lands above the ``quantile`` of all *past*
+      request keys (a reservoir of the slowest tail; keys default to
+      wall duration, the serving layer uses deadline-relative lateness);
+    * ``error`` — the block raised;
+    * ``flagged`` — something called ``handle.flag(...)`` (quality
+      monitors wire their drift callbacks here);
+    * ``sampled`` — a seeded coin (``sample_rate``) kept it as a
+      baseline exemplar of normal traffic.
+
+    Determinism: the slow threshold is computed from past observations
+    *before* the new key is recorded, trace ids are a per-sampler
+    monotone counter, and the coin is a seeded ``default_rng`` — a
+    replayed workload makes identical retention decisions
+    (``tests/test_flight.py`` pins this). Retained traces live in an
+    LRU capped at ``max_retained``; ``flight.requests`` /
+    ``flight.retained`` counters land in the registry.
+    """
+
+    def __init__(self, quantile: float = 0.95, max_retained: int = 32,
+                 min_count: int = 20, sample_rate: float = 0.0,
+                 seed: int = 0, registry=None, enabled: bool = True):
+        if not 0.0 < quantile < 1.0:
+            raise ValueError(f"quantile must be in (0,1), got {quantile}")
+        self.enabled = enabled
+        self.quantile = float(quantile)
+        self.max_retained = int(max_retained)
+        self.min_count = int(min_count)
+        self.sample_rate = float(sample_rate)
+        self._rng = np.random.default_rng(seed)
+        # past request keys; keys can be negative (early vs deadline) —
+        # those clamp into bucket 0, which only sharpens the tail.
+        self._keys = Histogram("flight.request_key",
+                               HistogramSpec(lo=1e-6, hi=1e4))
+        self.retained: "OrderedDict[int, dict]" = OrderedDict()
+        self._id = 0
+        reg = registry if registry is not None else default_registry()
+        self._c_requests = reg.counter("flight.requests")
+        self._c_retained = reg.counter("flight.retained")
+
+    def _next_id(self) -> int:
+        self._id += 1
+        return self._id
+
+    def request(self, op: str, **attrs):
+        """Open a sampled request block: ``with sampler.request("search")
+        as rq:``. See ``_Request`` for the handle API. A sampler built
+        with ``enabled=False`` returns a shared no-op handle (no
+        request trace, no retention, no counters) — the off switch the
+        flight-overhead bench measures against."""
+        if not self.enabled:
+            return _NULL_REQUEST
+        return _Request(self, op, dict(attrs))
+
+    def threshold(self) -> float:
+        """Current slow-tail key threshold (inf during warmup)."""
+        if self._keys.count < self.min_count:
+            return float("inf")
+        return self._keys.percentile(self.quantile)
+
+    def _finish(self, rq: _Request, dur: float, exc_type):
+        key = rq.key if rq.key is not None else dur
+        if exc_type is not None:
+            reason = "error"
+            rq.attrs["error"] = exc_type.__name__
+        elif rq._flags:
+            reason = "flagged:" + ",".join(rq._flags)
+        elif key >= self.threshold():
+            reason = "slow"
+        elif self.sample_rate > 0.0 and \
+                self._rng.random() < self.sample_rate:
+            reason = "sampled"
+        else:
+            reason = ""
+        self._keys.observe(key)           # after the decision: past-only
+        self._c_requests.inc()
+        if reason:
+            self._retain(rq, reason, key, dur)
+        rq.retained = bool(reason)
+        rq.reason = reason
+
+    def _retain(self, rq: _Request, reason: str, key: float, dur: float):
+        self.retained[rq.trace_id] = {
+            "trace_id": rq.trace_id, "op": rq.op, "reason": reason,
+            "key": key, "dur": dur, "attrs": rq.attrs,
+            "events": rq.trace.events}
+        self._c_retained.inc()
+        while len(self.retained) > self.max_retained:
+            self.retained.popitem(last=False)
+
+    def retained_traces(self) -> list:
+        """Retained trace records, oldest first — what an incident
+        bundle captures and ``obs.export`` links exemplars against."""
+        return list(self.retained.values())

@@ -35,6 +35,19 @@ invalidation and warmup-compile counters, and a padding-waste gauge.
 The old ad-hoc ``stats`` dict survives as a read-only compat property
 derived from the counters. ``flush``/``classify`` also open tracing
 spans when a ``repro.obs.Tracer`` is installed.
+
+Flight recorder: every endpoint additionally appends a structured
+event (op, queue/start/sync timestamps, batch shape, cache hits, store
+generation, outcome, trace id) to an always-on ``obs.FlightRecorder``
+ring, and ``flush``/``classify`` run under a ``TailSampler`` request:
+each gets a shallow span chain, and the full trace is retained when the
+request lands in the slow tail — keyed by *deadline-relative lateness*
+(oldest ticket age minus ``cfg.deadline_s``, so "slow" means late
+against the SLO, not merely large) — errors, or is flagged by a quality
+monitor. Retained requests pin exemplars (their trace id) onto the
+``serve.flush_s`` histogram buckets, and when an ``IncidentManager`` is
+attached (``incidents`` field, or just a directory string) endpoint
+errors and drift alarms dump full incident bundles.
 """
 from __future__ import annotations
 
@@ -49,7 +62,8 @@ import jax.numpy as jnp
 from repro.ann.engine import SearchConfig
 from repro.core import packing as _packing
 from repro.kernels import ops as _ops
-from repro.obs import MetricsRegistry, span
+from repro.obs import (MetricsRegistry, TailSampler,
+                       default_flight_recorder, span)
 
 __all__ = ["AnnServiceConfig", "AnnService"]
 
@@ -69,6 +83,7 @@ class AnnServiceConfig:
     fused: bool = True             # single-pass fused scored kernel
     table_dtype: str = "auto"      # auto | f32 | bf16 | int8 (fused only)
     autotune_warmup: bool = False  # warmup also tunes kernel block sizes
+    deadline_s: float = 0.050      # per-flush SLO; lateness keys the tail
 
 
 @dataclass
@@ -80,6 +95,9 @@ class AnnService:
     classifier: object = None     # learn.PackedLinearModel (optional)
     registry: object = None       # obs.MetricsRegistry (own one if None)
     quality: object = None        # True | QualityConfig | QualityMonitors
+    flight: object = None         # obs.FlightRecorder (global if None)
+    sampler: object = None        # obs.TailSampler (own one if None)
+    incidents: object = None      # obs.IncidentManager | directory str
 
     def __post_init__(self):
         self._queue = []          # [(ticket, vector [D])]
@@ -106,6 +124,17 @@ class AnnService:
         self._h_classify = reg.histogram("serve.classify_s")
         self._g_pending = reg.gauge("serve.pending")
         self._g_waste = reg.gauge("serve.padding_waste")
+        if self.flight is None:
+            self.flight = default_flight_recorder()
+        if self.sampler is None:
+            self.sampler = TailSampler(registry=reg)
+        if isinstance(self.incidents, str):
+            from repro.obs import IncidentManager
+            self.incidents = IncidentManager(
+                self.incidents, flight=self.flight, sampler=self.sampler,
+                registry=reg, generation_fn=lambda: getattr(
+                    self.engine, "generation", 0))
+        self._drift_flags = []    # series that alarmed since last request
         if self.quality is not None:
             from repro.obs.quality import QualityConfig, QualityMonitors
             if self.quality is True:
@@ -117,6 +146,17 @@ class AnnService:
             # subscribe the shadow reservoir to store delete events
             if getattr(self.engine, "quality", None) is not self.quality:
                 self.engine.attach_quality(self.quality)
+            # drift alarms flag the in-flight request for trace
+            # retention and (when wired) dump an incident bundle
+            self.quality.on_drift(self._on_drift)
+            if self.incidents is not None and \
+                    getattr(self.incidents, "quality", None) is None:
+                self.incidents.quality = self.quality
+
+    def _on_drift(self, series: str, value: float, detector):
+        self._drift_flags.append(series)
+        if self.incidents is not None:
+            self.incidents.on_drift(series, value, detector)
 
     @property
     def stats(self):
@@ -161,12 +201,23 @@ class AnnService:
                             "add/delete/upsert")
         return self.engine
 
+    def _mut_event(self, op: str, t0: float, batch: int = 0,
+                   outcome: str = "ok"):
+        """One flight event for a mutation endpoint (generation read
+        *after* the mutation, so the event carries the new one)."""
+        self.flight.record(op, t0, time.perf_counter(), batch=batch,
+                           generation=getattr(self.engine,
+                                              "generation", 0),
+                           outcome=outcome)
+
     def add(self, x, ids=None):
         """Ingest vectors [m, D]; returns their external ids. The result
         cache invalidates on the next flush (generation bump)."""
+        t0 = time.perf_counter()
         out = self._mutable().add(x, ids=ids)
         if self.quality is not None:
             self.quality.offer_rows(out, x)
+        self._mut_event("serve.add", t0, batch=len(np.asarray(out)))
         return out
 
     def bulk_load(self, x, ids=None, chunk_rows: int = 2048):
@@ -176,25 +227,36 @@ class AnnService:
         words written back, O(batch) tail appends. Returns the external
         ids int64 [m]; the result cache invalidates on the next flush.
         """
+        t0 = time.perf_counter()
         out = self._mutable().ingest(x, ids=ids, chunk_rows=chunk_rows,
                                      impl=self.cfg.impl)
         if self.quality is not None:
             self.quality.offer_rows(out, x)
+        self._mut_event("serve.bulk_load", t0, batch=len(np.asarray(out)))
         return out
 
     def delete(self, ids, strict: bool = True) -> int:
         """Tombstone external ids; the quality bundle's shadow reservoir
         (if attached) drops them via the store's delete listener."""
-        return self._mutable().delete(ids, strict=strict)
+        t0 = time.perf_counter()
+        n = self._mutable().delete(ids, strict=strict)
+        self._mut_event("serve.delete", t0, batch=int(n))
+        return n
 
     def upsert(self, ids, x):
+        t0 = time.perf_counter()
         out = self._mutable().upsert(ids, x)
         if self.quality is not None:
             self.quality.offer_rows(out, x)
+        self._mut_event("serve.upsert", t0, batch=len(np.asarray(out)))
         return out
 
     def compact(self, *args, **kwargs) -> dict:
-        return self._mutable().compact(*args, **kwargs)
+        t0 = time.perf_counter()
+        out = self._mutable().compact(*args, **kwargs)
+        self._mut_event("serve.compact", t0,
+                        batch=int(out.get("rows_dropped", 0)))
+        return out
 
     # -- classification endpoint ---------------------------------------------
     def set_classifier(self, model) -> "AnnService":
@@ -225,24 +287,42 @@ class AnnService:
         if x.ndim != 2:
             raise ValueError(f"classify takes a batch [m, D], got {x.shape}")
         t0 = time.perf_counter()
-        with span("serve.classify", rows=int(x.shape[0])) as sp:
-            preds, margs = [], []
-            max_b = self.cfg.buckets[-1]
-            for lo in range(0, x.shape[0], max_b):
-                sub = x[lo:lo + max_b]
-                n = sub.shape[0]
-                b = self._bucket_for(n)
-                if b > n:
-                    sub = jnp.pad(sub, ((0, b - n), (0, 0)))
-                codes = self.engine.encode_queries(sub, impl=self.cfg.impl)
-                words = _ops.pack_codes(codes, self.engine.store.bits,
-                                        impl=self.cfg.impl)
-                m = self.classifier.margins(words, impl=self.cfg.impl)
-                preds.append(np.asarray(
-                    self.classifier.predict_from_margins(m))[:n])
-                margs.append(np.asarray(sp.sync(m))[:, :n])
-            self._c_classified.inc(int(x.shape[0]))
-        self._h_classify.observe(time.perf_counter() - t0)
+        with self.sampler.request("classify", rows=int(x.shape[0])) as rq:
+            with span("serve.classify", rows=int(x.shape[0])) as sp:
+                try:
+                    preds, margs = [], []
+                    max_b = self.cfg.buckets[-1]
+                    for lo in range(0, x.shape[0], max_b):
+                        sub = x[lo:lo + max_b]
+                        n = sub.shape[0]
+                        b = self._bucket_for(n)
+                        if b > n:
+                            sub = jnp.pad(sub, ((0, b - n), (0, 0)))
+                        codes = self.engine.encode_queries(
+                            sub, impl=self.cfg.impl)
+                        words = _ops.pack_codes(
+                            codes, self.engine.store.bits,
+                            impl=self.cfg.impl)
+                        m = self.classifier.margins(
+                            words, impl=self.cfg.impl)
+                        preds.append(np.asarray(
+                            self.classifier.predict_from_margins(m))[:n])
+                        margs.append(np.asarray(sp.sync(m))[:, :n])
+                    self._c_classified.inc(int(x.shape[0]))
+                except Exception as e:
+                    if self.incidents is not None:
+                        self.incidents.capture(
+                            "error",
+                            f"classify: {type(e).__name__}: {e}")
+                    raise
+        t1 = time.perf_counter()
+        self._h_classify.observe(t1 - t0)
+        self.flight.record("serve.classify", t0, t1,
+                           batch=int(x.shape[0]),
+                           generation=self._cache_gen or 0,
+                           trace_id=rq.trace_id, synced=True)
+        if rq.retained:
+            self._h_classify.exemplar(t1 - t0, rq.trace_id)
         labels, margins = np.concatenate(preds), np.concatenate(margs, axis=1)
         qm = self.quality
         if qm is not None and qm.sample():
@@ -279,19 +359,43 @@ class AnnService:
         Queries are taken in arrival order, in slices of at most the
         largest bucket; cache hits are served host-side and only misses
         are padded up to a bucket shape and searched.
+
+        The whole flush runs as one tail-sampled request: its trace is
+        retained when the oldest ticket finishes later than
+        ``cfg.deadline_s`` past the current slow-quantile threshold,
+        when it raises (also captured as an incident bundle when an
+        ``IncidentManager`` is wired), or when a quality monitor
+        flagged drift since the last request.
         """
         t_flush = time.perf_counter()
-        with span("serve.flush", pending=len(self._queue)) as sp:
-            out = self._flush(sp)
-        self._h_flush.observe(time.perf_counter() - t_flush)
+        with self.sampler.request("search",
+                                  pending=len(self._queue)) as rq:
+            with span("serve.flush", pending=len(self._queue)) as sp:
+                try:
+                    out = self._flush(sp, rq)
+                except Exception as e:
+                    if self.incidents is not None:
+                        self.incidents.capture(
+                            "error", f"flush: {type(e).__name__}: {e}")
+                    raise
+            if self._drift_flags:
+                for s in self._drift_flags:
+                    rq.flag(s)
+                self._drift_flags = []
+        dur = time.perf_counter() - t_flush
+        self._h_flush.observe(dur)
+        if rq.retained:
+            self._h_flush.exemplar(dur, rq.trace_id)
         self._g_pending.set(len(self._queue))
         return out
 
-    def _flush(self, sp):
+    def _flush(self, sp, rq=None):
         out = {}
         cfg = self.cfg
         self._sync_cache_generation()
         max_b = cfg.buckets[-1]
+        max_age = 0.0
+        trace_id = rq.trace_id if rq is not None else 0
         while self._queue:
             batch = self._queue[:max_b]
             self._queue = self._queue[max_b:]
@@ -348,7 +452,15 @@ class AnnService:
                 # host transfer is the device sync for this batch's
                 # timing (np.asarray blocks on the result buffers)
                 ids, rho = np.asarray(sp.sync(ids)), np.asarray(rho)
-                self._h_batch.observe(time.perf_counter() - t_batch)
+                t_done = time.perf_counter()
+                self._h_batch.observe(t_done - t_batch)
+                self.flight.record(
+                    "serve.search", t_batch, t_done,
+                    t_queue=min(self._submit_ts.get(t, t_batch)
+                                for t, _ in batch),
+                    batch=b2, cache_hits=n - len(miss),
+                    generation=self._cache_gen or 0,
+                    trace_id=trace_id, synced=True)
                 for j, i in enumerate(miss):
                     res[i] = (ids[j], rho[j])
                     if cfg.cache_size:
@@ -365,10 +477,18 @@ class AnnService:
                 out[t] = r
                 t0 = self._submit_ts.pop(t, None)
                 if t0 is not None:
-                    self._h_age.observe(now - t0)
+                    age = now - t0
+                    self._h_age.observe(age)
+                    if age > max_age:
+                        max_age = age
             self._c_queries.inc(n)
             self._c_hits.inc(n - len(miss))
             self._c_misses.inc(len(miss))
+        if rq is not None:
+            # deadline-relative lateness keys the slow-tail reservoir:
+            # a flush is "slow" when its oldest ticket beat the SLO by
+            # less than its peers, not merely when it was large
+            rq.set_key(max_age - cfg.deadline_s)
         return out
 
     def warmup(self, d: int):

@@ -1,0 +1,414 @@
+"""repro.obs flight layer: ring-buffer wraparound, tail-sampling
+determinism under a fixed seed, incident round-trip through
+repro.checkpoint, exemplar <-> trace-id consistency in the OpenMetrics
+export, the perf-history change-point gate (scripts/check_perf.py), and
+the end-to-end drift-during-churn incident path through AnnService."""
+import json
+import os
+import sys
+
+import numpy as np
+import pytest
+import jax.numpy as jnp
+
+from repro.ann import BandSpec
+from repro.core.sketch import CodedRandomProjection, SketchConfig
+from repro.index import MutableAnnEngine
+from repro.obs import (EVENT_FIELDS, FlightRecorder, IncidentManager,
+                       MetricsRegistry, TailSampler, Tracer,
+                       default_flight_recorder, deep_tracing_active,
+                       set_flight_recorder, span, to_prometheus,
+                       tracing_active)
+
+_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+sys.path.insert(0, _ROOT)                      # benchmarks/
+sys.path.insert(0, os.path.join(_ROOT, "scripts"))   # check_perf
+
+D, K = 16, 16
+BAND = BandSpec(n_tables=4, band_width=4)
+
+
+def _crp():
+    return CodedRandomProjection(SketchConfig(k=K, scheme="2bit", w=0.75),
+                                 D)
+
+
+# -- flight-recorder ring -----------------------------------------------------
+
+def test_ring_capacity_rounds_to_pow2_and_append_order():
+    fr = FlightRecorder(capacity=100)        # rounds up to 128
+    assert fr.capacity == 128
+    for i in range(5):
+        seq = fr.record(f"op{i}", float(i), float(i) + 0.5, batch=i)
+        assert seq == i
+    assert len(fr) == 5 and not fr.wrapped and fr.dropped == 0
+    evs = fr.snapshot()
+    assert [e["op"] for e in evs] == [f"op{i}" for i in range(5)]
+    assert [e["seq"] for e in evs] == list(range(5))
+    assert set(EVENT_FIELDS) == set(evs[0])
+
+
+def test_ring_wraparound_keeps_newest_capacity_events():
+    fr = FlightRecorder(capacity=8)
+    for i in range(20):
+        fr.record("op", float(i), float(i), batch=i)
+    assert fr.capacity == 8 and len(fr) == 8
+    assert fr.wrapped and fr.dropped == 12
+    evs = fr.snapshot()
+    # exactly the newest 8, oldest first, seq contiguous
+    assert [e["seq"] for e in evs] == list(range(12, 20))
+    assert [e["batch"] for e in evs] == list(range(12, 20))
+    assert [e["batch"] for e in fr.tail(3)] == [17, 18, 19]
+
+
+def test_ring_disabled_and_reset():
+    fr = FlightRecorder(capacity=8, enabled=False)
+    assert fr.record("op", 0.0, 1.0) == -1
+    assert len(fr) == 0
+    fr.enabled = True
+    fr.record("op", 0.0, 1.0)
+    fr.record_kernel("pack_codes", traced=True)
+    evs = fr.snapshot()
+    assert len(evs) == 2
+    assert evs[1]["op"] == "kernel.pack_codes"
+    assert evs[1]["outcome"] == "traced"
+    fr.reset()
+    assert len(fr) == 0 and fr.seq == 0 and fr.dropped == 0
+
+
+def test_ring_events_filter_and_global_swap():
+    fr = FlightRecorder(capacity=16)
+    fr.record("a", 0.0, 1.0)
+    fr.record("b", 0.0, 1.0)
+    fr.record("a", 0.0, 1.0)
+    assert len(fr.events("a")) == 2 and len(fr.events("b")) == 1
+    prev = set_flight_recorder(fr)
+    try:
+        assert default_flight_recorder() is fr
+    finally:
+        set_flight_recorder(prev)
+    assert default_flight_recorder() is prev
+
+
+# -- tail sampler -------------------------------------------------------------
+
+def _run_workload(sampler):
+    """Deterministic mixed workload: mostly-fast requests with a slow
+    tail; returns the retained (trace_id, reason) pairs."""
+    keys = [0.001, 0.002, 0.001, 0.050, 0.002, 0.001] * 8
+    for k in keys:
+        with sampler.request("search") as rq:
+            rq.set_key(k)
+    return [(t["trace_id"], t["reason"])
+            for t in sampler.retained_traces()]
+
+
+def test_tail_sampling_deterministic_under_fixed_seed():
+    a = _run_workload(TailSampler(seed=3, sample_rate=0.05,
+                                  registry=MetricsRegistry()))
+    b = _run_workload(TailSampler(seed=3, sample_rate=0.05,
+                                  registry=MetricsRegistry()))
+    assert a == b and len(a) > 0            # replay == identical decisions
+
+
+def test_tail_sampler_retains_slow_tail_only():
+    s = TailSampler(quantile=0.9, min_count=10, registry=MetricsRegistry())
+    for i in range(40):
+        with s.request("search") as rq:
+            rq.set_key(1.0 if i == 30 else 0.001)
+    retained = s.retained_traces()
+    assert len(retained) >= 1
+    assert all(t["reason"] == "slow" for t in retained)
+    assert any(t["key"] == 1.0 for t in retained)
+    # warmup: nothing retained before min_count past observations
+    assert all(t["trace_id"] > 10 for t in retained)
+
+
+def test_tail_sampler_error_and_flag_retention():
+    s = TailSampler(registry=MetricsRegistry())
+    with pytest.raises(RuntimeError):
+        with s.request("search") as rq:
+            raise RuntimeError("boom")
+    assert rq.retained and rq.reason == "error"
+    with s.request("search") as rq2:
+        rq2.flag("collision.chi2")
+    assert rq2.retained and rq2.reason == "flagged:collision.chi2"
+    reasons = {t["reason"] for t in s.retained_traces()}
+    assert reasons == {"error", "flagged:collision.chi2"}
+    err = next(t for t in s.retained_traces() if t["reason"] == "error")
+    assert err["attrs"]["error"] == "RuntimeError"
+
+
+def test_tail_sampler_lru_cap_and_disabled_mode():
+    s = TailSampler(max_retained=4, registry=MetricsRegistry())
+    for i in range(10):
+        with s.request("op") as rq:
+            rq.flag("x")
+    assert len(s.retained_traces()) == 4
+    # newest survive
+    assert [t["trace_id"] for t in s.retained_traces()] == [7, 8, 9, 10]
+    off = TailSampler(enabled=False, registry=MetricsRegistry())
+    with off.request("op") as rq:
+        rq.set_key(100.0)
+        rq.flag("y")
+    assert not rq.retained and off.retained_traces() == []
+
+
+def test_request_trace_is_shallow_and_stamps_trace_id():
+    s = TailSampler(registry=MetricsRegistry())
+    with s.request("search") as rq:
+        assert tracing_active() and not deep_tracing_active()
+        with span("inner") as sp:
+            out = sp.sync(jnp.ones(4))     # passthrough: no block
+        rq.flag("keep")
+    np.testing.assert_array_equal(np.asarray(out), np.ones(4))
+    (t,) = s.retained_traces()
+    (ev,) = t["events"]
+    assert ev["name"] == "inner"
+    assert ev["args"]["trace_id"] == rq.trace_id
+    assert ev["args"]["sync"] == "async"   # honest label, never blocked
+
+
+def test_request_trace_forwards_to_outer_deep_tracer():
+    s = TailSampler(registry=MetricsRegistry())
+    with Tracer() as outer:
+        with s.request("search") as rq:
+            assert deep_tracing_active()   # inherits profiling depth
+            with span("inner") as sp:
+                sp.sync(jnp.ones(4))
+    names = [e["name"] for e in outer.events]
+    assert "inner" in names                # forwarded, nothing lost
+    inner = next(e for e in outer.events if e["name"] == "inner")
+    assert inner["args"]["trace_id"] == rq.trace_id
+    assert inner["args"]["sync"] == "device"
+
+
+# -- incident bundles through repro.checkpoint --------------------------------
+
+def test_incident_roundtrip_through_checkpoint(tmp_path):
+    fr = FlightRecorder(capacity=64)
+    for i in range(10):
+        fr.record("serve.search", float(i), float(i) + 0.5, batch=4,
+                  generation=2)
+    s = TailSampler(registry=MetricsRegistry())
+    with s.request("search") as rq:
+        rq.flag("drift")
+    reg = MetricsRegistry()
+    reg.counter("serve.queries").inc(7)
+    mgr = IncidentManager(str(tmp_path / "inc"), flight=fr, sampler=s,
+                          registry=reg, generation_fn=lambda: 2)
+    path = mgr.capture("drift", "collision.chi2 drifted",
+                       {"value": np.float32(1.5)})
+    assert path and mgr.steps() == [1]
+    b = mgr.load()
+    assert b["kind"] == "drift" and b["generation"] == 2
+    assert b["context"]["value"] == 1.5    # numpy scalar survives as float
+    assert len(b["events"]) == 10
+    assert b["events"][-1]["op"] == "serve.search"
+    assert b["registry"]["counters"]["serve.queries"] == 7
+    (t,) = b["traces"]
+    assert t["trace_id"] == rq.trace_id
+    assert t["reason"] == "flagged:drift"
+
+
+def test_incident_keep_retention_and_capture_never_raises(tmp_path):
+    mgr = IncidentManager(str(tmp_path / "inc"), flight=FlightRecorder(8),
+                          registry=MetricsRegistry(), keep=2)
+    for i in range(4):
+        assert mgr.capture("error", f"boom {i}")
+    assert mgr.steps() == [3, 4]           # keep=2 newest
+    assert mgr.load(4)["reason"] == "boom 3"
+    # a broken destination degrades to a counter, never raises
+    reg = MetricsRegistry()
+    bad = IncidentManager(str(tmp_path / "file"), registry=reg)
+    open(tmp_path / "file", "w").write("not a directory")
+    assert bad.capture("error", "x") == ""
+    assert reg.counters["obs.incident.capture_errors"].value == 1
+
+
+def test_incident_on_drift_callback_contract(tmp_path):
+    from repro.obs.drift import Cusum
+    mgr = IncidentManager(str(tmp_path / "inc"), flight=FlightRecorder(8),
+                          registry=MetricsRegistry())
+    det = Cusum(slack=0.1, threshold=0.5, warmup=2)
+    for v in (1.0, 1.0, 4.0, 4.0, 4.0):
+        det.update(v)
+    assert det.alarms >= 1 and det.side == "up"
+    mgr.on_drift("collision.chi2", 4.0, det)
+    b = mgr.load()
+    assert b["kind"] == "drift"
+    assert b["context"]["series"] == "collision.chi2"
+    assert b["context"]["side"] == "up"
+
+
+# -- exemplars ----------------------------------------------------------------
+
+def test_exemplar_trace_id_consistency_in_export():
+    reg = MetricsRegistry()
+    h = reg.histogram("serve.flush_s")
+    s = TailSampler(registry=reg)
+    with s.request("search") as rq:
+        rq.flag("slow-tail")
+    h.observe(0.2)
+    h.exemplar(0.2, rq.trace_id)
+    i = h.spec.bucket_index(0.2)
+    v, tid = h.exemplars[i]
+    assert v == 0.2 and tid == rq.trace_id
+    # the exemplar's trace id points at a retained trace
+    assert tid in {t["trace_id"] for t in s.retained_traces()}
+    text = to_prometheus(reg)
+    line = next(ln for ln in text.splitlines()
+                if f'trace_id="{rq.trace_id}"' in ln)
+    assert line.startswith("serve_flush_s_bucket")
+    assert "# {" in line and "0.2" in line
+
+
+# -- perf-history gate --------------------------------------------------------
+
+def test_history_append_load_series(tmp_path):
+    from benchmarks import history
+    p = str(tmp_path / "BENCH_history.jsonl")
+    rows = [("m_a", 10.0, "d"), ("m_b", 20.0, "d")]
+    history.append_history("benchmarks.x_bench", rows, quick=True, path=p)
+    history.append_history("benchmarks.x_bench", [("m_a", 11.0, "d")],
+                           quick=True, path=p)
+    history.append_history("benchmarks.x_bench", [("m_a", 99.0, "d")],
+                           quick=False, path=p)
+    recs = history.load_history(p)
+    assert len(recs) == 3 and recs[0]["module"] == "x_bench"
+    assert history.series(recs, "m_a", quick=True) == [10.0, 11.0]
+    assert history.series(recs, "m_a", quick=False) == [99.0]  # never mix
+    assert history.metric_names(recs) == ["m_a", "m_b"]
+
+
+def test_check_perf_flags_2x_regression_no_false_alarms(tmp_path):
+    import check_perf
+    rng = np.random.default_rng(0)
+    noise = rng.normal(0.0, 0.05, size=24)
+    stationary = [100.0 * float(np.exp(e)) for e in noise]
+    v = check_perf.analyze(stationary)
+    assert not v["regressed"] and not v["alarms"]      # zero false alarms
+    jumped = [x * (2.0 if i >= 16 else 1.0)
+              for i, x in enumerate(stationary)]
+    v = check_perf.analyze(jumped)
+    assert v["regressed"] and v["gating"]
+    assert all(s == "up" for _, s in v["alarms"])
+    # an improvement is recognized, never fatal
+    shrunk = [x * (0.5 if i >= 16 else 1.0)
+              for i, x in enumerate(stationary)]
+    v = check_perf.analyze(shrunk)
+    assert v["improved"] and not v["regressed"]
+
+
+def test_check_perf_gate_exit_codes(tmp_path):
+    import check_perf
+    from benchmarks import history
+    p = str(tmp_path / "BENCH_history.jsonl")
+    # synthetic trajectory: stationary metric + one that regresses 2x
+    rng = np.random.default_rng(1)
+    for i in range(8):
+        jitter = float(np.exp(rng.normal(0.0, 0.03)))
+        rows = [("flat_us", 50.0 * jitter, ""),
+                ("slow_us", 10.0 * jitter * (2.0 if i >= 5 else 1.0), "")]
+        history.append_history("benchmarks.y_bench", rows, quick=True,
+                               path=p)
+    assert check_perf.check(p, min_points=5, quick=True,
+                            out=open(os.devnull, "w")) == 1
+    # short series stay report-only (non-blocking)
+    assert check_perf.check(p, min_points=99, quick=True,
+                            out=open(os.devnull, "w")) == 0
+    # missing history: clean no-op under --quick, error otherwise
+    missing = str(tmp_path / "nope.jsonl")
+    assert check_perf.check(missing, quick=True,
+                            out=open(os.devnull, "w")) == 0
+    assert check_perf.check(missing, quick=False,
+                            out=open(os.devnull, "w")) == 1
+
+
+# -- end to end through the service -------------------------------------------
+
+def test_service_flush_events_and_tail_retention():
+    rng = np.random.default_rng(21)
+    eng = MutableAnnEngine(_crp(), band_spec=BAND, tail_rows=64)
+    fr = FlightRecorder(capacity=256)
+    from repro.serve import AnnService, AnnServiceConfig
+    svc = AnnService(eng, AnnServiceConfig(top_k=3, buckets=(1, 4),
+                                           cache_size=0),
+                     flight=fr,
+                     sampler=TailSampler(min_count=2, quantile=0.5,
+                                         registry=MetricsRegistry()))
+    svc.add(jnp.asarray(rng.normal(size=(20, D)), jnp.float32))
+    for _ in range(6):
+        svc.submit(jnp.asarray(rng.normal(size=(D,)), jnp.float32))
+        svc.flush()
+    ops = [e["op"] for e in fr.snapshot()]
+    assert "serve.add" in ops
+    assert ops.count("serve.search") >= 6
+    ev = fr.events("serve.search")[-1]
+    assert ev["synced"] is True            # post-host-transfer timestamp
+    assert ev["batch"] >= 1 and ev["generation"] >= 0
+    # retained flush traces pin exemplars with their trace ids
+    retained = svc.sampler.retained_traces()
+    if retained:
+        tids = {t["trace_id"] for t in retained}
+        for v, tid in svc._h_flush.exemplars.values():
+            assert tid in tids
+
+
+def test_forced_drift_during_churn_dumps_restorable_incident(tmp_path):
+    """Acceptance path: a drift trigger mid-churn produces an incident
+    bundle that restores to a readable registry + trace set."""
+    rng = np.random.default_rng(23)
+    eng = MutableAnnEngine(_crp(), band_spec=BAND, tail_rows=64)
+    from repro.serve import AnnService, AnnServiceConfig
+    svc = AnnService(eng, AnnServiceConfig(top_k=3, buckets=(1, 4),
+                                           cache_size=0),
+                     flight=FlightRecorder(capacity=256),
+                     sampler=TailSampler(registry=MetricsRegistry()),
+                     incidents=str(tmp_path / "inc"))
+    ids = svc.add(jnp.asarray(rng.normal(size=(40, D)), jnp.float32))
+    svc.submit(jnp.asarray(rng.normal(size=(D,)), jnp.float32))
+    svc.flush()
+    svc.delete(ids[:10])                   # churn
+    # force a drift alarm mid-churn (the DriftMonitor callback contract)
+    from repro.obs.drift import Cusum
+    det = Cusum(slack=0.1, threshold=0.5, warmup=2)
+    for v in (1.0, 1.0, 5.0, 5.0):
+        det.update(v)
+    svc._on_drift("collision.chi2", 5.0, det)
+    # the alarm flags the NEXT request for trace retention
+    svc.submit(jnp.asarray(rng.normal(size=(D,)), jnp.float32))
+    svc.flush()
+    flagged = [t for t in svc.sampler.retained_traces()
+               if t["reason"].startswith("flagged:")]
+    assert flagged and "collision.chi2" in flagged[0]["reason"]
+    # the bundle round-trips: readable registry, events, trace set
+    assert svc.incidents.steps() == [1]
+    b = svc.incidents.load()
+    assert b["kind"] == "drift"
+    assert b["context"]["series"] == "collision.chi2"
+    assert b["generation"] == eng.generation
+    assert any(e["op"] == "serve.search" for e in b["events"])
+    assert isinstance(b["registry"]["counters"], dict)
+    json.dumps(b)                          # self-contained, serializable
+
+
+def test_service_error_dumps_incident_and_retains_trace(tmp_path):
+    rng = np.random.default_rng(29)
+    eng = MutableAnnEngine(_crp(), band_spec=BAND, tail_rows=64)
+    from repro.serve import AnnService, AnnServiceConfig
+    svc = AnnService(eng, AnnServiceConfig(top_k=3, buckets=(1,),
+                                           cache_size=0),
+                     flight=FlightRecorder(capacity=64),
+                     sampler=TailSampler(registry=MetricsRegistry()),
+                     incidents=str(tmp_path / "inc"))
+    svc.add(jnp.asarray(rng.normal(size=(8, D)), jnp.float32))
+    svc.submit(jnp.asarray(rng.normal(size=(D,)), jnp.float32))
+    svc.engine.search_codes = None         # break the engine mid-flight
+    with pytest.raises(TypeError):
+        svc.flush()
+    (t,) = [t for t in svc.sampler.retained_traces()
+            if t["reason"] == "error"]
+    assert t["attrs"]["error"] == "TypeError"
+    b = svc.incidents.load()
+    assert b["kind"] == "error" and "flush" in b["reason"]

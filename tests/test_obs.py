@@ -1,9 +1,11 @@
 """repro.obs: histogram bucket math and percentile bounds, span
 nesting/exception safety and the sync-boundary invariant, disabled-mode
 no-op metrics, kernel-stat byte models vs the kernels/ref.py oracle
-shapes, exporters, and the instrumented serving/ingest/index layers."""
+shapes, exporters, the instrumented serving/ingest/index layers, and
+the committed full-cycle trace artifact (TRACE_obs_cycle.json)."""
 import json
 import math
+import os
 
 import numpy as np
 import pytest
@@ -441,6 +443,46 @@ def test_traced_search_emits_scored_spans():
     assert tr2.total("search.fused") == 0
     np.testing.assert_array_equal(np.asarray(ids_two),
                                   np.asarray(ids_plain))
+
+
+def test_obs_cycle_trace_artifact_min_events_and_nesting():
+    """The committed TRACE_obs_cycle.json (regenerated by
+    benchmarks/obs_bench.py) covers the full service cycle — ingest,
+    search, classify, learn, compact — and its spans nest properly:
+    same-track spans are either disjoint or fully contained (the
+    timestamp-containment encoding Perfetto builds flames from)."""
+    path = os.path.join(os.path.dirname(os.path.dirname(
+        os.path.abspath(__file__))), "TRACE_obs_cycle.json")
+    doc = json.load(open(path))
+    evs = doc["traceEvents"]
+    assert len(evs) >= 18                  # full cycle, not a stub
+    names = {e["name"] for e in evs}
+    assert {"encode.ingest", "encode.chunk", "serve.flush",
+            "serve.classify", "learn.fit", "index.compact"} <= names
+    assert any(n.startswith("search.") for n in names)
+    for e in evs:
+        assert e["ph"] == "X" and e["dur"] >= 0
+        assert e["args"]["sync"] in ("device", "async")
+    # pairwise nesting per track: overlap implies containment
+    by_tid = {}
+    for e in evs:
+        by_tid.setdefault(e["tid"], []).append(e)
+    for track in by_tid.values():
+        for i, a in enumerate(track):
+            for b in track[i + 1:]:
+                a0, a1 = a["ts"], a["ts"] + a["dur"]
+                b0, b1 = b["ts"], b["ts"] + b["dur"]
+                eps = 1.0                  # us rounding slop
+                overlap = a0 < b1 and b0 < a1
+                contained = (a0 >= b0 - eps and a1 <= b1 + eps) or \
+                            (b0 >= a0 - eps and b1 <= a1 + eps)
+                assert not overlap or contained, (a["name"], b["name"])
+    # ingest chunks nest inside their ingest span
+    ing = next(e for e in evs if e["name"] == "encode.ingest")
+    for e in evs:
+        if e["name"] == "encode.chunk":
+            assert ing["ts"] - 1.0 <= e["ts"]
+            assert e["ts"] + e["dur"] <= ing["ts"] + ing["dur"] + 1.0
 
 
 def test_immutable_engine_traced_scored_split_matches_untraced():
