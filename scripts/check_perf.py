@@ -107,6 +107,37 @@ def check(path=None, min_points=5, quick=False, out=sys.stdout) -> int:
     return 0
 
 
+def explain(path=None, min_points=5, out=sys.stdout) -> int:
+    """Arming report: for every series, how many points exist and how
+    many more are needed before the gate arms (``min_points``). This is
+    the one-line answer to "why didn't the perf gate block that
+    regression?" — a fresh history (CI appends one quick run per build)
+    spends its first ``min_points`` builds report-only."""
+    records = _history.load_history(path)
+    if not records:
+        print("check_perf --explain: no bench history yet — every "
+              f"series needs {min_points} points to arm", file=out)
+        return 0
+    rows = []
+    for flavor in (True, False):          # quick/full series never mix
+        tag = "quick" if flavor else "full"
+        for name in _history.metric_names(records):
+            n = len(_history.series(records, name, quick=flavor))
+            if n == 0:
+                continue
+            need = max(0, min_points - n)
+            rows.append((tag, name, n, need))
+    armed = sum(1 for *_, need in rows if need == 0)
+    print(f"check_perf --explain: {len(records)} runs on record; "
+          f"{armed}/{len(rows)} series armed "
+          f"(min_points={min_points})", file=out)
+    for tag, name, n, need in rows:
+        state = ("ARMED" if need == 0
+                 else f"{need} more point(s) until armed")
+        print(f"  [{tag}] {name}: {n} point(s) — {state}", file=out)
+    return 0
+
+
 def selftest() -> int:
     """Synthetic protocol: zero false alarms on stationary series,
     guaranteed detection of an injected 2x latency jump — across seeds
@@ -155,11 +186,15 @@ def main(argv=None) -> int:
                          "short series stay non-blocking")
     ap.add_argument("--selftest", action="store_true",
                     help="run the synthetic detection protocol and exit")
+    ap.add_argument("--explain", action="store_true",
+                    help="print per-series points-until-armed and exit")
     ap.add_argument("--json", action="store_true",
                     help="also dump per-series verdicts as JSON")
     args = ap.parse_args(argv)
     if args.selftest:
         return selftest()
+    if args.explain:
+        return explain(args.history, min_points=args.min_points)
     code = check(args.history, min_points=args.min_points,
                  quick=args.quick)
     if args.json:

@@ -1,0 +1,148 @@
+"""CI self-test for the closed-loop health layer (``repro.obs.slo``).
+
+Synthetic drill protocol, mirroring ``check_perf --selftest``: drive an
+``SloEngine`` on a fake clock through three scripted scenarios and
+demand the *correct* alert (or none) each time:
+
+1. **stationary** — seeded jittered traffic well inside every budget
+   for 400 virtual seconds must produce ZERO alerts (the false-alarm
+   gate; a pager that cries wolf gets muted and then misses the real
+   incident);
+2. **latency step** — an injected 2x latency step (all requests late)
+   must trip ``slo.search.latency`` within the fast (60 s) window, and
+   nothing else;
+3. **recall drop** — an injected quality collapse (shadow recall 0.1
+   against a 0.8 floor) must trip ``slo.search.quality`` within the
+   fast window, and no latency alert.
+
+Exit 0 only when all three behave. Optionally writes the ops dashboard
+of the final drill state with ``--dashboard out.html`` so CI archives a
+rendered artifact every run.
+"""
+import argparse
+import math
+import os
+import sys
+
+import numpy as np
+
+_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+sys.path.insert(0, os.path.join(_ROOT, "src"))
+
+from repro.obs import MetricsRegistry, SloEngine, SloSpec  # noqa: E402
+
+
+class _Clock:
+    def __init__(self):
+        self.t = 0.0
+
+    def __call__(self):
+        return self.t
+
+
+def _engine(clock):
+    reg = MetricsRegistry()
+    slo = SloEngine(registry=reg, clock=clock, resolution=1.0)
+    slo.add(SloSpec("search", latency_hist="serve.flush_s",
+                    latency_target_s=0.050,
+                    error_counter="serve.flush_errors",
+                    quality_min=0.8))
+    fired = []
+    slo.subscribe(lambda series, value, det: fired.append(series))
+    return reg, slo, fired
+
+
+def _stationary(reg, slo, clock, rng, seconds, qps=40):
+    h = reg.histogram("serve.flush_s")
+    for _ in range(seconds):
+        for v in rng.lognormal(math.log(0.025), 0.25, size=qps):
+            h.observe(float(v))
+        if rng.random() < 0.3:
+            slo.observe_quality("search", float(rng.uniform(0.85, 1.0)))
+        clock.t += 1.0
+        slo.tick()
+
+
+def drill_stationary(seed=0):
+    clock = _Clock()
+    reg, slo, fired = _engine(clock)
+    _stationary(reg, slo, clock, np.random.default_rng(seed), 400)
+    ok = not fired and slo.health()["status"] == "ok"
+    return ok, fired, slo, ("stationary 400 s: "
+                            + ("no alerts" if ok else f"ALERTS {fired}"))
+
+
+def drill_latency_step(seed=0):
+    clock = _Clock()
+    reg, slo, fired = _engine(clock)
+    _stationary(reg, slo, clock, np.random.default_rng(seed), 90)
+    h = reg.histogram("serve.flush_s")
+    t0, t_alert = clock.t, math.nan
+    for _ in range(120):                  # 2x step: every request late
+        for _ in range(40):
+            h.observe(0.100)
+        clock.t += 1.0
+        slo.tick()
+        if fired and math.isnan(t_alert):
+            t_alert = clock.t
+            break
+    ok = (fired[:1] == ["slo.search.latency"]
+          and t_alert - t0 <= 60.0
+          and slo.health()["status"] == "degraded")
+    return ok, fired, slo, (f"latency 2x step: alert {fired} after "
+                            f"{t_alert - t0:.0f} s (fast window 60 s)")
+
+
+def drill_recall_drop(seed=0):
+    clock = _Clock()
+    reg, slo, fired = _engine(clock)
+    _stationary(reg, slo, clock, np.random.default_rng(seed), 90)
+    t0, t_alert = clock.t, math.nan
+    h = reg.histogram("serve.flush_s")
+    for _ in range(120):                  # latency stays healthy...
+        for _ in range(40):
+            h.observe(0.025)
+        for _ in range(3):                # ...but recall collapses
+            slo.observe_quality("search", 0.1)
+        clock.t += 1.0
+        slo.tick()
+        if fired and math.isnan(t_alert):
+            t_alert = clock.t
+            break
+    ok = (fired[:1] == ["slo.search.quality"]
+          and t_alert - t0 <= 60.0
+          and "slo.search.latency" not in fired)
+    return ok, fired, slo, (f"recall drop: alert {fired} after "
+                            f"{t_alert - t0:.0f} s (fast window 60 s)")
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--dashboard", default="",
+                    help="also write the final drill's dashboard HTML")
+    ap.add_argument("--seeds", type=int, default=3,
+                    help="seeds per scenario (default 3)")
+    args = ap.parse_args(argv)
+    bad = 0
+    last_slo = None
+    for seed in range(args.seeds):
+        for drill in (drill_stationary, drill_latency_step,
+                      drill_recall_drop):
+            ok, fired, slo, msg = drill(seed)
+            last_slo = slo
+            print(f"  seed {seed} {drill.__name__}: "
+                  f"{'PASS' if ok else 'FAIL'} — {msg}")
+            if not ok:
+                bad += 1
+    if args.dashboard and last_slo is not None:
+        from repro.obs import gather, write_dashboard
+        write_dashboard(args.dashboard,
+                        gather(registry=last_slo.registry, slo=last_slo))
+        print(f"  dashboard -> {args.dashboard}")
+    print(f"slo selftest: {'FAIL' if bad else 'PASS'} "
+          f"({args.seeds} seeds x stationary/latency-step/recall-drop)")
+    return 1 if bad else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

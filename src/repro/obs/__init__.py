@@ -33,10 +33,32 @@ events      — ``FlightRecorder`` (``obs/events.py``): always-on
               hits, generation, outcome, trace id); O(1) append cheap
               enough for the serving hot path
 incident    — ``IncidentManager`` (``obs/incident.py``): on a drift
-              alarm or endpoint error, dump a self-contained bundle
-              (flight tail, retained traces, registry snapshot,
-              quality state, store generation) through
-              ``repro.checkpoint``; restores to a readable dict
+              alarm, burn-rate alarm, or endpoint error, dump a
+              self-contained bundle (flight tail, retained traces,
+              registry snapshot, quality state, SLO health, store
+              generation) through ``repro.checkpoint``; restores to a
+              readable dict
+slo         — ``SloEngine`` (``obs/slo.py``): declarative per-endpoint
+              ``SloSpec``s (latency/availability/quality), rolling
+              multi-window error budgets from cumulative-counter
+              snapshots (no stored samples), Google-SRE multi-window
+              multi-burn-rate alerts on the ``DriftMonitor`` callback
+              contract, and the machine-readable ``health()`` verdict
+              (admission-control input)
+probe       — ``CanaryProber`` (``obs/probe.py``): deterministic
+              known-answer canaries drawn from the shadow reservoir,
+              replayed through the real serving endpoints
+              (``probe_search``/``probe_classify``) with telemetry
+              segregated; verdicts feed the SLO quality budgets
+resources   — ``ResourceMonitor`` (``obs/resources.py``): live-bytes
+              gauges per tracked store/model, device memory watermarks,
+              host RSS, and the process-wide jit-recompile counter that
+              turns the never-recompile invariant into a budgeted gauge
+dashboard   — zero-dependency ops view (``obs/dashboard.py``): one
+              ``gather`` snapshot rendered as terminal text or a static
+              self-contained HTML page (SLO budgets + burn sparklines,
+              latency, resources, roofline, quality, flight tail),
+              written atomically for CI artifacts
 
 The flight layer adds retain-on-tail tracing: ``RequestTrace`` gives
 every request a shallow span chain (no device barriers) and
@@ -77,3 +99,10 @@ from repro.obs.quality import (CollisionMonitor, MarginMonitor,  # noqa: F401
 from repro.obs.shadow import (RecallMonitor, ShadowReservoir,  # noqa: F401
                               wilson_interval)
 from repro.obs.drift import Cusum, DriftMonitor, PageHinkley  # noqa: F401
+from repro.obs.slo import (AlertState, BurnPolicy,  # noqa: F401
+                           DEFAULT_POLICIES, SloEngine, SloSpec)
+from repro.obs.probe import CanaryProber, ProbeConfig  # noqa: F401
+from repro.obs.resources import (ResourceMonitor,  # noqa: F401
+                                 install_compile_counter, jit_compiles)
+from repro.obs.dashboard import (gather, render_html,  # noqa: F401
+                                 render_text, write_dashboard)

@@ -44,6 +44,15 @@ def _sanitize(name: str) -> str:
     return name.replace(".", "_").replace("-", "_")
 
 
+def _escape_label(value) -> str:
+    """Escape one label value per the OpenMetrics/Prometheus text
+    exposition spec: backslash, double-quote, and newline must be
+    escaped inside quoted label values (a hostile trace id must not be
+    able to forge extra labels or break the exposition line)."""
+    return (str(value).replace("\\", "\\\\").replace('"', '\\"')
+            .replace("\n", "\\n"))
+
+
 def to_prometheus(registry: MetricsRegistry = None) -> str:
     """Render the registry in Prometheus text exposition format.
 
@@ -57,7 +66,9 @@ def to_prometheus(registry: MetricsRegistry = None) -> str:
     flight-recorder trace pinned via ``Histogram.exemplar``) carry an
     OpenMetrics-style annotation ``# {trace_id="..."} <value>`` — the
     link from a latency bucket back to the concrete trace that landed
-    there.
+    there. Label values are escaped per the OpenMetrics spec
+    (backslash, double-quote, newline), so a hostile trace id cannot
+    forge labels or split the exposition line.
     """
     reg = registry if registry is not None else default_registry()
     lines = []
@@ -80,8 +91,8 @@ def to_prometheus(registry: MetricsRegistry = None) -> str:
             cum += cnt
             le = h.spec.bucket_bounds(i)[1]
             ex = h.exemplars.get(i)
-            tail = (f' # {{trace_id="{ex[1]}"}} {ex[0]:.6g}'
-                    if ex is not None else "")
+            tail = (f' # {{trace_id="{_escape_label(ex[1])}"}} '
+                    f'{ex[0]:.6g}' if ex is not None else "")
             lines.append(f'{n}_bucket{{le="{le:.6g}"}} {cum}{tail}')
         lines.append(f'{n}_bucket{{le="+Inf"}} {h.count}')
         lines.append(f"{n}_sum {h.total}")

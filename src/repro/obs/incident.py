@@ -13,6 +13,9 @@ happened; this module captures *what the system was doing*. An
   summaries);
 * the quality-monitor report (collision χ², shadow recall, margins)
   when monitors are wired;
+* the SLO engine's ``health()`` verdict (error budgets, burn rates,
+  active alerts) when an ``obs.slo.SloEngine`` is wired — every bundle
+  records how degraded the service believed itself to be;
 * the store generation and any caller-supplied context.
 
 Bundles persist through ``repro.checkpoint`` — the JSON document rides
@@ -64,13 +67,14 @@ class IncidentManager:
 
     def __init__(self, directory: str, flight: FlightRecorder = None,
                  sampler=None, registry: MetricsRegistry = None,
-                 quality=None, generation_fn=None, keep: int = 8,
+                 quality=None, slo=None, generation_fn=None, keep: int = 8,
                  tail_n: int = 512):
         self.directory = str(directory)
         self.flight = flight
         self.sampler = sampler
         self.registry = registry
         self.quality = quality
+        self.slo = slo                    # obs.slo.SloEngine (optional)
         self.generation_fn = generation_fn
         self.keep = int(keep)
         self.tail_n = int(tail_n)
@@ -98,6 +102,8 @@ class IncidentManager:
             "registry": reg.snapshot(),
             "quality": (self.quality.report()
                         if self.quality is not None else {}),
+            "slo": (self.slo.health()
+                    if self.slo is not None else {}),
         }
 
     def capture(self, kind: str, reason: str, context: dict = None) -> str:

@@ -1,0 +1,210 @@
+"""Device/host resource accounting: live bytes, watermarks, recompiles.
+
+The serving tier's capacity questions — "does the next shard fit?",
+"is something leaking device memory?", "did the hot path silently start
+recompiling?" — need numbers, not vibes. This module is the accounting
+layer:
+
+* **tracked live bytes** — ``track(name, obj)`` registers anything with
+  an ``nbytes`` attribute/property (``CodeStore``, ``SegmentLogStore``,
+  a ``PackedLinearModel``'s tables) or a zero-arg callable; ``collect``
+  mirrors each into a ``resources.bytes.<name>`` gauge. These are the
+  *modeled* byte counts the stores already maintain, aggregated in one
+  place.
+* **device memory** — total bytes of every live jax array
+  (``jax.live_arrays``) plus the per-device allocator watermarks from
+  ``device.memory_stats()`` where the backend provides them (TPU/GPU;
+  CPU returns none — gauges simply stay absent, never raise).
+* **host RSS** — current resident set from ``/proc/self/status`` (zero
+  dependencies; NaN on platforms without procfs) and the peak RSS from
+  ``resource.getrusage``.
+* **jit recompiles** — a process-wide compile counter fed by a
+  ``jax.monitoring`` duration listener on backend compiles. The
+  ARCHITECTURE "never-recompile" invariant (serving traffic must reuse
+  the warmed executables) becomes a runtime-enforced number:
+  ``mark()`` pins a baseline after warmup, ``compiles_since_mark``
+  must stay 0, and ``SloEngine.attach_resources`` turns any excursion
+  into a budget burn + alert. The listener is installed process-wide
+  exactly once (``install_compile_counter`` is idempotent) and counts
+  into a module global, so monitors on any registry read one truth.
+"""
+from __future__ import annotations
+
+import math
+import os
+
+import jax
+
+from repro.obs.registry import MetricsRegistry, default_registry
+
+__all__ = ["ResourceMonitor", "install_compile_counter", "jit_compiles"]
+
+_COMPILES = 0
+_LISTENER_INSTALLED = False
+
+#: the jax.monitoring duration event emitted once per backend compile
+_COMPILE_EVENT = "/jax/core/compile/backend_compile_duration"
+
+
+def _on_compile_duration(event: str, duration: float, **_kw):
+    global _COMPILES
+    if event == _COMPILE_EVENT:
+        _COMPILES += 1
+
+
+def install_compile_counter() -> bool:
+    """Install the process-wide compile listener (idempotent; returns
+    whether it is installed). Safe on any jax backend — if the
+    monitoring hook is unavailable the counter simply stays at 0."""
+    global _LISTENER_INSTALLED
+    if _LISTENER_INSTALLED:
+        return True
+    try:
+        from jax import monitoring as _monitoring
+        _monitoring.register_event_duration_secs_listener(
+            _on_compile_duration)
+        _LISTENER_INSTALLED = True
+    except Exception:
+        return False
+    return True
+
+
+def jit_compiles() -> int:
+    """Process-wide backend compiles seen since the listener was
+    installed (0 until ``install_compile_counter`` ran)."""
+    return _COMPILES
+
+
+def _host_rss_bytes() -> float:
+    """Current resident set size from procfs; NaN when unavailable."""
+    try:
+        with open("/proc/self/status") as f:
+            for line in f:
+                if line.startswith("VmRSS:"):
+                    return float(line.split()[1]) * 1024.0
+    except OSError:
+        pass
+    return math.nan
+
+
+def _host_peak_rss_bytes() -> float:
+    """Peak RSS via getrusage (ru_maxrss is KiB on linux)."""
+    try:
+        import resource
+        return float(resource.getrusage(
+            resource.RUSAGE_SELF).ru_maxrss) * 1024.0
+    except Exception:
+        return math.nan
+
+
+class ResourceMonitor:
+    """One scope of resource gauges (see module docstring).
+
+    ``collect()`` is the slow-path refresh (dashboard render, SLO tick
+    at resolution, incident capture) — it walks tracked objects, live
+    arrays, and procfs; nothing here belongs on a per-request path.
+    Every gauge lands in the registry under ``resources.*`` and the
+    same values come back as the return dict.
+    """
+
+    def __init__(self, registry: MetricsRegistry = None,
+                 live_arrays: bool = True):
+        self.registry = registry if registry is not None \
+            else default_registry()
+        self.live_arrays = bool(live_arrays)
+        self._tracked: dict = {}
+        self._mark = 0
+        install_compile_counter()
+
+    def track(self, name: str, obj) -> "ResourceMonitor":
+        """Register ``obj`` under ``name``: anything with an ``nbytes``
+        attribute (stores, models) or a zero-arg callable returning
+        bytes; returns self for chaining."""
+        self._tracked[str(name)] = obj
+        return self
+
+    def untrack(self, name: str):
+        """Forget a tracked object (missing name is a no-op)."""
+        self._tracked.pop(str(name), None)
+
+    @staticmethod
+    def _bytes_of(obj) -> float:
+        if callable(obj) and not hasattr(obj, "nbytes"):
+            return float(obj())
+        v = getattr(obj, "nbytes", math.nan)
+        return float(v() if callable(v) else v)
+
+    # -- recompile accounting ------------------------------------------------
+    def jit_compiles(self) -> int:
+        """Process-wide compile count (module-global truth)."""
+        return jit_compiles()
+
+    def mark(self) -> int:
+        """Pin the compile baseline (call after warmup/autotune);
+        returns the baseline count."""
+        self._mark = jit_compiles()
+        return self._mark
+
+    @property
+    def compiles_since_mark(self) -> int:
+        """Compiles since ``mark()`` — the never-recompile invariant
+        says this stays 0 on a warmed serving path."""
+        return jit_compiles() - self._mark
+
+    # -- the one-call refresh ------------------------------------------------
+    def collect(self) -> dict:
+        """Refresh every gauge; returns the resource dict."""
+        reg = self.registry
+        out = {"tracked": {}, "device": {}, "host": {}}
+        total_tracked = 0.0
+        for name, obj in self._tracked.items():
+            try:
+                b = self._bytes_of(obj)
+            except Exception:
+                b = math.nan
+            out["tracked"][name] = b
+            if b == b:
+                total_tracked += b
+                reg.gauge(f"resources.bytes.{name}").set(b)
+        out["tracked_total"] = total_tracked
+        reg.gauge("resources.bytes.tracked_total").set(total_tracked)
+
+        if self.live_arrays:
+            try:
+                live = sum(a.nbytes for a in jax.live_arrays())
+                out["device"]["live_bytes"] = int(live)
+                reg.gauge("resources.device.live_bytes").set(live)
+            except Exception:
+                out["device"]["live_bytes"] = math.nan
+        for d in jax.devices():
+            try:
+                stats = d.memory_stats()
+            except Exception:
+                stats = None
+            if not stats:
+                continue
+            did = f"{d.platform}{d.id}"
+            used = stats.get("bytes_in_use")
+            peak = stats.get("peak_bytes_in_use")
+            if used is not None:
+                out["device"][f"{did}.bytes_in_use"] = int(used)
+                reg.gauge(f"resources.device.{did}.bytes_in_use").set(used)
+            if peak is not None:
+                out["device"][f"{did}.peak_bytes"] = int(peak)
+                reg.gauge(f"resources.device.{did}.peak_bytes").set(peak)
+
+        rss = _host_rss_bytes()
+        peak = _host_peak_rss_bytes()
+        out["host"]["rss_bytes"] = rss
+        out["host"]["peak_rss_bytes"] = peak
+        if rss == rss:
+            reg.gauge("resources.host.rss_bytes").set(rss)
+        if peak == peak:
+            reg.gauge("resources.host.peak_rss_bytes").set(peak)
+
+        out["jit_compiles"] = jit_compiles()
+        out["compiles_since_mark"] = self.compiles_since_mark
+        reg.gauge("resources.jit_compiles").set(out["jit_compiles"])
+        reg.gauge("resources.compiles_since_mark").set(
+            out["compiles_since_mark"])
+        return out

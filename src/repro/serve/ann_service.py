@@ -48,11 +48,28 @@ monitor. Retained requests pin exemplars (their trace id) onto the
 ``serve.flush_s`` histogram buckets, and when an ``IncidentManager`` is
 attached (``incidents`` field, or just a directory string) endpoint
 errors and drift alarms dump full incident bundles.
+
+Closed-loop health: ``slo=True`` (or an injected ``obs.slo.SloEngine``)
+registers default ``SloSpec``s per endpoint — latency against
+``cfg.deadline_s`` over ``serve.flush_s``/``serve.classify_s``,
+availability from the ``serve.*_errors`` counters, and a quality SLO
+fed by shadow recall — and ticks the engine once per flush/classify.
+Burn-rate alarms ride the same wiring as drift alarms (flag the
+in-flight trace, dump an incident bundle carrying the SLO state);
+``service.slo.health()`` is the admission-control verdict.
+``resources=True`` attaches an ``obs.resources.ResourceMonitor``
+(engine store bytes tracked, jit-recompile counter armed at the end of
+``warmup`` via ``mark_steady`` — the never-recompile invariant becomes
+a budgeted SLO). ``probe_search``/``probe_classify`` are the canary
+endpoints ``obs.probe.CanaryProber`` replays known-answer rows through:
+the real serving path (cache included) with telemetry segregated under
+``serve.probe.*`` and the tail sampler and quality samplers suspended.
 """
 from __future__ import annotations
 
 import time
 from collections import OrderedDict
+from contextlib import contextmanager
 from dataclasses import dataclass, field
 from types import MappingProxyType
 
@@ -66,6 +83,10 @@ from repro.obs import (MetricsRegistry, TailSampler,
                        default_flight_recorder, span)
 
 __all__ = ["AnnServiceConfig", "AnnService"]
+
+#: shared no-op sampler for probe traffic — probes must never occupy
+#: the retained-trace budget nor move the slow-tail threshold
+_PROBE_SAMPLER = TailSampler(enabled=False)
 
 
 @dataclass(frozen=True)
@@ -98,6 +119,8 @@ class AnnService:
     flight: object = None         # obs.FlightRecorder (global if None)
     sampler: object = None        # obs.TailSampler (own one if None)
     incidents: object = None      # obs.IncidentManager | directory str
+    slo: object = None            # True | obs.slo.SloEngine
+    resources: object = None      # True | obs.resources.ResourceMonitor
 
     def __post_init__(self):
         self._queue = []          # [(ticket, vector [D])]
@@ -118,12 +141,15 @@ class AnnService:
         self._c_inval = reg.counter("serve.cache_invalidations")
         self._c_warm = reg.counter("serve.warmup_compiles")
         self._c_classified = reg.counter("serve.classified_rows")
+        self._c_flush_err = reg.counter("serve.flush_errors")
+        self._c_classify_err = reg.counter("serve.classify_errors")
         self._h_flush = reg.histogram("serve.flush_s")
         self._h_batch = reg.histogram("serve.search_batch_s")
         self._h_age = reg.histogram("serve.ticket_age_s")
         self._h_classify = reg.histogram("serve.classify_s")
         self._g_pending = reg.gauge("serve.pending")
         self._g_waste = reg.gauge("serve.padding_waste")
+        self._probing = False
         if self.flight is None:
             self.flight = default_flight_recorder()
         if self.sampler is None:
@@ -152,6 +178,40 @@ class AnnService:
             if self.incidents is not None and \
                     getattr(self.incidents, "quality", None) is None:
                 self.incidents.quality = self.quality
+        if self.resources is True:
+            from repro.obs.resources import ResourceMonitor
+            self.resources = ResourceMonitor(registry=reg)
+        if self.resources is not None:
+            store = getattr(self.engine, "store", None)
+            if store is not None and hasattr(store, "nbytes"):
+                self.resources.track("engine.store", store)
+        if self.slo is True:
+            from repro.obs.slo import SloEngine
+            self.slo = SloEngine(registry=reg)
+        if self.slo is not None:
+            from repro.obs.slo import SloSpec
+            # default endpoint objectives: latency against the flush
+            # deadline, availability from the error counters, quality
+            # fed by shadow recall (floor 0.8) and probe verdicts
+            if "search" not in self.slo.specs:
+                self.slo.add(SloSpec(
+                    "search", latency_hist="serve.flush_s",
+                    latency_target_s=self.cfg.deadline_s,
+                    error_counter="serve.flush_errors",
+                    quality_min=0.8))
+            if "classify" not in self.slo.specs:
+                self.slo.add(SloSpec(
+                    "classify", latency_hist="serve.classify_s",
+                    latency_target_s=self.cfg.deadline_s,
+                    error_counter="serve.classify_errors"))
+            if self.resources is not None:
+                self.slo.attach_resources(self.resources)
+            # burn-rate alarms ride the drift wiring: flag the
+            # in-flight trace for retention + dump an incident bundle
+            self.slo.subscribe(self._on_drift)
+            if self.incidents is not None and \
+                    getattr(self.incidents, "slo", None) is None:
+                self.incidents.slo = self.slo
 
     def _on_drift(self, series: str, value: float, detector):
         self._drift_flags.append(series)
@@ -310,6 +370,7 @@ class AnnService:
                         margs.append(np.asarray(sp.sync(m))[:, :n])
                     self._c_classified.inc(int(x.shape[0]))
                 except Exception as e:
+                    self._c_classify_err.inc()
                     if self.incidents is not None:
                         self.incidents.capture(
                             "error",
@@ -327,6 +388,8 @@ class AnnService:
         qm = self.quality
         if qm is not None and qm.sample():
             qm.observe_margins(margins)     # calibration drift series
+        if self.slo is not None:
+            self.slo.tick()
         return labels, margins
 
     # -- batch execution -----------------------------------------------------
@@ -374,6 +437,7 @@ class AnnService:
                 try:
                     out = self._flush(sp, rq)
                 except Exception as e:
+                    self._c_flush_err.inc()
                     if self.incidents is not None:
                         self.incidents.capture(
                             "error", f"flush: {type(e).__name__}: {e}")
@@ -387,7 +451,113 @@ class AnnService:
         if rq.retained:
             self._h_flush.exemplar(dur, rq.trace_id)
         self._g_pending.set(len(self._queue))
+        if self.slo is not None:
+            self.slo.tick()
         return out
+
+    # -- canary-probe endpoints ----------------------------------------------
+    @contextmanager
+    def _probe_context(self):
+        """Run one probe through the real endpoint code with its
+        telemetry segregated: every per-request metric the endpoints
+        touch is swapped for a ``probe.*`` twin, the tail sampler is
+        replaced by a disabled one (probes never occupy the retained-
+        trace budget or shift the slow-tail threshold), and quality
+        sampling is suspended at both the service and the engine's
+        collision hook (probes must not advance the seeded
+        shadow/margin sampling streams or skew collision statistics —
+        a replayed user workload still samples identically). The
+        result cache and engine path are deliberately untouched: a
+        probe exercises exactly what user traffic exercises, stale
+        cache included."""
+        reg = self.registry
+        saved = (self._h_flush, self._h_batch, self._h_age,
+                 self._h_classify, self._c_queries, self._c_hits,
+                 self._c_misses, self._c_batches, self._c_padded,
+                 self._c_classified, self._c_flush_err,
+                 self._c_classify_err, self._g_waste, self.sampler,
+                 self.quality)
+        eng_quality = getattr(self.engine, "quality", None)
+        self._h_flush = reg.histogram("serve.probe.flush_s")
+        self._h_batch = reg.histogram("serve.probe.search_batch_s")
+        self._h_age = reg.histogram("serve.probe.ticket_age_s")
+        self._h_classify = reg.histogram("serve.probe.classify_s")
+        self._c_queries = reg.counter("serve.probe.queries")
+        self._c_hits = reg.counter("serve.probe.cache_hits")
+        self._c_misses = reg.counter("serve.probe.cache_misses")
+        self._c_batches = reg.counter("serve.probe.batches")
+        self._c_padded = reg.counter("serve.probe.padded_rows")
+        self._c_classified = reg.counter("serve.probe.classified_rows")
+        self._c_flush_err = reg.counter("serve.probe.flush_errors")
+        self._c_classify_err = reg.counter("serve.probe.classify_errors")
+        self._g_waste = reg.gauge("serve.probe.padding_waste")
+        self.sampler = _PROBE_SAMPLER
+        self.quality = None
+        if eng_quality is not None:      # engine-level collision hook
+            self.engine.quality = None
+        self._probing = True
+        try:
+            yield
+        finally:
+            (self._h_flush, self._h_batch, self._h_age,
+             self._h_classify, self._c_queries, self._c_hits,
+             self._c_misses, self._c_batches, self._c_padded,
+             self._c_classified, self._c_flush_err,
+             self._c_classify_err, self._g_waste, self.sampler,
+             self.quality) = saved
+            if eng_quality is not None:
+                self.engine.quality = eng_quality
+            self._probing = False
+
+    def probe_search(self, x):
+        """Known-answer canary search of ONE vector [D]; returns
+        (ids, rho). The real submit→flush path runs — bucket padding,
+        result cache, engine search — under ``_probe_context`` so the
+        probe is invisible to user-facing metrics, the tail sampler,
+        and the quality samplers (``obs.probe`` holds the prober that
+        drives this and judges the answer)."""
+        x = jnp.asarray(x)
+        if x.ndim != 1:
+            raise ValueError(f"probe_search takes one vector, "
+                             f"got {x.shape}")
+        saved_queue, self._queue = self._queue, []
+        t0 = time.perf_counter()
+        outcome = "error"
+        t = None
+        try:
+            with self._probe_context():
+                t = self.submit(x)
+                out = self.flush()
+            outcome = "ok"
+            return out[t]
+        finally:
+            if t is not None:
+                self._results.pop(t, None)
+                self._submit_ts.pop(t, None)
+            self._queue = saved_queue
+            self._g_pending.set(len(self._queue))
+            self.flight.record("serve.probe", t0, time.perf_counter(),
+                               batch=1, generation=self._cache_gen or 0,
+                               outcome=outcome)
+
+    def probe_classify(self, x):
+        """Canary classify of a batch [m, D] through the real
+        ``classify`` path with probe-segregated telemetry; returns
+        (labels, margins)."""
+        t0 = time.perf_counter()
+        outcome = "ok"
+        try:
+            with self._probe_context():
+                return self.classify(x)
+        except Exception:
+            outcome = "error"
+            raise
+        finally:
+            self.flight.record("serve.probe_classify", t0,
+                               time.perf_counter(),
+                               batch=int(np.asarray(x).shape[0]),
+                               generation=self._cache_gen or 0,
+                               outcome=outcome)
 
     def _flush(self, sp, rq=None):
         out = {}
@@ -413,8 +583,12 @@ class AnnService:
                 # exact-cosine ground truth vs the coded ranking over
                 # the reservoir (obs.shadow)
                 qi = int(qm.rng.integers(n))
-                qm.shadow_check(batch[qi][1], self.engine.encode_queries,
-                                q_codes=q_codes[qi])
+                r = qm.shadow_check(batch[qi][1],
+                                    self.engine.encode_queries,
+                                    q_codes=q_codes[qi])
+                if r is not None and self.slo is not None:
+                    # shadow recall is the quality SLO's ground truth
+                    self.slo.observe_quality("search", r)
             res = [None] * n
             miss = list(range(n))
             keys = None
@@ -527,4 +701,10 @@ class AnnService:
                     rerank_m=cfg.rerank_m, fused=cfg.fused,
                     table_dtype=cfg.table_dtype))
                 self._c_warm.inc()
+        # warmup compiles are free; anything after this burns the
+        # never-recompile budget (obs.resources / obs.slo)
+        if self.resources is not None:
+            self.resources.mark()
+        if self.slo is not None:
+            self.slo.mark_steady()
         return self

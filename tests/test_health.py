@@ -1,0 +1,498 @@
+"""Closed-loop health layer: SLO error budgets and burn-rate alerting
+under injected-fault drills (latency step, recall degradation, forced
+recompile — each must alarm within the fast window with zero false
+alarms on stationary traffic), known-answer canary probing through the
+real service endpoints with probe-exclusion invariants, resource
+accounting, dashboard rendering, OpenMetrics label escaping, and the
+histogram edge cases the budget math leans on."""
+import math
+import os
+import sys
+import threading
+
+import numpy as np
+import pytest
+import jax.numpy as jnp
+
+from repro.ann import BandSpec
+from repro.core.sketch import CodedRandomProjection, SketchConfig
+from repro.index import MutableAnnEngine
+from repro.obs import (BurnPolicy, CanaryProber, FlightRecorder,
+                       Histogram, HistogramSpec, MetricsRegistry,
+                       ProbeConfig, ResourceMonitor, SloEngine, SloSpec,
+                       TailSampler, gather, render_html, render_text,
+                       to_prometheus, write_dashboard)
+from repro.obs.quality import QualityConfig
+
+_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+sys.path.insert(0, _ROOT)                      # benchmarks/
+sys.path.insert(0, os.path.join(_ROOT, "scripts"))   # check_perf
+
+D, K = 16, 16
+BAND = BandSpec(n_tables=4, band_width=4)
+
+
+def _crp():
+    return CodedRandomProjection(SketchConfig(k=K, scheme="2bit", w=0.75),
+                                 D)
+
+
+class _Clock:
+    """Injectable fake clock driving deterministic drills."""
+
+    def __init__(self):
+        self.t = 0.0
+
+    def __call__(self):
+        return self.t
+
+    def step(self, dt=1.0):
+        self.t += dt
+        return self.t
+
+
+class _FakeResources:
+    """ResourceMonitor stand-in exposing only the compile counter."""
+
+    def __init__(self):
+        self.compiles = 0
+
+    def jit_compiles(self):
+        return self.compiles
+
+
+def _engine_with_spec(reg, clock, **spec_kw):
+    eng = SloEngine(registry=reg, clock=clock, resolution=1.0)
+    kw = dict(latency_hist="serve.flush_s", latency_target_s=0.050,
+              error_counter="serve.flush_errors", quality_min=0.8)
+    kw.update(spec_kw)
+    eng.add(SloSpec("search", **kw))
+    return eng
+
+
+# -- drill 1: forced 2x latency step ------------------------------------------
+
+def test_latency_step_trips_fast_burn_alert_and_health_degrades():
+    reg = MetricsRegistry()
+    clock = _Clock()
+    slo = _engine_with_spec(reg, clock)
+    fired = []
+    slo.subscribe(lambda series, value, det: fired.append((series, det)))
+    h = reg.histogram("serve.flush_s")
+    for _ in range(90):                   # stationary: 40 ms < deadline
+        for _ in range(50):
+            h.observe(0.040)
+        clock.step()
+        slo.tick()
+    assert fired == [] and slo.health()["status"] == "ok"
+    t_step = clock.t
+    for _ in range(60):                   # 2x step: 80 ms, all late
+        for _ in range(50):
+            h.observe(0.080)
+        clock.step()
+        slo.tick()
+        if fired:
+            break
+    assert fired, "latency step never tripped the burn alert"
+    series, det = fired[0]
+    assert series == "slo.search.latency"
+    # DriftMonitor detector contract: side/alarms/stat
+    assert det.side == "up" and det.alarms == 1 and det.stat >= 1.0
+    assert clock.t - t_step <= 60.0, "alert fired outside the fast window"
+    health = slo.health()
+    assert health["status"] == "degraded"
+    assert "slo.search.latency" in health["alerts"]
+    assert 0.0 < health["shed_fraction"] <= 1.0
+    # budgets view mirrors the ledger state
+    b = slo.budgets()["search.latency"]
+    # the slow-ticket policy (6x burn) legitimately fires first
+    assert b["alerting"] and b["burn_fast"] >= 6.0 and b["spark"]
+    # recovery: back on time -> the alert clears once the short window
+    # drains (multi-window: a fixed regression stops paging)
+    for _ in range(120):
+        for _ in range(50):
+            h.observe(0.040)
+        clock.step()
+        slo.tick()
+    assert slo.health()["status"] == "ok"
+    assert len(fired) == 1, "recovery must not re-fire the callback"
+
+
+def test_stationary_jittered_run_never_alarms():
+    reg = MetricsRegistry()
+    clock = _Clock()
+    slo = _engine_with_spec(reg, clock)
+    fired = []
+    slo.subscribe(lambda *a: fired.append(a))
+    h = reg.histogram("serve.flush_s")
+    rng = np.random.default_rng(7)
+    for _ in range(400):
+        # seeded lognormal jitter around 25 ms; rare excursions stay
+        # far under the 1% lateness budget
+        for v in rng.lognormal(math.log(0.025), 0.25, size=40):
+            h.observe(float(v))
+        if rng.random() < 0.2:
+            slo.observe_quality("search", float(rng.uniform(0.85, 1.0)))
+        clock.step()
+        slo.tick()
+    assert fired == []
+    assert slo.health()["status"] == "ok"
+    assert slo.health()["shed_fraction"] == 0.0
+
+
+# -- drill 2: forced recall degradation ---------------------------------------
+
+def test_recall_drop_trips_quality_alert():
+    reg = MetricsRegistry()
+    clock = _Clock()
+    slo = _engine_with_spec(reg, clock)
+    fired = []
+    slo.subscribe(lambda series, value, det: fired.append(series))
+    for _ in range(90):                   # healthy shadow recall
+        for _ in range(3):
+            slo.observe_quality("search", 1.0)
+        clock.step()
+        slo.tick()
+    assert fired == []
+    t_step = clock.t
+    for _ in range(60):                   # corrupted ranking: recall 0
+        for _ in range(3):
+            slo.observe_quality("search", 0.1)
+        clock.step()
+        slo.tick()
+        if fired:
+            break
+    assert fired == ["slo.search.quality"]
+    assert clock.t - t_step <= 60.0, "alert fired outside the fast window"
+    assert "slo.search.quality" in slo.health()["alerts"]
+
+
+# -- drill 3: forced recompile on the hot path --------------------------------
+
+def test_recompile_after_steady_mark_trips_runtime_alert():
+    reg = MetricsRegistry()
+    clock = _Clock()
+    slo = SloEngine(registry=reg, clock=clock, resolution=1.0)
+    res = _FakeResources()
+    slo.attach_resources(res)
+    fired = []
+    slo.subscribe(lambda series, value, det: fired.append(series))
+    res.compiles = 17                     # warmup/autotune compiles...
+    slo.mark_steady()                     # ...are free after the mark
+    for _ in range(90):
+        clock.step()
+        slo.tick()
+    assert fired == [] and slo.health()["status"] == "ok"
+    t_step = clock.t
+    for _ in range(60):                   # hot path starts recompiling
+        res.compiles += 1
+        clock.step()
+        slo.tick()
+        if fired:
+            break
+    assert fired == ["slo.runtime.recompile"]
+    assert clock.t - t_step <= 60.0, "alert fired outside the fast window"
+    assert slo.health()["status"] == "degraded"
+
+
+def test_quality_obs_without_floor_is_noop_and_bad_probe_burns():
+    slo = SloEngine(registry=MetricsRegistry(), clock=_Clock())
+    slo.add(SloSpec("classify", latency_hist="serve.classify_s"))
+    slo.observe_quality("classify", 0.1)  # spec has NaN floor -> no-op
+    assert "classify.quality" not in slo.ledgers
+    slo.observe_probe("classify", False)  # probe verdicts always land
+    led = slo.ledgers["classify.quality"]
+    assert (led.total, led.bad) == (1, 1)
+
+
+def test_ledger_windows_use_snapshots_not_samples():
+    clock = _Clock()
+    slo = SloEngine(registry=MetricsRegistry(), clock=clock,
+                    resolution=1.0)
+    led = slo.ledger("x", 0.99)
+    for i in range(5000):
+        led.push(i % 10 != 0)             # 10% bad forever
+        if i % 10 == 9:
+            clock.step()
+            slo.tick(force=True)
+    # ring stays bounded by the longest policy window / resolution
+    assert len(led.ring) <= 600 + 2
+    frac, n = led.window_rate(clock.t, 60.0)
+    assert n > 0 and abs(frac - 0.1) < 0.02
+
+
+# -- end-to-end drill through the service -------------------------------------
+
+def _service(tmp_path, cache_size=16, **kw):
+    eng = MutableAnnEngine(_crp(), band_spec=BAND, tail_rows=64)
+    from repro.serve import AnnService, AnnServiceConfig
+    reg = MetricsRegistry()
+    defaults = dict(
+        registry=reg, flight=FlightRecorder(capacity=256),
+        sampler=TailSampler(min_count=2, quantile=0.5, registry=reg),
+        quality=QualityConfig(sample_rate=0.5, reservoir_rows=64),
+        incidents=str(tmp_path / "incidents"),
+        slo=True, resources=True)
+    defaults.update(kw)
+    svc = AnnService(eng, AnnServiceConfig(top_k=5, buckets=(1, 4),
+                                           cache_size=cache_size,
+                                           deadline_s=30.0),
+                     **defaults)
+    rng = np.random.default_rng(3)
+    X = np.asarray(rng.normal(size=(48, D)), np.float32)
+    svc.add(jnp.asarray(X))
+    return svc, rng
+
+
+def test_service_corrupted_ranking_probe_alert_incident_bundle(tmp_path):
+    clock = _Clock()
+    from repro.obs.slo import SloEngine as _SE
+    reg = MetricsRegistry()
+    slo = _SE(registry=reg, clock=clock, resolution=1.0)
+    # cache_size=0: the result cache would otherwise serve pre-fault
+    # answers for repeated canaries and mask the corruption
+    svc, rng = _service(tmp_path, cache_size=0, slo=slo, registry=reg,
+                        quality=None)
+    resv_rows = np.asarray(rng.normal(size=(48, D)), np.float32)
+    from repro.obs import ShadowReservoir
+    resv = ShadowReservoir(cap=64)
+    ids = svc.add(jnp.asarray(resv_rows))
+    resv.offer(np.asarray(ids), resv_rows)
+    prober = CanaryProber(svc, slo=svc.slo, reservoir=resv,
+                          cfg=ProbeConfig(n_probes=4, classify=False,
+                                          latency_budget_s=math.inf))
+    assert svc.incidents.slo is svc.slo
+    # healthy: canaries retrieve themselves, no alerts
+    for _ in range(8):
+        rep = prober.run_once()
+        assert rep["ok"] and rep["recall"] == 1.0
+        clock.step()
+    assert svc.slo.health()["status"] == "ok"
+    captured_before = svc.incidents.captured
+    # corrupt the ranking: every search returns wrong ids (the effect
+    # of a corrupted rank table) — per-layer monitors can't see this,
+    # the known-answer probe must
+    real = svc.engine.search_codes
+    svc.engine.search_codes = lambda q, cfg: (
+        jnp.full((q.shape[0], 5), 99999, jnp.int32),
+        jnp.zeros((q.shape[0], 5), jnp.float32))
+    try:
+        tripped = False
+        for _ in range(40):
+            rep = prober.run_once()
+            assert not rep["ok"] and rep["recall"] == 0.0
+            clock.step()
+            if svc.slo.health()["status"] == "degraded":
+                tripped = True
+                break
+        assert tripped, "probe failures never tripped the quality alert"
+    finally:
+        svc.engine.search_codes = real
+    health = svc.slo.health()
+    assert "slo.search.quality" in health["alerts"]
+    # the alarm produced an incident bundle carrying the SLO state
+    assert svc.incidents.captured > captured_before
+    bundle = svc.incidents.load()
+    assert bundle["kind"] == "drift"
+    assert bundle["context"]["series"] == "slo.search.quality"
+    assert bundle["slo"]["status"] == "degraded"
+    assert "slo.search.quality" in bundle["slo"]["alerts"]
+
+
+def test_probe_traffic_excluded_from_user_metrics_and_sampler(tmp_path):
+    svc, rng = _service(tmp_path)
+    reg = svc.registry
+    for _ in range(4):
+        svc.submit(jnp.asarray(rng.normal(size=(D,)), np.float32))
+        svc.flush()
+    user_flush = reg.histograms["serve.flush_s"].count
+    user_q = reg.counters["serve.queries"].value
+    retained = dict(svc.sampler.retained)
+    qm_state = svc.quality.report()
+    prober = CanaryProber(svc, slo=svc.slo,
+                          cfg=ProbeConfig(n_probes=5, classify=False,
+                                          latency_budget_s=math.inf))
+    rep = prober.run_once()
+    assert rep["probes"] == 5 and rep["recall"] == 1.0
+    # user-facing series untouched; probe twins carry the traffic
+    assert reg.histograms["serve.flush_s"].count == user_flush
+    assert reg.counters["serve.queries"].value == user_q
+    assert reg.histograms["serve.probe.flush_s"].count == 5
+    assert reg.counters["serve.probe.queries"].value == 5
+    # tail sampler never saw the probes; quality sampling streams
+    # unperturbed (seeded replay invariant)
+    assert dict(svc.sampler.retained) == retained
+    assert svc.quality.report() == qm_state
+    # probe context restores user wiring
+    assert svc.quality is not None and not svc._probing
+    svc.submit(jnp.asarray(rng.normal(size=(D,)), np.float32))
+    svc.flush()
+    assert reg.histograms["serve.flush_s"].count == user_flush + 1
+
+
+def test_probe_uses_result_cache_and_detects_stale_reservoir(tmp_path):
+    svc, rng = _service(tmp_path)
+    prober = CanaryProber(svc, slo=svc.slo,
+                          cfg=ProbeConfig(n_probes=4, seed=5,
+                                          classify=False,
+                                          latency_budget_s=math.inf))
+    assert prober.run_once()["ok"]
+    # deleting the probed rows makes the reservoir stale ONLY if it is
+    # not wired to store events — the service reservoir is, so canaries
+    # keep passing across churn (tombstoned rows leave the reservoir)
+    ids = svc.quality.reservoir.ids()
+    svc.delete(ids[: len(ids) // 2])
+    rep = prober.run_once()
+    assert rep["ok"], "reservoir failed to track deletions"
+
+
+def test_resource_monitor_tracks_bytes_and_compiles():
+    reg = MetricsRegistry()
+    rm = ResourceMonitor(registry=reg)
+    rm.track("model", type("T", (), {"nbytes": 4096})())
+    rm.track("fn", lambda: 1024.0)
+    out = rm.collect()
+    assert out["tracked"]["model"] == 4096.0
+    assert out["tracked"]["fn"] == 1024.0
+    assert out["tracked_total"] == 5120.0
+    assert reg.gauges["resources.bytes.tracked_total"].value == 5120.0
+    assert out["jit_compiles"] >= 0
+    assert np.isfinite(out["host"]["rss_bytes"])
+    rm.untrack("fn")
+    assert rm.collect()["tracked_total"] == 4096.0
+    base = rm.mark()
+    assert rm.compiles_since_mark == 0 and base == rm.jit_compiles()
+
+
+def test_service_resources_track_engine_store(tmp_path):
+    svc, _ = _service(tmp_path)
+    out = svc.resources.collect()
+    assert out["tracked"]["engine.store"] > 0
+    # warmup arms the never-recompile ledger via mark_steady
+    svc.warmup(D)
+    assert svc.slo._compile_mark is not None
+
+
+# -- dashboard ----------------------------------------------------------------
+
+def test_dashboard_renders_and_writes_atomically(tmp_path):
+    svc, rng = _service(tmp_path)
+    for _ in range(3):
+        svc.submit(jnp.asarray(rng.normal(size=(D,)), np.float32))
+        svc.flush()
+    snap = gather(registry=svc.registry, slo=svc.slo, flight=svc.flight,
+                  quality=svc.quality, resources=svc.resources)
+    txt = render_text(snap)
+    assert "== health: OK" in txt and "serve.flush_s" in txt
+    page = render_html(snap)
+    assert page.startswith("<!doctype html>")
+    assert "SLO budgets" in page and "flight tail" in page
+    assert "<script" not in page          # static artifact: no scripts
+    path = tmp_path / "dash.html"
+    out = write_dashboard(str(path), snap)
+    assert out == str(path) and path.read_text() == page
+    # atomic: no temp droppings next to the artifact
+    assert [p.name for p in tmp_path.glob("*.tmp")] == []
+
+
+def test_dashboard_gather_sections_optional():
+    reg = MetricsRegistry()
+    reg.histogram("h").observe(0.01)
+    snap = gather(registry=reg)
+    assert "health" not in snap and "resources" not in snap
+    assert render_text(snap)              # renders without SLO wiring
+    assert "<html>" in render_html(snap)
+
+
+# -- OpenMetrics escaping (satellite) -----------------------------------------
+
+def test_prometheus_exemplar_escapes_hostile_trace_id():
+    reg = MetricsRegistry()
+    h = reg.histogram("serve.flush_s")
+    h.observe(0.01)
+    hostile = 'id"} 1\nfake_metric 99 # {x="\\'
+    h.exemplar(0.01, hostile)
+    text = to_prometheus(reg)
+    # the injection never becomes its own exposition line
+    assert not any(ln.startswith("fake_metric")
+                   for ln in text.splitlines())
+    line = next(ln for ln in text.splitlines() if "trace_id" in ln)
+    # backslash, quote, newline all escaped per the OpenMetrics spec
+    assert '\\"' in line and "\\n" in line and "\\\\" in line
+    # the line stays a single well-formed sample ending in its value
+    assert line.rstrip().endswith(tuple("0123456789"))
+
+
+# -- histogram edge cases the budget math leans on (satellite) ----------------
+
+def test_histogram_percentile_empty_is_nan():
+    h = Histogram("h")
+    assert math.isnan(h.percentile(0.5))
+    assert h.percentile_bounds(0.99) == (pytest.approx(math.nan, nan_ok=True),) * 2 \
+        or all(math.isnan(v) for v in h.percentile_bounds(0.99))
+    assert math.isnan(h.mean)
+    s = h.summary()
+    assert s["count"] == 0 and math.isnan(s["p99"])
+
+
+def test_histogram_all_mass_in_overflow_bucket():
+    spec = HistogramSpec(lo=1e-3, hi=1.0)
+    h = Histogram("h", spec)
+    for _ in range(7):
+        h.observe(5e4)                    # far past hi: clamps, never grows
+    assert h.count == 7
+    assert h.counts[-1] == 7 and sum(h.counts[:-1]) == 0
+    p = h.percentile(0.5)
+    assert math.isfinite(p) and p >= spec.hi
+    lo_b, hi_b = h.percentile_bounds(0.99)
+    assert lo_b < hi_b and math.isfinite(hi_b)
+    # lateness derivation stays sane: everything above any target bucket
+    i = spec.bucket_index(0.05)
+    assert sum(h.counts[i + 1:]) == 7
+
+
+def test_histogram_snapshot_races_concurrent_observe():
+    reg = MetricsRegistry()
+    h = reg.histogram("h")
+    n, stop = 50_000, threading.Event()
+
+    def writer():
+        for i in range(n):
+            h.observe(1e-5 * (1 + i % 1000))
+        stop.set()
+
+    t = threading.Thread(target=writer)
+    t.start()
+    snaps = 0
+    while not stop.is_set():
+        s = h.summary()                   # must never raise mid-write
+        assert 0 <= s["count"] <= n
+        reg.snapshot()
+        snaps += 1
+    t.join()
+    assert snaps > 0
+    assert h.count == n                   # nothing lost to the race
+    assert h.summary()["count"] == n
+
+
+# -- check_perf --explain (satellite) -----------------------------------------
+
+def test_check_perf_explain_reports_points_until_armed(tmp_path):
+    import io
+    import json as _json
+    import check_perf
+    hist = tmp_path / "hist.jsonl"
+    rec = {"ts": "t", "git": "g", "module": "obs_bench", "quick": True,
+           "metrics": {"obs_serve_flight": 100.0}}
+    hist.write_text("\n".join([_json.dumps(rec)] * 2) + "\n")
+    buf = io.StringIO()
+    assert check_perf.explain(str(hist), min_points=5, out=buf) == 0
+    assert "3 more point(s) until armed" in buf.getvalue()
+    hist.write_text("\n".join([_json.dumps(rec)] * 5) + "\n")
+    buf = io.StringIO()
+    assert check_perf.explain(str(hist), min_points=5, out=buf) == 0
+    assert "ARMED" in buf.getvalue()
+    # no history at all: still exits clean with the arming hint
+    buf = io.StringIO()
+    assert check_perf.explain(str(tmp_path / "none.jsonl"), out=buf) == 0
+    assert "needs 5 points to arm" in buf.getvalue()
